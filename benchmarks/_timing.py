@@ -1,0 +1,38 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 7) -> float:
+    """Median wall time in microseconds (fn must return jax arrays)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def zipf_queries(keys: np.ndarray, n: int, a: float = 1.3,
+                 seed: int = 0) -> np.ndarray:
+    """Zipf-distributed references to existing keys (thesis §5.2.1: 'more
+    realistic key access patterns ... modeled after a Zipf distribution')."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.zipf(a, size=n) - 1
+    ranks = np.minimum(ranks, keys.size - 1)
+    return keys[ranks]
+
+
+def uniform_queries(lo: int, hi: int, n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(lo, hi, n).astype(np.int32)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,57 @@
+"""Fig 5.1 — effect of NitroGen index compilation on binary search and
+CSS-tree search, uniform and Zipf key-access patterns, across data sizes.
+
+Thesis result being reproduced: NitroGen gives up to +33% on binary search
+and +6-10% on CSS search; gains shrink as data outgrows the compiled top.
+CPU-backend caveat: absolute us are CPU numbers; the comparison across
+structures (same backend, same batch) is the reproduced quantity.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from ._timing import emit, time_fn, uniform_queries, zipf_queries
+
+SIZES_KEYS = [16_384, 262_144, 2_097_152]       # 64 KB .. 8 MB of int32 keys
+N_QUERIES = 4_096
+
+VARIANTS = [
+    ("binary", IndexConfig(kind="binary", linear_cutoff=8)),
+    ("css", IndexConfig(kind="css", node_width=16)),
+    ("ng-binary", IndexConfig(kind="nitrogen", levels=3, compiled_node_width=3,
+                              bottom="binary")),
+    ("ng-css", IndexConfig(kind="nitrogen", levels=3, compiled_node_width=3,
+                           bottom="css", node_width=16)),
+]
+
+
+def run():
+    rng = np.random.default_rng(7)
+    for n in SIZES_KEYS:
+        keys = np.unique(rng.integers(0, 2**31 - 2, int(n * 1.1)).astype(np.int32))[:n]
+        base_us = {}
+        for dist in ("uniform", "zipf"):
+            if dist == "uniform":
+                qs = uniform_queries(0, 2**31 - 2, N_QUERIES)
+            else:
+                qs = zipf_queries(keys, N_QUERIES)
+            qs = jnp.asarray(qs)
+            for name, cfg in VARIANTS:
+                idx = build_index(keys, config=cfg)
+                fn = jax.jit(idx.search)
+                us = time_fn(fn, qs)
+                base_us[(dist, name)] = us
+                if name == "ng-binary":
+                    derived = f"speedup_vs_binary={base_us[(dist, 'binary')]/us:.3f}"
+                elif name == "ng-css":
+                    derived = f"speedup_vs_css={base_us[(dist, 'css')]/us:.3f}"
+                else:
+                    derived = f"ns_per_query={us*1e3/N_QUERIES:.1f}"
+                emit(f"fig5.1/{dist}/n={n}/{name}", us, derived)
+
+
+if __name__ == "__main__":
+    run()

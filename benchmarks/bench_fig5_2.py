@@ -1,0 +1,48 @@
+"""Fig 5.2 — effect of keys-per-node on CSS-tree performance, plain vs
+index-compiled.
+
+Thesis result: plain CSS peaks at 32 keys/node (two cache lines), NitroGen-
+CSS at 16 — compiled keys are more expensive per key, so the optimum
+shifts smaller. Our TPU-form analogue: compiled select-network ops grow as
+(w+1)^levels, so the throughput optimum for the compiled top sits at a
+smaller node width than the data-resident tree's optimum.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from ._timing import emit, time_fn, uniform_queries
+
+N_KEYS = 262_144
+N_QUERIES = 4_096
+
+
+def run():
+    rng = np.random.default_rng(11)
+    keys = np.unique(rng.integers(0, 2**31 - 2, int(N_KEYS * 1.1)
+                                  ).astype(np.int32))[:N_KEYS]
+    qs = jnp.asarray(uniform_queries(0, 2**31 - 2, N_QUERIES, seed=3))
+    best = {}
+    for w in (4, 8, 16, 32, 64, 128):
+        idx = build_index(keys, config=IndexConfig(kind="css", node_width=w))
+        us = time_fn(jax.jit(idx.search), qs)
+        best.setdefault("css", []).append((us, w))
+        emit(f"fig5.2/css/w={w}", us, f"depth={idx.impl.depth}")
+    for w in (1, 2, 3, 7, 15):
+        idx = build_index(keys, config=IndexConfig(
+            kind="nitrogen", levels=2, compiled_node_width=w, bottom="css",
+            node_width=16))
+        us = time_fn(jax.jit(idx.search), qs)
+        best.setdefault("ng", []).append((us, w))
+        emit(f"fig5.2/ng-css/w={w}", us,
+             f"compiled_ops~{(w+1)**2}")
+    for kind, vals in best.items():
+        us, w = min(vals)
+        emit(f"fig5.2/optimum/{kind}", us, f"best_w={w}")
+
+
+if __name__ == "__main__":
+    run()

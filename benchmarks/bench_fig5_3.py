@@ -1,0 +1,58 @@
+"""Fig 5.3 — FAST feature ablation: scalar baseline, +vector (SIMD) nodes,
++hierarchical page blocking; plus the two-phase sorted-bucket variant (our
+beyond-paper TPU adaptation).
+
+The thesis reports cycles/query as features accumulate; we report ns/query
+for the jit-compiled structures on this backend, same workload each rung.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index, fast_tree
+from repro.kernels import ops as kops
+from ._timing import emit, time_fn, uniform_queries
+
+N_KEYS = 1_048_576
+N_QUERIES = 4_096
+
+
+def run():
+    rng = np.random.default_rng(13)
+    keys = np.unique(rng.integers(0, 2**31 - 2, int(N_KEYS * 1.1)
+                                  ).astype(np.int32))[:N_KEYS]
+    qs_np = uniform_queries(0, 2**31 - 2, N_QUERIES, seed=5)
+    qs = jnp.asarray(qs_np)
+
+    ladder = [
+        ("scalar-binary", IndexConfig(kind="binary")),            # rung 0
+        ("+vector-nodes", IndexConfig(kind="kary", node_width=127)),  # SIMD rung
+        ("+page-blocking", IndexConfig(kind="fast", node_width=127,
+                                       page_depth=2)),            # FAST rung
+    ]
+    base = None
+    for name, cfg in ladder:
+        idx = build_index(keys, config=cfg)
+        us = time_fn(jax.jit(idx.search), qs)
+        base = base or us
+        emit(f"fig5.3/{name}", us,
+             f"ns_per_query={us*1e3/N_QUERIES:.1f};speedup={base/us:.2f}")
+
+    # beyond-paper: sorted-bucket two-phase traversal (DESIGN.md §2.1).
+    # The page kernel runs interpret-mode here (CPU container), so wall time
+    # is meaningless — report the DMA-plan structure instead: pages touched
+    # and grid steps per batch (what the scalar-prefetch grid would stream).
+    from repro.core.fast_tree import leaf_page_of
+    from repro.kernels.page_search import plan_buckets
+    fidx = fast_tree.build(keys, node_width=127, page_depth=2)
+    page_of = np.asarray(leaf_page_of(fidx, qs))
+    gather, valid, step_pages, G = plan_buckets(page_of, 128)
+    emit("fig5.3/two-phase-plan", 0.0,
+         f"grid_steps={G};unique_pages={len(set(step_pages.tolist()))};"
+         f"queries={N_QUERIES};dma_bytes_per_step={fidx.leaf_width*4}")
+
+
+if __name__ == "__main__":
+    run()

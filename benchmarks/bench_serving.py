@@ -1,0 +1,72 @@
+"""Serving-path benchmarks (ours, DESIGN.md §2.2): the paper's primitive
+embedded in the LLM serving loop.
+
+  * sampler CDF inversion per decode batch (the per-step search),
+  * prefix-page index probe throughput per index kind (the RadixAttention-
+    style lookup), including the NitroGen-compiled index,
+  * MoE top-k tournament vs lax.top_k.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from repro.models.moe import tournament_topk
+from repro.serve.kv_cache import chain_hashes
+from ._timing import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(23)
+
+    # ---- sampler CDF inversion (B=64 sequences, 32k vocab) ----
+    p = rng.dirichlet(np.ones(32_768) * 0.1, size=64).astype(np.float32)
+    cdf = jnp.asarray(np.cumsum(np.sort(p, -1)[:, ::-1], axis=-1))
+    u = jnp.asarray(rng.uniform(0, 1, 64).astype(np.float32))
+
+    def invert(cdf, u):
+        return jnp.minimum(jnp.sum(cdf < u[:, None], -1), cdf.shape[1] - 1)
+
+    us = time_fn(jax.jit(invert), cdf, u)
+    emit("serving/sampler-cdf-invert", us, f"us_per_seq={us/64:.2f}")
+
+    # ---- prefix index probe: 100k cached pages, batch of 256 probes ----
+    n_pages = 100_000
+    hashes = np.unique(rng.integers(0, 2**31 - 1, int(n_pages * 1.1)
+                                    ).astype(np.int32))[:n_pages]
+    probes = jnp.asarray(np.concatenate([
+        hashes[rng.integers(0, n_pages, 128)],
+        rng.integers(0, 2**31 - 1, 128).astype(np.int32)]))
+    for kind, cfg in [
+        ("binary", IndexConfig(kind="binary")),
+        ("css", IndexConfig(kind="css", node_width=128)),
+        ("fast", IndexConfig(kind="fast", node_width=127, page_depth=2)),
+        ("nitrogen", IndexConfig(kind="nitrogen", levels=3,
+                                 compiled_node_width=3)),
+    ]:
+        idx = build_index(hashes, config=cfg)
+        fn = jax.jit(idx.search)
+        us = time_fn(fn, probes)
+        emit(f"serving/prefix-probe/{kind}", us,
+             f"probes_per_s={256/(us*1e-6):.0f}")
+
+    # ---- MoE routing top-k ----
+    scores = jnp.asarray(rng.normal(size=(16_384, 16)).astype(np.float32))
+    us_t = time_fn(jax.jit(lambda s: tournament_topk(s, 2)), scores)
+    us_l = time_fn(jax.jit(lambda s: jax.lax.top_k(s, 2)), scores)
+    emit("serving/moe-topk-tournament", us_t, f"vs_lax_topk={us_l:.1f}us")
+
+    # ---- chained page hashing (host-side, per 2k-token prompt) ----
+    import time as _t
+    toks = rng.integers(0, 50_000, 2048)
+    t0 = _t.perf_counter()
+    for _ in range(20):
+        chain_hashes(toks, 16)
+    emit("serving/chain-hash-2k-prompt", (_t.perf_counter() - t0) / 20 * 1e6,
+         "host-side")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,106 @@
+"""Table 4.1 — code size of index search implementations vs the instruction
+budget.
+
+Thesis: binary/CSS/FAST search code is 128-1503 bytes against a 32 KB
+i-cache — the i-cache is idle, so NitroGen spends it on data. TPU analogue:
+the jitted searcher's PROGRAM grows when the index is compiled into it
+(constants + unrolled selects), and the data buffers shrink to the
+uncompiled bottom. We report, per structure: HLO instruction count,
+program text bytes, constant bytes folded into the executable, and index
+bytes left in data buffers.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from ._timing import emit
+
+N_KEYS = 65_536
+
+
+def _explicit_fn(idx):
+    """(fn, extra_args): index buffers passed as ARGUMENTS for data-resident
+    structures (binary/css/fast) so they stay runtime data; NitroGen's top
+    stays a closure — its constants ARE the point (data-as-code)."""
+    from repro.core import sorted_array, css_tree, fast_tree, nitrogen
+    impl, kind = idx.impl, idx.config.kind
+    if kind == "binary":
+        def fn(q, keys_pad):
+            return sorted_array._search_pad(
+                keys_pad, q, n_pad=impl.n_pad, cutoff=impl.linear_cutoff)
+        return fn, (impl.keys_pad,)
+    if kind == "css":
+        def fn(q, dir_keys, leaf_pad):
+            return css_tree._search(
+                dir_keys, leaf_pad, q, offsets=impl.level_offsets,
+                w=impl.node_width, leaf_width=impl.leaf_width,
+                depth=impl.depth, intra=impl.intra)
+        return fn, (impl.dir_keys, impl.leaf_pad)
+    if kind == "fast":
+        def fn(q, pages, leaf_pad):
+            import jax.numpy as jnp
+            j = fast_tree._descend(pages, q, goffs=impl.group_offsets,
+                                   gdepths=impl.group_depths, w=impl.node_width)
+            lw = impl.leaf_width
+            base = j * lw
+            blk = jnp.take(leaf_pad, base[..., None]
+                           + jnp.arange(lw, dtype=jnp.int32), mode="clip")
+            return base + jnp.sum(blk < q[..., None], axis=-1)
+        return fn, (impl.pages, impl.leaf_pad)
+    # nitrogen: compiled top (closure constants) + data-resident bottom (arg)
+    def fn(q, block_pad):
+        import jax.numpy as jnp
+        b = impl.network(q)
+        off = nitrogen._bottom_binary(block_pad, b, q, impl.block_pad_width)
+        return b * impl.block_width + jnp.minimum(off, impl.block_width)
+    return fn, (impl.block_pad,)
+
+
+def _program_stats(fn, qs, extra):
+    comp = jax.jit(fn).lower(qs, *extra).compile()
+    txt = comp.as_text()
+    n_instr = len(re.findall(r"^\s+(?:ROOT\s+)?%?[\w.\-]+\s*=", txt, re.M))
+    const_bytes = 0
+    for m in re.finditer(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?constant\(", txt):
+        dt, dims = m.group(1), m.group(2)
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+        const_bytes += n * {"s32": 4, "f32": 4, "pred": 1, "s8": 1,
+                            "bf16": 2, "u32": 4, "s64": 8}.get(dt, 4)
+    return n_instr, len(txt), const_bytes
+
+
+def run():
+    rng = np.random.default_rng(17)
+    keys = np.unique(rng.integers(0, 2**31 - 2, int(N_KEYS * 1.2)
+                                  ).astype(np.int32))[:N_KEYS]
+    qs = jnp.asarray(rng.integers(0, 2**31 - 2, 1024).astype(np.int32))
+    rows = [
+        ("binary", IndexConfig(kind="binary")),
+        ("css", IndexConfig(kind="css", node_width=16)),
+        ("fast", IndexConfig(kind="fast", node_width=15, page_depth=2)),
+        ("nitrogen-L2", IndexConfig(kind="nitrogen", levels=2,
+                                    compiled_node_width=3)),
+        ("nitrogen-L3", IndexConfig(kind="nitrogen", levels=3,
+                                    compiled_node_width=3)),
+        ("nitrogen-L4", IndexConfig(kind="nitrogen", levels=4,
+                                    compiled_node_width=3)),
+    ]
+    for name, cfg in rows:
+        idx = build_index(keys, config=cfg)
+        fn, extra = _explicit_fn(idx)
+        n_instr, txt_bytes, const_bytes = _program_stats(fn, qs, extra)
+        data_bytes = idx.tree_bytes + (idx.keys_sorted.size * 4
+                                       if cfg.kind != "nitrogen" else
+                                       int(idx.impl.block_pad.size * 4))
+        emit(f"table4.1/{name}", float(n_instr),
+             f"hlo_instrs={n_instr};program_text_B={txt_bytes};"
+             f"const_B={const_bytes};index_data_B={data_bytes}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure (+ serving).
+Prints ``name,us_per_call,derived`` CSV lines.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only fig5_1,...]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["bench_fig5_1", "bench_fig5_2", "bench_fig5_3", "bench_table4_1",
+           "bench_serving"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list of module suffixes (fig5_1,...)")
+    args = ap.parse_args()
+    only = {f"bench_{s.strip()}" for s in args.only.split(",") if s.strip()}
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {mod_name} ---", file=sys.stderr)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {mod_name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end serving driver (the paper's kind of workload: throughput):
+a small qwen3-family model serves batched requests with prefix-page reuse
+(NitroGen-compiled prefix index) and top-p sampling.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.core import IndexConfig
+from repro.models import transformer as T
+from repro.serve import SamplerConfig, ServeEngine
+
+cfg = get_config("qwen3-0.6b").reduced(d_model=128, n_layers=4, vocab=2048)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+print(f"model: qwen3-family reduced, {T.param_count(params)/1e6:.1f}M params")
+
+engine = ServeEngine(
+    cfg, params, max_len=160, page_size=16,
+    index_config=IndexConfig(kind="nitrogen", levels=2, compiled_node_width=3),
+    sampler=SamplerConfig(temperature=0.8, top_p=0.9),
+)
+
+rng = np.random.default_rng(1)
+system_prompt = rng.integers(0, cfg.vocab, 64)          # shared 4-page prefix
+prompts = [np.concatenate([system_prompt, rng.integers(0, cfg.vocab, 17)])
+           for _ in range(8)]
+
+out = engine.generate(prompts, steps=32, rng=jax.random.PRNGKey(7))
+s = engine.stats
+print(f"generated: {out.shape} tokens")
+print(f"prefill tokens computed : {s.prefill_tokens:5d}")
+print(f"prefill tokens REUSED   : {s.reused_tokens:5d} "
+      f"(prefix cache, index={engine.store.index_config.kind})")
+print(f"decode throughput       : {s.decode_tokens / max(s.decode_s, 1e-9):,.0f} tok/s")
+print(f"prefix store stats      : {engine.store.stats}")
+assert s.reused_tokens >= 64 * (len(prompts) - 1), "prefix reuse failed"
+print("OK: every request after the first reused the shared system prompt.")

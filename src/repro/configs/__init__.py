@@ -1,0 +1,1 @@
+from .base import ArchConfig, ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: F401

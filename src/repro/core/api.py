@@ -1,0 +1,132 @@
+"""Public facade over the index-search core.
+
+    idx = build_index(keys, values, IndexConfig(kind="nitrogen", levels=3))
+    hit = idx.lookup(queries)        # -> LookupResult(rank, found, values)
+
+This is the interface the serving stack uses (prefix-page index, sampler) and
+the interface the paper-figure benchmarks drive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import sorted_array, css_tree, kary, fast_tree, nitrogen
+
+KINDS = ("binary", "css", "kary", "fast", "nitrogen")
+
+
+@dataclass(frozen=True)
+class IndexConfig:
+    kind: str = "css"
+    node_width: int = 128        # css/kary/fast: keys per node
+    leaf_width: Optional[int] = None
+    linear_cutoff: int = 1       # binary: switch-to-linear threshold
+    page_depth: int = 2          # fast: directory levels per page
+    levels: int = 3              # nitrogen: compiled levels
+    compiled_node_width: int = 3  # nitrogen: separators per compiled node
+    bottom: str = "binary"       # nitrogen: base approach under the code
+    intra: str = "vector"        # css: intra-node search style
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown index kind {self.kind!r}; want one of {KINDS}")
+
+
+@dataclass(frozen=True)
+class LookupResult:
+    rank: jnp.ndarray            # searchsorted-left rank, [Q]
+    found: jnp.ndarray           # bool [Q]
+    values: Optional[jnp.ndarray]  # payload for hits (arbitrary for misses)
+
+
+@dataclass(frozen=True)
+class Index:
+    config: IndexConfig
+    impl: Any
+    keys_sorted: jnp.ndarray
+    values_sorted: Optional[jnp.ndarray]
+    n: int
+
+    def search(self, queries) -> jnp.ndarray:
+        q = jnp.asarray(queries)
+        mod = _MODULES[self.config.kind]
+        return mod.search(self.impl, q)
+
+    def search_range(self, lo, hi) -> tuple:
+        """Range query (thesis §1.1: 'simple to extend'): for each pair
+        lo[i] <= hi[i], the half-open rank interval [rank_lo, rank_hi) of
+        keys with lo <= key <= hi, plus the match count."""
+        lo = jnp.asarray(lo)
+        hi = jnp.asarray(hi)
+        r_lo = self.search(lo)
+        if jnp.issubdtype(hi.dtype, jnp.integer):
+            # searchsorted-right(hi) == searchsorted-left(hi + 1); hi < the
+            # sentinel by the key-domain contract, so hi+1 never overflows
+            r_hi_excl = self.search(hi + 1)
+        else:
+            # floats: extend past the first hit (duplicate float keys at hi
+            # are counted once — documented)
+            r_hi = self.search(hi)
+            safe = jnp.minimum(r_hi, self.n - 1)
+            hit = (r_hi < self.n) & (jnp.take(self.keys_sorted, safe, axis=0) == hi)
+            r_hi_excl = r_hi + hit.astype(r_hi.dtype)
+        return r_lo, r_hi_excl, jnp.maximum(r_hi_excl - r_lo, 0)
+
+    def lookup(self, queries) -> LookupResult:
+        q = jnp.asarray(queries)
+        rank = self.search(q)
+        safe = jnp.minimum(rank, self.n - 1)
+        found = (rank < self.n) & (jnp.take(self.keys_sorted, safe, axis=0) == q)
+        vals = None
+        if self.values_sorted is not None:
+            vals = jnp.take(self.values_sorted, safe, axis=0)
+        return LookupResult(rank=rank, found=found, values=vals)
+
+    @property
+    def tree_bytes(self) -> int:
+        return int(getattr(self.impl, "tree_bytes", 0))
+
+
+_MODULES = {
+    "binary": sorted_array,
+    "css": css_tree,
+    "kary": kary,
+    "fast": fast_tree,
+    "nitrogen": nitrogen,
+}
+
+
+def build_index(keys, values=None, config: IndexConfig = IndexConfig()) -> Index:
+    keys = np.asarray(keys)
+    order = np.argsort(keys, kind="stable")
+    srt = keys[order]
+    vals = None
+    if values is not None:
+        values = np.asarray(values)
+        if values.shape[0] != keys.shape[0]:
+            raise ValueError("values must align with keys")
+        vals = jnp.asarray(values[order])
+
+    c = config
+    if c.kind == "binary":
+        impl = sorted_array.build(srt, linear_cutoff=c.linear_cutoff)
+    elif c.kind == "css":
+        impl = css_tree.build(srt, node_width=c.node_width,
+                              leaf_width=c.leaf_width, intra=c.intra)
+    elif c.kind == "kary":
+        impl = kary.build(srt, node_width=c.node_width)
+    elif c.kind == "fast":
+        impl = fast_tree.build(srt, node_width=c.node_width,
+                               leaf_width=c.leaf_width, page_depth=c.page_depth)
+    elif c.kind == "nitrogen":
+        impl = nitrogen.build(srt, levels=c.levels,
+                              node_width=c.compiled_node_width, bottom=c.bottom,
+                              css_node_width=c.node_width)
+    else:  # pragma: no cover
+        raise AssertionError
+    return Index(config=c, impl=impl, keys_sorted=jnp.asarray(srt),
+                 values_sorted=vals, n=int(srt.size))

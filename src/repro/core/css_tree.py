@@ -1,0 +1,134 @@
+"""CSS-tree (thesis Alg 3.1 / [RR99]) adapted to TPU tiles.
+
+A pointer-free directory of separator keys over the sorted data array, all
+levels linearized level-major in one contiguous buffer; child addresses are
+pure arithmetic (``j*fanout + c``).
+
+TPU adaptation (DESIGN.md §2): node width defaults to 128 keys — one VPU
+lane row — instead of a 64-byte cache line.  The intra-node "binary range
+search" of the paper is available (``intra='binary'``) but the TPU-natural
+form is a single wide compare + popcount (``intra='vector'``), which is what
+k-ary search does inside a node; on a vector machine both read the same
+memory, the wide compare simply uses all lanes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .util import as_sorted_numpy, next_pow, pad_to, sentinel_for, take
+
+
+@dataclass(frozen=True)
+class CSSTreeIndex:
+    keys: jnp.ndarray         # [n] sorted data array (the leaves)
+    leaf_pad: jnp.ndarray     # [num_leaves * leaf_width] padded leaf storage
+    dir_keys: jnp.ndarray     # flat level-major directory
+    level_offsets: Tuple[int, ...]
+    n: int
+    node_width: int           # separators per directory node (w)
+    leaf_width: int
+    depth: int                # number of directory levels (D)
+    intra: str = "vector"     # 'vector' | 'binary'
+
+    @property
+    def fanout(self) -> int:
+        return self.node_width + 1
+
+    @property
+    def tree_bytes(self) -> int:
+        return self.dir_keys.size * self.dir_keys.dtype.itemsize
+
+
+def _directory(srt: np.ndarray, w: int, leaf_width: int):
+    """Build the level-major separator directory (vectorized per level)."""
+    f = w + 1
+    num_leaves = -(-srt.size // leaf_width)
+    depth = next_pow(f, num_leaves)
+    sent = sentinel_for(srt.dtype)
+    n = srt.size
+    levels = []
+    offsets = []
+    off = 0
+    for l in range(depth):
+        js = np.arange(f**l, dtype=np.int64)
+        i = np.arange(w, dtype=np.int64)
+        # separator i of node j = max key covered by child i
+        child_span = f ** (depth - 1 - l) * leaf_width       # keys per child
+        rank = (js[:, None] * f + i[None, :] + 1) * child_span - 1
+        sep = np.where(rank < n, srt[np.minimum(rank, n - 1)], sent)
+        levels.append(sep.reshape(-1).astype(srt.dtype))
+        offsets.append(off)
+        off += levels[-1].size
+    dir_keys = (
+        np.concatenate(levels) if levels else np.empty(0, dtype=srt.dtype)
+    )
+    return dir_keys, tuple(offsets), depth
+
+
+def build(keys, node_width: int = 128, leaf_width: int | None = None,
+          intra: str = "vector") -> CSSTreeIndex:
+    srt = as_sorted_numpy(keys)
+    if leaf_width is None:
+        leaf_width = node_width + 1
+    dir_keys, offsets, depth = _directory(srt, node_width, leaf_width)
+    num_leaves = (node_width + 1) ** depth
+    leaf_pad = pad_to(srt, num_leaves * leaf_width)
+    return CSSTreeIndex(
+        keys=jnp.asarray(srt),
+        leaf_pad=jnp.asarray(leaf_pad),
+        dir_keys=jnp.asarray(dir_keys),
+        level_offsets=offsets,
+        n=int(srt.size),
+        node_width=int(node_width),
+        leaf_width=int(leaf_width),
+        depth=int(depth),
+        intra=intra,
+    )
+
+
+def _node_child(node_keys: jnp.ndarray, q: jnp.ndarray, w: int, intra: str):
+    """Index of the child branch: count of separators < q (searchsorted-left
+    descent). 'vector' = one wide compare; 'binary' = the paper's intra-node
+    binary range search (log2 w dependent steps)."""
+    if intra == "vector":
+        return jnp.sum(node_keys < q[..., None], axis=-1).astype(jnp.int32)
+    # faithful binary range search within the node
+    lo = jnp.zeros(q.shape, dtype=jnp.int32)
+    size = w
+    while size > 0:
+        half = (size + 1) // 2
+        probe = jnp.take_along_axis(node_keys, (lo + half - 1)[..., None], axis=-1)[..., 0]
+        lo = jnp.where(probe < q, lo + half, lo)
+        size -= half
+    return lo
+
+
+@partial(jax.jit, static_argnames=("offsets", "w", "leaf_width", "depth", "intra"))
+def _search(dir_keys, leaf_pad, q, *, offsets, w, leaf_width, depth, intra):
+    f = w + 1
+    j = jnp.zeros(q.shape, dtype=jnp.int32)
+    for l in range(depth):                      # static unroll: depth is tiny
+        base = offsets[l] + j * w
+        node = take(dir_keys, base[..., None] + jnp.arange(w, dtype=jnp.int32))
+        c = _node_child(node, q, w, intra)
+        j = j * f + c
+    base = j * leaf_width
+    blk = take(leaf_pad, base[..., None] + jnp.arange(leaf_width, dtype=jnp.int32))
+    rank = base + jnp.sum(blk < q[..., None], axis=-1).astype(jnp.int32)
+    return rank
+
+
+def search(index: CSSTreeIndex, queries) -> jnp.ndarray:
+    q = jnp.asarray(queries)
+    rank = _search(
+        index.dir_keys, index.leaf_pad, q,
+        offsets=index.level_offsets, w=index.node_width,
+        leaf_width=index.leaf_width, depth=index.depth, intra=index.intra,
+    )
+    return jnp.minimum(rank, index.n)

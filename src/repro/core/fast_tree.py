@@ -1,0 +1,143 @@
+"""FAST — hierarchically blocked tree search ([KCS+10], thesis §3.4),
+re-blocked for the TPU memory hierarchy.
+
+The paper blocks a binary tree at three granularities (SIMD register /
+cache line / memory page).  On TPU the software-visible hierarchy has two
+tiers (VMEM, HBM), and the register tier is the node itself:
+
+  * vector node  = ``node_width`` keys compared in one wide op (VREG row),
+  * page         = ``page_depth`` consecutive vector-node levels packed
+                   contiguously, sized for one HBM->VMEM DMA,
+  * HBM streaming across pages is the kernel-grid tier
+    (``kernels/page_search.py`` scalar-prefetches page ids).
+
+Rank math is identical to the CSS directory — only the *address* of a node
+changes: within a page, levels are level-major; pages of one page-level are
+consecutive; page-levels are concatenated.  Search therefore touches one
+contiguous page per ``page_depth`` levels (the paper's whole point).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .css_tree import _directory
+from .util import as_sorted_numpy, pad_to, take
+
+
+@dataclass(frozen=True)
+class FastTreeIndex:
+    keys: jnp.ndarray            # [n] sorted data array
+    leaf_pad: jnp.ndarray        # padded leaf storage
+    pages: jnp.ndarray           # flat hierarchically-blocked directory
+    group_offsets: Tuple[int, ...]   # start of each page-level group
+    group_depths: Tuple[int, ...]    # directory levels inside each group
+    n: int
+    node_width: int
+    leaf_width: int
+    depth: int                   # total directory levels
+
+    @property
+    def fanout(self) -> int:
+        return self.node_width + 1
+
+    @property
+    def page_keys(self) -> int:
+        """keys stored in one (full-depth) page"""
+        f, d = self.fanout, self.group_depths[0]
+        return self.node_width * (f**d - 1) // (f - 1)
+
+    @property
+    def tree_bytes(self) -> int:
+        return self.pages.size * self.pages.dtype.itemsize
+
+
+def _page_size(w: int, d: int) -> int:
+    f = w + 1
+    return w * (f**d - 1) // (f - 1)
+
+
+def build(keys, node_width: int = 128, leaf_width: int | None = None,
+          page_depth: int = 2) -> FastTreeIndex:
+    srt = as_sorted_numpy(keys)
+    if leaf_width is None:
+        leaf_width = node_width + 1
+    # flat level-major directory first (same separators as a CSS tree) ...
+    dir_keys, level_offsets, depth = _directory(srt, node_width, leaf_width)
+    f = node_width + 1
+    # ... then re-blocked into pages of `page_depth` levels
+    group_depths = []
+    rem = depth
+    while rem > 0:
+        group_depths.append(min(page_depth, rem))
+        rem -= group_depths[-1]
+    chunks, group_offsets, off = [], [], 0
+    lvl = 0
+    for d in group_depths:
+        n_pages = f**lvl                       # pages in this group
+        psize = _page_size(node_width, d)
+        block = np.zeros(n_pages * psize, dtype=dir_keys.dtype)
+        for dl in range(d):                    # local level dl inside the page
+            lo = level_offsets[lvl + dl]
+            lev = np.asarray(dir_keys[lo: lo + node_width * f**(lvl + dl)])
+            lev = lev.reshape(n_pages, f**dl * node_width)
+            loff = _page_size(node_width, dl)
+            idx = (np.arange(n_pages)[:, None] * psize + loff
+                   + np.arange(f**dl * node_width)[None, :])
+            block[idx.reshape(-1)] = lev.reshape(-1)
+        chunks.append(block)
+        group_offsets.append(off)
+        off += block.size
+        lvl += d
+    pages = np.concatenate(chunks) if chunks else np.empty(0, dtype=srt.dtype)
+    num_leaves = f**depth
+    leaf_pad = pad_to(srt, num_leaves * leaf_width)
+    return FastTreeIndex(
+        keys=jnp.asarray(srt), leaf_pad=jnp.asarray(leaf_pad),
+        pages=jnp.asarray(pages),
+        group_offsets=tuple(group_offsets), group_depths=tuple(group_depths),
+        n=int(srt.size), node_width=int(node_width),
+        leaf_width=int(leaf_width), depth=int(depth),
+    )
+
+
+@partial(jax.jit, static_argnames=("goffs", "gdepths", "w"))
+def _descend(pages, q, *, goffs, gdepths, w):
+    """Directory descent -> leaf block index j (== rank // leaf_width path)."""
+    f = w + 1
+    j = jnp.zeros(q.shape, dtype=jnp.int32)      # global node index == rank path
+    for g, d in enumerate(gdepths):
+        psize = _page_size(w, d)
+        page_idx = j                              # page index == node index at group top
+        j_local = jnp.zeros(q.shape, dtype=jnp.int32)
+        for dl in range(d):
+            addr = (goffs[g] + page_idx * psize + _page_size(w, dl) + j_local * w)
+            node = take(pages, addr[..., None] + jnp.arange(w, dtype=jnp.int32))
+            c = jnp.sum(node < q[..., None], axis=-1).astype(jnp.int32)
+            j_local = j_local * f + c
+            j = j * f + c
+    return j
+
+
+def search(index: FastTreeIndex, queries) -> jnp.ndarray:
+    q = jnp.asarray(queries)
+    j = _descend(index.pages, q, goffs=index.group_offsets,
+                 gdepths=index.group_depths, w=index.node_width)
+    lw = index.leaf_width
+    base = j * lw
+    blk = take(index.leaf_pad, base[..., None] + jnp.arange(lw, dtype=jnp.int32))
+    rank = base + jnp.sum(blk < q[..., None], axis=-1).astype(jnp.int32)
+    return jnp.minimum(rank, index.n)
+
+
+def leaf_page_of(index: FastTreeIndex, queries) -> jnp.ndarray:
+    """Leaf-block id per query (directory descent only) — used by the
+    two-phase bucketed Pallas kernel (sort queries by page, then stream)."""
+    q = jnp.asarray(queries)
+    return _descend(index.pages, q, goffs=index.group_offsets,
+                    gdepths=index.group_depths, w=index.node_width)

@@ -1,0 +1,96 @@
+"""k-ary search on a linearized tree ([SGL09], thesis §3.3).
+
+Unlike the CSS directory (which duplicates separators above a leaf array),
+the k-ary linearized tree is a *permutation* of the sorted keys: every key
+appears exactly once, placed so each node's k-1 keys are contiguous — a
+single wide vector load per step.
+
+TPU adaptation: k is a free parameter; the natural sizes are 129 (one
+128-lane VREG row per node) up to 1025 (a full (8,128) vreg block).  The
+rank accumulates digit-by-digit (rank = rank*f + c), so no back-pointers or
+final permutation inversion are needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .util import as_sorted_numpy, next_pow, pad_to, sentinel_for, take
+
+
+@dataclass(frozen=True)
+class KaryTreeIndex:
+    keys: jnp.ndarray          # [n] sorted (kept as the value-rank reference)
+    tree: jnp.ndarray          # [f**depth - 1] permuted level-major tree
+    level_offsets: Tuple[int, ...]
+    n: int
+    node_width: int            # w = k - 1 keys per node
+    depth: int
+
+    @property
+    def fanout(self) -> int:
+        return self.node_width + 1
+
+    @property
+    def tree_bytes(self) -> int:
+        # the tree replaces the sorted array; extra storage is only padding
+        return (self.tree.size - self.n) * self.tree.dtype.itemsize
+
+
+def perm_ranks(depth: int, w: int) -> np.ndarray:
+    """tree_slot -> sorted rank for a complete (w+1)-ary tree, level-major.
+
+    Level l, node j, slot i holds rank  j*f**(depth-l) + (i+1)*f**(depth-l-1) - 1.
+    """
+    f = w + 1
+    out = []
+    for l in range(depth):
+        js = np.arange(f**l, dtype=np.int64)
+        i = np.arange(w, dtype=np.int64)
+        r = js[:, None] * f ** (depth - l) + (i[None, :] + 1) * f ** (depth - l - 1) - 1
+        out.append(r.reshape(-1))
+    return np.concatenate(out)
+
+
+def build(keys, node_width: int = 128) -> KaryTreeIndex:
+    srt = as_sorted_numpy(keys)
+    f = node_width + 1
+    depth = max(next_pow(f, srt.size + 1), 1)
+    padded = pad_to(srt, f**depth - 1)
+    ranks = perm_ranks(depth, node_width)
+    tree = padded[ranks]
+    offsets, off = [], 0
+    for l in range(depth):
+        offsets.append(off)
+        off += node_width * f**l
+    return KaryTreeIndex(
+        keys=jnp.asarray(srt), tree=jnp.asarray(tree),
+        level_offsets=tuple(offsets), n=int(srt.size),
+        node_width=int(node_width), depth=int(depth),
+    )
+
+
+@partial(jax.jit, static_argnames=("offsets", "w", "depth"))
+def _search(tree, q, *, offsets, w, depth):
+    f = w + 1
+    # the node index IS the accumulated rank: j_{l+1} = j_l * f + c_l, and
+    # after the last level  j == sum_l c_l * f**(depth-1-l) == searchsorted rank
+    j = jnp.zeros(q.shape, dtype=jnp.int32)
+    for l in range(depth):
+        base = offsets[l] + j * w
+        node = take(tree, base[..., None] + jnp.arange(w, dtype=jnp.int32))
+        c = jnp.sum(node < q[..., None], axis=-1).astype(jnp.int32)
+        j = j * f + c
+    return j
+
+
+def search(index: KaryTreeIndex, queries) -> jnp.ndarray:
+    q = jnp.asarray(queries)
+    rank = _search(index.tree, q, offsets=index.level_offsets,
+                   w=index.node_width, depth=index.depth)
+    return jnp.minimum(rank, index.n)

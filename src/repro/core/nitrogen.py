@@ -1,0 +1,214 @@
+"""NitroGen — index compilation (thesis Ch. 4), TPU-native form.
+
+The thesis generates x86 code in which the *top levels of the index are
+literal constants in the instruction stream*, so the hot part of the tree is
+served from the instruction cache instead of the data path; the lower levels
+fall back to the ordinary data-resident search.
+
+TPU translation (DESIGN.md §2): "data becomes code" = **trace-time
+specialization**.  ``compile_index`` recursively generates, in Python, a
+branch-free select network whose separator keys are Python scalars — XLA
+receives them as constant literals folded into the executable (the TPU's
+analogue of instruction-stream residency: immediates / the program's literal
+pool, no HBM or VMEM buffer, no gathers).  Each query batch evaluates the
+whole constant tree with vectorized compares + selects; the selected leaf
+block is then searched by the generic data-resident routine, exactly the
+thesis' hybrid.
+
+Cost model change vs. the paper: instead of x86 bytes vs. 32 KB i-cache, the
+compiled top costs HLO ops growing as ``fanout**levels`` — the Fig 5.2
+"optimal compiled node size is smaller" effect reappears as a compute/levels
+tradeoff, measured in benchmarks/bench_table4_1.py and bench_fig5_2.py.
+
+Updates trigger re-specialization (re-trace + XLA compile), mirroring the
+thesis' rebuild-on-update OLAP posture — but at seconds, not the 20 hours
+GCC took in §4.2.2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import css_tree
+from .util import as_sorted_numpy, next_pow, pad_to, take
+
+
+@dataclass(frozen=True)
+class NitroGenIndex:
+    keys: jnp.ndarray            # [n] sorted data array
+    block_pad: jnp.ndarray       # [num_blocks * block_pad_width] bottom storage
+    n: int
+    levels: int                  # compiled levels
+    node_width: int              # separators per compiled node
+    num_blocks: int
+    block_width: int             # keys per bottom block (before pow2 padding)
+    block_pad_width: int
+    bottom: str                  # 'binary' | 'vector' | 'css'
+    network: Callable            # q[batch] -> block id  (the compiled top)
+    # bottom='css': a CSS directory per block, stacked (the thesis' hybrid —
+    # compiled top levels, base-structure search below)
+    css_dirs: Optional[jnp.ndarray] = None        # [num_blocks * dir_len]
+    css_offsets: tuple = ()
+    css_depth: int = 0
+    css_w: int = 0
+    css_leaf_width: int = 0
+    css_dir_len: int = 0
+    css_leaf_len: int = 0
+
+    @property
+    def fanout(self) -> int:
+        return self.node_width + 1
+
+    @property
+    def tree_bytes(self) -> int:
+        # the compiled top lives in the executable, not in a data buffer
+        return 0
+
+
+def _gen_network(srt: np.ndarray, levels: int, w: int, block_width: int):
+    """Recursively emit the constant select network.
+
+    Returns f(q) -> block index, where every separator is a Python scalar
+    (an XLA constant) and every leaf is a Python int. ~= Fig 4.2/4.3: the
+    generated "code" mirrors the tree, specialised with the data.
+    """
+    f = w + 1
+    n = srt.size
+
+    def sep_at(block_boundary: int):
+        rank = min(block_boundary * block_width - 1, n - 1)
+        return srt[rank].item()          # python scalar -> XLA literal
+
+    def rec(b0: int, span: int):
+        if span == 1:
+            return b0                     # leaf: constant block id
+        child = span // f
+        kids = [rec(b0 + i * child, child) for i in range(f)]
+
+        def apply(q):
+            out = kids[-1](q) if callable(kids[-1]) else jnp.full(q.shape, kids[-1], jnp.int32)
+            for i in reversed(range(w)):
+                sep = sep_at(b0 + (i + 1) * child)
+                k = kids[i](q) if callable(kids[i]) else jnp.full(q.shape, kids[i], jnp.int32)
+                out = jnp.where(q <= sep, k, out)
+            return out
+
+        return apply
+
+    top = rec(0, f**levels)
+
+    def network(q):
+        r = top(q) if callable(top) else jnp.full(q.shape, top, jnp.int32)
+        return r
+
+    return network
+
+
+def build(keys, levels: int = 3, node_width: int = 3,
+          bottom: str = "binary", css_node_width: int = 16) -> NitroGenIndex:
+    srt = as_sorted_numpy(keys)
+    f = node_width + 1
+    num_blocks = f**levels
+    block_width = -(-srt.size // num_blocks)
+    css = {}
+    if bottom == "binary":
+        # +1: the in-block uniform lower_bound needs a sentinel slot to be
+        # able to return offset == block_width (q above the whole block)
+        bw_pad = 1 << next_pow(2, max(block_width, 1) + 1)
+    elif bottom == "css":
+        # the thesis' hybrid proper: a CSS directory under the compiled top.
+        # Every block gets an identically-shaped directory, stacked flat.
+        w = css_node_width
+        dirs, leaves = [], []
+        for b in range(num_blocks):
+            # pad every block to block_width first so all per-block
+            # directories share one shape (stackable, arithmetic-addressable)
+            blk = pad_to(srt[b * block_width: (b + 1) * block_width],
+                         block_width)
+            d, offs, depth = css_tree._directory(blk, w, w + 1)
+            num_leaves = (w + 1) ** depth
+            dirs.append(d)
+            leaves.append(pad_to(blk, num_leaves * (w + 1)))
+        css = dict(css_dirs=jnp.asarray(np.concatenate(dirs)),
+                   css_offsets=offs, css_depth=depth, css_w=w,
+                   css_leaf_width=w + 1, css_dir_len=int(dirs[0].size),
+                   css_leaf_len=int(leaves[0].size))
+        bw_pad = int(leaves[0].size)
+        block_pad = np.concatenate(leaves)
+    else:
+        bw_pad = block_width
+    if bottom != "css":
+        block_pad = np.stack([
+            pad_to(srt[b * block_width: (b + 1) * block_width], bw_pad)
+            for b in range(num_blocks)
+        ]).reshape(-1)
+    network = _gen_network(srt, levels, node_width, block_width)
+    return NitroGenIndex(
+        keys=jnp.asarray(srt), block_pad=jnp.asarray(block_pad),
+        n=int(srt.size), levels=int(levels), node_width=int(node_width),
+        num_blocks=int(num_blocks), block_width=int(block_width),
+        block_pad_width=int(bw_pad), bottom=bottom, network=network, **css,
+    )
+
+
+def _bottom_binary(block_pad, b, q, bw_pad):
+    """Generic data-resident lower_bound inside the selected block."""
+    pos = jnp.zeros(q.shape, dtype=jnp.int32)
+    base = b * bw_pad
+    step = bw_pad // 2
+    while step >= 1:
+        probe = take(block_pad, base + pos + step - 1)
+        pos = jnp.where(probe < q, pos + step, pos)
+        step //= 2
+    return pos
+
+
+def _bottom_vector(block_pad, b, q, bw_pad):
+    base = b * bw_pad
+    blk = take(block_pad, base[..., None] + jnp.arange(bw_pad, dtype=jnp.int32))
+    return jnp.sum(blk < q[..., None], axis=-1).astype(jnp.int32)
+
+
+def _bottom_css(index: NitroGenIndex, b, q):
+    """Per-block CSS descent (block-offset arithmetic on stacked dirs)."""
+    w, f = index.css_w, index.css_w + 1
+    j = jnp.zeros(q.shape, dtype=jnp.int32)
+    dbase = b * index.css_dir_len
+    for l in range(index.css_depth):
+        addr = dbase + index.css_offsets[l] + j * w
+        node = take(index.css_dirs, addr[..., None]
+                    + jnp.arange(w, dtype=jnp.int32))
+        c = jnp.sum(node < q[..., None], axis=-1).astype(jnp.int32)
+        j = j * f + c
+    lw = index.css_leaf_width
+    lbase = b * index.css_leaf_len + j * lw
+    blk = take(index.block_pad, lbase[..., None]
+               + jnp.arange(lw, dtype=jnp.int32))
+    return j * lw + jnp.sum(blk < q[..., None], axis=-1).astype(jnp.int32)
+
+
+def search(index: NitroGenIndex, queries) -> jnp.ndarray:
+    q = jnp.asarray(queries)
+    b = index.network(q)                               # compiled top (constants)
+    if index.bottom == "binary":
+        off = _bottom_binary(index.block_pad, b, q, index.block_pad_width)
+    elif index.bottom == "css":
+        off = _bottom_css(index, b, q)
+    else:
+        off = _bottom_vector(index.block_pad, b, q, index.block_pad_width)
+    rank = b * index.block_width + jnp.minimum(off, index.block_width)
+    return jnp.minimum(rank, index.n)
+
+
+def searcher(index: NitroGenIndex):
+    """A jitted closure — the 'compiled index' artifact whose HLO size is the
+    Table 4.1 analogue (see benchmarks/bench_table4_1.py)."""
+    @jax.jit
+    def run(q):
+        return search(index, q)
+    return run

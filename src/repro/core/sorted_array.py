@@ -1,0 +1,81 @@
+"""Sorted-array binary search (thesis Alg 2.1, with the linear-search cutoff
+refinement from §5.1).
+
+The search is the branch-free fixed-trip-count lower_bound: the array is
+padded to a power of two with sentinels, and ``log2(n_pad)`` halving steps
+run unconditionally (TPUs have no data-dependent scalar branching inside a
+vectorized batch; the thesis' early-exit-on-equality becomes a final
+equality check, exactly like its own flag-register trick).
+
+With ``linear_cutoff=c`` the last ``log2(c)`` halving steps are replaced by
+one vectorized compare over the remaining block of ``c`` keys — the thesis'
+"switch to linear search below a threshold" tuned for a vector unit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .util import as_sorted_numpy, next_pow, pad_to, take
+
+
+@dataclass(frozen=True)
+class SortedArrayIndex:
+    keys: jnp.ndarray          # [n] sorted, original (unpadded)
+    keys_pad: jnp.ndarray      # [n_pad] padded to power of two
+    n: int
+    n_pad: int
+    linear_cutoff: int = 1     # 1 => pure binary; >1 => vectorized tail scan
+
+    tree_bytes: int = field(default=0)  # extra index storage beyond data
+
+
+def build(keys, linear_cutoff: int = 1) -> SortedArrayIndex:
+    srt = as_sorted_numpy(keys)
+    # pad to a power of two with AT LEAST one sentinel slot: the uniform
+    # lower_bound returns at most n_pad-1, so rank == n must hit a sentinel
+    levels = next_pow(2, srt.size + 1)
+    n_pad = max(1 << levels, max(linear_cutoff, 1))
+    pad = pad_to(srt, n_pad)
+    return SortedArrayIndex(
+        keys=jnp.asarray(srt),
+        keys_pad=jnp.asarray(pad),
+        n=int(srt.size),
+        n_pad=int(n_pad),
+        linear_cutoff=int(max(linear_cutoff, 1)),
+    )
+
+
+@partial(jax.jit, static_argnames=("n_pad", "cutoff"))
+def _search_pad(keys_pad: jnp.ndarray, q: jnp.ndarray, *, n_pad: int, cutoff: int):
+    """Branch-free lower_bound over the padded array. Returns rank in
+    [0, n_pad] == number of keys < q."""
+    pos = jnp.zeros(q.shape, dtype=jnp.int32)
+    step = n_pad // 2
+    while step >= max(cutoff, 1):
+        # probe the key just left of the midpoint of the remaining range
+        probe = take(keys_pad, pos + step - 1)
+        pos = jnp.where(probe < q, pos + step, pos)
+        step //= 2
+    if cutoff > 1:
+        # vectorized "linear search" over the final block of `cutoff` keys
+        offs = pos[..., None] + jnp.arange(cutoff, dtype=jnp.int32)
+        blk = take(keys_pad, offs.reshape(-1)).reshape(offs.shape)
+        pos = pos + jnp.sum(blk < q[..., None], axis=-1).astype(jnp.int32)
+    return pos
+
+
+def search(index: SortedArrayIndex, queries: jnp.ndarray) -> jnp.ndarray:
+    """searchsorted-left rank of each query, in [0, n]."""
+    q = jnp.asarray(queries)
+    rank = _search_pad(index.keys_pad, q, n_pad=index.n_pad, cutoff=index.linear_cutoff)
+    return jnp.minimum(rank, index.n)
+
+
+def reference_rank(keys: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Oracle: numpy searchsorted-left over the unpadded sorted keys."""
+    return np.searchsorted(np.asarray(keys), np.asarray(queries), side="left").astype(np.int32)

@@ -1,0 +1,61 @@
+"""Shared helpers for the index-search core.
+
+Key-domain conventions (documented in DESIGN.md §2.3):
+  * keys are int32 or float32, sorted ascending;
+  * the sentinel (int32 max / +inf) pads incomplete structures — user keys
+    must be strictly below it;
+  * every searcher returns the searchsorted-left rank: the index of the
+    first key >= q in the sorted array.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+_INT_SENTINELS = {
+    np.dtype(np.int32): np.int32(np.iinfo(np.int32).max),
+    np.dtype(np.int64): np.int64(np.iinfo(np.int64).max),
+}
+
+
+def sentinel_for(dtype) -> np.generic:
+    """Largest representable value for ``dtype``; pads incomplete nodes."""
+    dtype = np.dtype(dtype)
+    if dtype in _INT_SENTINELS:
+        return _INT_SENTINELS[dtype]
+    if np.issubdtype(dtype, np.floating):
+        return dtype.type(np.inf)
+    raise TypeError(f"unsupported key dtype {dtype}")
+
+
+def as_sorted_numpy(keys) -> np.ndarray:
+    keys = np.asarray(keys)
+    if keys.ndim != 1:
+        raise ValueError("keys must be 1-D")
+    if keys.size == 0:
+        raise ValueError("empty key set")
+    srt = np.sort(keys, kind="stable")
+    return srt
+
+
+def next_pow(base: int, n: int) -> int:
+    """Smallest base**L with base**L >= n; returns the exponent L."""
+    level, cap = 0, 1
+    while cap < n:
+        cap *= base
+        level += 1
+    return level
+
+
+def pad_to(keys: np.ndarray, size: int) -> np.ndarray:
+    if keys.size > size:
+        raise ValueError("cannot pad down")
+    out = np.full(size, sentinel_for(keys.dtype), dtype=keys.dtype)
+    out[: keys.size] = keys
+    return out
+
+
+def take(arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather used in all searchers; mode='clip' keeps indices in-bounds so
+    padded/final ranks never fault (semantics handled by the caller)."""
+    return jnp.take(arr, idx, axis=0, mode="clip")

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, batch_at, iterate  # noqa: F401

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: batched CDF inversion for nucleus (top-p) sampling.
+
+Every decode step, every sequence inverts its sorted-probability CDF:
+find the first index v with cdf[b, v] >= u[b].  This is the thesis' search
+problem with one *independent* sorted array per row, so the tree layouts
+don't apply — but the k-ary idea does: one pass of wide compares
+(rank = popcount(cdf < u)) uses all 8x128 lanes every cycle.
+
+Grid: (batch tiles) x (vocab chunks); the vocab axis revisits the same
+output block and accumulates, so arbitrarily large vocabularies stream
+through VMEM in `chunk`-sized tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cdf_ref, u_ref, o_ref):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cdf = cdf_ref[...]                       # [TB, chunk]
+    u = u_ref[...]                           # [TB, 1]
+    o_ref[...] += jnp.sum(cdf < u, axis=-1, keepdims=True).astype(jnp.int32)
+
+
+def cdf_search(cdf: jnp.ndarray, u: jnp.ndarray, *, tile_b: int = 8,
+               chunk: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """cdf: [B, V] row-wise nondecreasing (pad tail with +inf or 1.0+eps);
+    u: [B]. Returns [B] int32: first index with cdf >= u (clipped to V-1)."""
+    B, V = cdf.shape
+    assert B % tile_b == 0 and V % chunk == 0, (B, V, tile_b, chunk)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(B // tile_b, V // chunk),
+        in_specs=[
+            pl.BlockSpec((tile_b, chunk), lambda b, v: (b, v)),
+            pl.BlockSpec((tile_b, 1), lambda b, v: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, 1), lambda b, v: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(cdf, u[:, None])
+    return jnp.minimum(out[:, 0], V - 1)

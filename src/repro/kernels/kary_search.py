@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: batched k-ary search over an in-VMEM linearized tree.
+
+TPU mapping of thesis §3.3/§3.4 (DESIGN.md §2):
+  * one *vector node* = one lane row of separators (the SSE register of the
+    paper, 32x wider);
+  * the whole tree is pinned in VMEM (the paper's "cache-resident" regime) —
+    each level is one operand with a full-array BlockSpec;
+  * queries stream through the grid in (rows, 128) VMEM tiles.
+
+The per-level child fetch is the TPU-hostile part (random gather). We use an
+**exact one-hot MXU gather**: the gather becomes two f32 matmuls on the 16-bit
+halves of the (bit-cast) keys — one-hot rows have a single 1, and 16-bit
+magnitudes are exact in f32, so the gather is bit-exact for any 32-bit key
+while running on the systolic array instead of scatter/gather hardware.
+
+VMEM budget: the deepest level must satisfy  TQ * n_nodes * 4 B  (one-hot)
++ tree bytes  <~ 16 MB; ``ops.kary_search`` enforces this and larger trees
+go through ``page_search`` (HBM streaming) instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _exact_onehot_gather(onehot_f32: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """rows of `onehot_f32` select rows of `table` ([n, w], any 32-bit dtype),
+    exactly, via two f32 matmuls on 16-bit halves."""
+    if table.dtype == jnp.float32:
+        bits = jax.lax.bitcast_convert_type(table, jnp.int32)
+        out = _exact_onehot_gather(onehot_f32, bits)
+        return jax.lax.bitcast_convert_type(out, jnp.float32)
+    lo = (table & 0xFFFF).astype(jnp.float32)           # [0, 65535]  exact in f32
+    hi = (table >> 16).astype(jnp.float32)              # [-32768, 32767] exact
+    glo = jax.lax.dot(onehot_f32, lo, precision=jax.lax.Precision.HIGHEST)
+    ghi = jax.lax.dot(onehot_f32, hi, precision=jax.lax.Precision.HIGHEST)
+    return (ghi.astype(jnp.int32) << 16) | glo.astype(jnp.int32)
+
+
+def _kernel(*refs, depth: int, fanout: int, level_nodes: tuple):
+    q_ref, *lvl_refs, o_ref = refs
+    q = q_ref[...]                                      # [TQB, 128]
+    tq = q.shape[0] * q.shape[1]
+    qf = q.reshape(tq)
+    j = jnp.zeros((tq,), jnp.int32)
+    for l in range(depth):
+        n_l = level_nodes[l]
+        lvl = lvl_refs[l][...]                          # [n_l, wpad]
+        onehot = (j[:, None] == jnp.arange(n_l, dtype=jnp.int32)[None, :])
+        node = _exact_onehot_gather(onehot.astype(jnp.float32), lvl)  # [TQ, wpad]
+        c = jnp.sum(node < qf[:, None], axis=-1).astype(jnp.int32)
+        j = j * fanout + c
+    o_ref[...] = j.reshape(q.shape)
+
+
+def kary_search_tiled(queries2d: jnp.ndarray, levels: list[jnp.ndarray],
+                      *, fanout: int, tile_rows: int = 8,
+                      interpret: bool = True) -> jnp.ndarray:
+    """queries2d: [R, lane] (padded); levels[l]: [n_l, wpad] with sentinel
+    padding in unused lanes. Returns searchsorted ranks, same shape."""
+    rows, lane = queries2d.shape
+    assert rows % tile_rows == 0
+    depth = len(levels)
+    level_nodes = tuple(int(l.shape[0]) for l in levels)
+    grid = (rows // tile_rows,)
+    in_specs = [pl.BlockSpec((tile_rows, lane), lambda i: (i, 0))]
+    for l in range(depth):
+        n_l, wpad = levels[l].shape
+        in_specs.append(pl.BlockSpec((n_l, wpad), lambda i: (0, 0)))
+    kern = functools.partial(_kernel, depth=depth, fanout=fanout,
+                             level_nodes=level_nodes)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_rows, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lane), jnp.int32),
+        interpret=interpret,
+    )(queries2d, *levels)

@@ -1,0 +1,99 @@
+"""Jit'd wrappers binding the Pallas kernels to the core index structures.
+
+On this CPU container every kernel runs with ``interpret=True`` (the kernel
+body executes in Python); on a real TPU the same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.kary import KaryTreeIndex
+from ..core.fast_tree import FastTreeIndex, leaf_page_of
+from ..core.util import sentinel_for
+from . import kary_search as _kary
+from . import page_search as _page
+from . import cdf_search as _cdf
+
+VMEM_BUDGET_BYTES = 12 * 2**20     # conservative per-core VMEM for tree+onehot
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def kary_levels(index: KaryTreeIndex, lane: int) -> list[jnp.ndarray]:
+    """Split the flat level-major tree into per-level [n_l, wpad] operands."""
+    w, f = index.node_width, index.fanout
+    sent = sentinel_for(np.asarray(index.tree).dtype)
+    out = []
+    for l in range(index.depth):
+        n_l = f**l
+        lvl = np.asarray(index.tree[index.level_offsets[l]:
+                                    index.level_offsets[l] + n_l * w])
+        lvl = lvl.reshape(n_l, w)
+        wpad = _ceil_to(w, lane)
+        full = np.full((n_l, wpad), sent, lvl.dtype)
+        full[:, :w] = lvl
+        out.append(jnp.asarray(full))
+    return out
+
+
+def kary_search(index: KaryTreeIndex, queries, *, lane: int = 128,
+                tile_rows: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """Batched k-ary search on the linearized tree; VMEM-resident regime."""
+    levels = kary_levels(index, lane)
+    tq = tile_rows * lane
+    deepest = levels[-1].shape[0]
+    vmem = sum(l.size * 4 for l in levels) + tq * deepest * 4
+    if vmem > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"tree too large for the in-VMEM kernel (~{vmem/2**20:.1f} MiB); "
+            "use fast_page_search (HBM streaming)")
+    q = jnp.asarray(queries)
+    n_q = q.shape[0]
+    pad = _ceil_to(max(n_q, 1), tq) - n_q
+    qp = jnp.concatenate([q, jnp.zeros((pad,), q.dtype)]) if pad else q
+    q2d = qp.reshape(-1, lane)
+    ranks = _kary.kary_search_tiled(q2d, levels, fanout=index.fanout,
+                                    tile_rows=tile_rows, interpret=interpret)
+    return jnp.minimum(ranks.reshape(-1)[:n_q], index.n)
+
+
+def fast_page_search(index: FastTreeIndex, queries, *, tile: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Two-phase FAST search: directory descent (VMEM-resident), then the
+    sorted-bucket page kernel streams exactly one leaf page per grid step."""
+    q = jnp.asarray(queries)
+    page_of = np.asarray(leaf_page_of(index, q))
+    gather, valid, step_pages, G = _page.plan_buckets(page_of, tile)
+    lw = index.leaf_width
+    lw_pad = _ceil_to(lw, 128)
+    num_pages = index.leaf_pad.size // lw
+    pages = np.full((num_pages, lw_pad), sentinel_for(np.asarray(index.keys).dtype),
+                    np.asarray(index.leaf_pad).dtype)
+    pages[:, :lw] = np.asarray(index.leaf_pad).reshape(num_pages, lw)
+    qb = jnp.take(q, jnp.asarray(gather), axis=0).reshape(G, tile)
+    ranks = _page.page_search_bucketed(qb, jnp.asarray(step_pages),
+                                       jnp.asarray(pages), leaf_width=lw,
+                                       interpret=interpret)
+    flat = np.asarray(ranks).reshape(-1)
+    out = np.zeros(q.shape[0], np.int32)
+    out[gather[valid]] = flat[valid]
+    return jnp.minimum(jnp.asarray(out), index.n)
+
+
+def topp_search(cdf, u, *, tile_b: int = 8, chunk: int = 512,
+                interpret: bool = True) -> jnp.ndarray:
+    """Nucleus-sampling CDF inversion; pads batch/vocab to tile multiples."""
+    cdf = jnp.asarray(cdf)
+    u = jnp.asarray(u)
+    B, V = cdf.shape
+    chunk = min(chunk, _ceil_to(V, 128))
+    Bp, Vp = _ceil_to(B, tile_b), _ceil_to(V, chunk)
+    if (Bp, Vp) != (B, V):
+        cdf = jnp.pad(cdf, ((0, Bp - B), (0, Vp - V)), constant_values=jnp.inf)
+        u = jnp.pad(u, (0, Bp - B), constant_values=0.5)
+    idx = _cdf.cdf_search(cdf, u, tile_b=tile_b, chunk=chunk, interpret=interpret)
+    return jnp.minimum(idx[:B], V - 1)

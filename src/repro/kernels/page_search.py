@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: FAST leaf-page search with scalar-prefetched DMA.
+
+This is the HBM tier of the hierarchical blocking (thesis §3.4): the
+directory descent (small, VMEM/"code"-resident) has already produced a leaf
+page id per query; queries are then *bucketed by page* (the sorted-batch
+traversal from DESIGN.md §2.1) and each grid step DMAs exactly one leaf page
+HBM->VMEM via a ``PrefetchScalarGridSpec`` index map — the TPU translation
+of the paper's page blocking: one contiguous memory fetch serves a whole
+tile of queries, and the scalar core issues the next page's DMA while the
+VPU compares the current one (automatic double buffering).
+
+The kernel itself is one wide compare per (page, query-tile): within a page
+the search is a vector popcount, i.e. the paper's SIMD tier.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(page_ids_ref, q_ref, pages_ref, o_ref, *, leaf_width: int):
+    g = pl.program_id(0)
+    page = pages_ref[...]                            # [1, lw_pad]
+    q = q_ref[...]                                   # [1, TQ]
+    local = jnp.sum(page[0, :][None, :] < q[0, :][:, None], axis=-1)
+    base = page_ids_ref[g] * leaf_width
+    o_ref[...] = (base + jnp.minimum(local, leaf_width)).astype(jnp.int32)[None, :]
+
+
+def page_search_bucketed(queries_bucketed: jnp.ndarray, page_ids: jnp.ndarray,
+                         pages: jnp.ndarray, *, leaf_width: int,
+                         interpret: bool = True) -> jnp.ndarray:
+    """queries_bucketed: [G, TQ] — step g's queries all live in page
+    page_ids[g]; pages: [num_pages, lw_pad] leaf storage (sentinel padded).
+    Returns ranks [G, TQ]."""
+    G, TQ = queries_bucketed.shape
+    num_pages, lw_pad = pages.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, TQ), lambda g, pids: (g, 0)),
+            pl.BlockSpec((1, lw_pad), lambda g, pids: (pids[g], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TQ), lambda g, pids: (g, 0)),
+    )
+    kern = functools.partial(_kernel, leaf_width=leaf_width)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, TQ), jnp.int32),
+        interpret=interpret,
+    )(page_ids, queries_bucketed, pages)
+
+
+def plan_buckets(page_of: np.ndarray, tile: int):
+    """Host-side DMA plan: group queries by leaf page into tiles of `tile`.
+
+    Returns (gather_idx [G*tile] indices into the original query array,
+    valid mask [G*tile], step_page_ids [G]). Queries in one step share one
+    page; pages with more than `tile` queries get multiple steps.
+    """
+    page_of = np.asarray(page_of)
+    order = np.argsort(page_of, kind="stable")
+    sorted_pages = page_of[order]
+    gather, valid, step_pages = [], [], []
+    i = 0
+    n = page_of.size
+    while i < n:
+        p = sorted_pages[i]
+        j = min(i + tile, n)
+        while j > i and sorted_pages[j - 1] != p:
+            j -= 1
+        # j = end of this tile's run within page p (at most `tile` long)
+        run = order[i:j]
+        pad = tile - run.size
+        gather.append(np.concatenate([run, np.zeros(pad, np.int64)]))
+        valid.append(np.concatenate([np.ones(run.size, bool), np.zeros(pad, bool)]))
+        step_pages.append(p)
+        i = j
+    G = len(step_pages)
+    return (np.concatenate(gather).astype(np.int32),
+            np.concatenate(valid),
+            np.asarray(step_pages, np.int32),
+            G)

@@ -1,0 +1,26 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel (the ground truth the
+shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def kary_search_ref(queries: np.ndarray, sorted_keys: np.ndarray) -> np.ndarray:
+    """Oracle for kernels.kary_search: searchsorted-left rank (unclipped
+    ranks beyond n are clipped by the wrapper, so clip here too)."""
+    r = np.searchsorted(np.asarray(sorted_keys), np.asarray(queries), side="left")
+    return r.astype(np.int32)
+
+
+def page_search_ref(queries: np.ndarray, sorted_keys: np.ndarray) -> np.ndarray:
+    return np.searchsorted(np.asarray(sorted_keys), np.asarray(queries),
+                           side="left").astype(np.int32)
+
+
+def cdf_search_ref(cdf: np.ndarray, u: np.ndarray) -> np.ndarray:
+    """First index v with cdf[b, v] >= u[b], clipped to V-1."""
+    cdf, u = np.asarray(cdf), np.asarray(u)
+    idx = np.array([np.searchsorted(cdf[b], u[b], side="left")
+                    for b in range(cdf.shape[0])])
+    return np.minimum(idx, cdf.shape[1] - 1).astype(np.int32)

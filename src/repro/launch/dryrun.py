@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import (jax locks the device count on first init).
+# This module is the ONLY place that forces 512 host devices — tests and
+# benchmarks see the real single CPU device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from ..dist import sharding as SH     # noqa: E402
+from ..models import transformer as T  # noqa: E402
+from ..optim import adamw             # noqa: E402
+from ..roofline import analysis as RA  # noqa: E402
+from ..train.train_step import make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+LM_ARCHS = tuple(a for a in ARCH_IDS if a != "nitrogen-db")
+
+
+def _abstract(tree, dtype=None):
+    def conv(x):
+        dt = dtype if (dtype is not None and x.dtype == jnp.float32) else x.dtype
+        return jax.ShapeDtypeStruct(x.shape, dt)
+    return jax.tree.map(conv, tree)
+
+
+def _microbatches(cfg, rows_per_dp: int) -> int:
+    """Grad-accum split: big models go to 1 row per DP shard per microbatch."""
+    if cfg.d_model >= 8192:
+        return max(rows_per_dp, 1)
+    if cfg.d_model >= 4096:
+        return max(rows_per_dp // 4, 1)
+    return 1
+
+
+def input_specs(cfg, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    S, B = sh["seq_len"], sh["global_batch"]
+    dp = SH.dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    specs = {}
+    if sh["kind"] == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.family in ("vlm", "audio"):
+            specs["memory"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    elif sh["kind"] == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.family in ("vlm", "audio"):
+            specs["memory"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return specs
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: dict | None = None):
+    """variant (perf-iteration knobs, EXPERIMENTS.md §Perf):
+    seq_axis, ssd_chunk, cast_params_once, kv_shard, attn_chunks, ce_chunk,
+    microbatches."""
+    import dataclasses
+    v = variant or {}
+    cfg = get_config(arch)
+    if "ssd_chunk" in v:
+        cfg = dataclasses.replace(cfg, ssd_chunk=v["ssd_chunk"])
+    if "moe_groups" in v:
+        cfg = dataclasses.replace(cfg, moe_groups=v["moe_groups"])
+    sh = SHAPES[shape_name]
+    S, B = sh["seq_len"], sh["global_batch"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    dp_size = 32 if multi_pod else 16
+    aparams = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    psh = SH.params_shardings(mesh, aparams)
+    specs = input_specs(cfg, shape_name, mesh)
+    bsh = SH.batch_shardings(mesh, has_memory="memory" in specs)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+            "seq_len": S, "global_batch": B, "kind": sh["kind"],
+            "variant": v or "baseline"}
+
+    with mesh:
+        with SH.activation_sharding(mesh, seq_axis=v.get("seq_axis")):
+            if sh["kind"] == "train":
+                aopt = jax.eval_shape(adamw.init_state, aparams)
+                osh = SH.opt_state_shardings(mesh, aopt, psh)
+                mb = v.get("microbatches", _microbatches(cfg, B // dp_size))
+                meta["microbatches"] = mb
+                step = make_train_step(
+                    cfg, adamw.OptConfig(), microbatches=mb,
+                    compute_dtype=jnp.bfloat16,
+                    ce_chunk=v.get("ce_chunk", 1024),
+                    attn_chunks=v.get("attn_chunks", (512, 1024)),
+                    has_memory="memory" in specs,
+                    remat=v.get("remat", True),
+                    cast_params_once=v.get("cast_params_once", False))
+                batch_in = {k: v for k, v in specs.items()}
+                bshard = {k: bsh[k] for k in batch_in}
+                jf = jax.jit(step,
+                             in_shardings=(psh, osh, bshard),
+                             out_shardings=(psh, osh, None),
+                             donate_argnums=(0, 1))
+                lowered = jf.lower(aparams, aopt, batch_in)
+            elif sh["kind"] == "prefill":
+                ap16 = _abstract(aparams, jnp.bfloat16)
+                psh16 = SH.params_shardings(mesh, ap16)
+
+                pf_chunks = v.get("attn_chunks", (1024, 1024))
+
+                def pf(p, tokens, memory=None):
+                    return T.prefill(cfg, p, tokens, memory=memory,
+                                     compute_dtype=jnp.bfloat16,
+                                     chunks=pf_chunks)
+
+                in_sh = [psh16, bsh["tokens"]]
+                args = [ap16, specs["tokens"]]
+                if "memory" in specs:
+                    in_sh.append(bsh["memory"])
+                    args.append(specs["memory"])
+                jf = jax.jit(pf, in_shardings=tuple(in_sh))
+                lowered = jf.lower(*args)
+            else:  # decode
+                ap16 = _abstract(aparams, jnp.bfloat16)
+                psh16 = SH.params_shardings(mesh, ap16)
+                acache = jax.eval_shape(
+                    lambda: T.init_cache(cfg, B, S, jnp.bfloat16,
+                                         memory_len=cfg.encoder_seq))
+                csh = SH.cache_shardings(mesh, acache, B,
+                                         kv_shard=v.get("kv_shard", "hd"))
+                dpa = SH.dp_axes(mesh)
+                dpa = dpa if len(dpa) > 1 else dpa[0]
+                tok_sh = NamedSharding(mesh, P(SH._maybe(mesh, dpa, B)))
+
+                def ds(p, token, cache):
+                    return T.decode_step(cfg, p, token, cache,
+                                         compute_dtype=jnp.bfloat16)
+
+                jf = jax.jit(ds, in_shardings=(psh16, tok_sh, csh),
+                             donate_argnums=(2,))
+                lowered = jf.lower(ap16, specs["token"], acache)
+
+            t0 = time.time()
+            compiled = lowered.compile()
+            meta["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    meta["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+    }
+    peak = (meta["memory"]["argument_bytes"] + meta["memory"]["output_bytes"]
+            + meta["memory"]["temp_bytes"] - meta["memory"]["alias_bytes"])
+    meta["memory"]["peak_bytes_per_device"] = peak
+    meta["memory"]["fits_16GB"] = bool(peak < 16 * 2**30)
+    ca = compiled.cost_analysis() or {}
+    meta["cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+    hlo = compiled.as_text()
+    stats = RA.analyze_hlo(hlo)
+    mf = RA.model_flops(cfg, sh["kind"], S, B)
+    if sh["kind"] == "train":
+        pass
+    roof = RA.roofline_terms(stats, model_flops_total=mf, chips=chips)
+    meta["hlo"] = {
+        "flops_per_chip": stats.flops,
+        "bytes_per_chip": stats.bytes_hbm,
+        "collective_bytes_per_chip": stats.collective_bytes,
+        "collectives": stats.collectives,
+        "while_loops": stats.while_loops,
+        "n_dots": stats.dots,
+    }
+    meta["roofline"] = roof.to_dict()
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="comma list or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+    archs = LM_ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+    with open(args.out, "a") as f:
+        for mesh_kind in meshes:
+            multi = mesh_kind == "multi"
+            mname = "2x16x16" if multi else "16x16"
+            for arch in archs:
+                cfg = get_config(arch)
+                for shape in shapes:
+                    if (arch, shape, mname) in done:
+                        continue
+                    ok, why = shape_applicable(cfg, shape)
+                    if not ok:
+                        rec = {"arch": arch, "shape": shape, "mesh": mname,
+                               "skipped": why}
+                        f.write(json.dumps(rec) + "\n")
+                        f.flush()
+                        print(f"[skip] {arch} x {shape} x {mname}: {why}")
+                        continue
+                    print(f"[cell] {arch} x {shape} x {mname} ...", flush=True)
+                    try:
+                        rec = lower_cell(arch, shape, multi)
+                        r = rec["roofline"]
+                        print(f"  ok compile={rec['compile_s']}s "
+                              f"dom={r['dominant']} "
+                              f"c={r['compute_s']*1e3:.1f}ms "
+                              f"m={r['memory_s']*1e3:.1f}ms "
+                              f"x={r['collective_s']*1e3:.1f}ms", flush=True)
+                    except Exception as e:
+                        rec = {"arch": arch, "shape": shape, "mesh": mname,
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                        print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading pod=2 axis
+    (512 chips). Requires the runtime to expose enough devices — the dry-run
+    sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+    import (see dryrun.py)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 512 if multi_pod else 256
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for {'multi' if multi_pod else 'single'}-pod "
+            f"mesh, have {len(devs)} — run under dryrun.py (which forces 512 "
+            "host devices) or on real hardware")
+    return jax.make_mesh(
+        shape, axes, devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over whatever devices exist (CI/dist tests)."""
+    import numpy as np
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,66 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 100 --reduced --ckpt-dir /tmp/ck [--mesh host:4x2]
+
+On a real cluster this process runs per host (jax.distributed.initialize is
+called when --coordinator is given); in this container use --reduced for a
+CPU-sized config, or --mesh host:DxM to exercise sharding over forced host
+devices (the dist tests do this in subprocesses).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default=None, help="default: arch's own")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized same-family config")
+    ap.add_argument("--mesh", default=None,
+                    help="host:DxM to shard over host devices")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for multi-host jax.distributed")
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        import jax
+        jax.distributed.initialize(args.coordinator, args.num_hosts,
+                                   args.host_id)
+
+    from ..configs import get_config
+    from ..data import DataConfig
+    from ..optim import OptConfig
+    from ..train import Trainer, TrainConfig
+
+    acfg = get_config(args.arch)
+    if args.reduced:
+        acfg = acfg.reduced()
+    ocfg = OptConfig(lr=args.lr, schedule=args.schedule or acfg.schedule,
+                     warmup_steps=max(args.steps // 20, 1),
+                     total_steps=args.steps)
+    dcfg = DataConfig(vocab=acfg.vocab, seq_len=args.seq_len,
+                      global_batch=args.global_batch,
+                      num_hosts=args.num_hosts, host_id=args.host_id)
+    tcfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every,
+                       microbatches=args.microbatches)
+    trainer = Trainer(acfg, ocfg, dcfg, tcfg)
+    trainer.run()
+    print(f"done: step {trainer.state.step}, "
+          f"final loss {trainer.metrics_history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

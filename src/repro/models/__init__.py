@@ -1,0 +1,1 @@
+from . import flash_attention, layers, moe, ssm, transformer  # noqa: F401

@@ -1,0 +1,183 @@
+"""Chunked (flash) attention in pure JAX with a custom VJP.
+
+Why pure JAX and not Pallas: the multi-pod dry-run must ``.lower().compile()``
+on any backend, and XLA:TPU already pipelines this scan pattern; the memory
+win (never materializing [Sq, Skv] scores) comes from the algorithm, and the
+custom VJP recomputes scores chunk-by-chunk in the backward pass, so training
+at 32k context holds O(S * chunk) activations instead of O(S^2).
+
+Supports: causal masking (requires Sq == Skv alignment), sliding-window
+(SWA), cross/non-causal attention, GQA (grouped kv heads), bf16 inputs with
+f32 online-softmax accumulation.
+
+Shapes: q [B, Sq, Hq, D]; k, v [B, Skv, Hkv, D]; Hq % Hkv == 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+_F32 = jnp.float32
+
+
+def _ein(spec, a, b):
+    return jnp.einsum(spec, a, b, preferred_element_type=_F32)
+
+
+def _mask_bias(q_pos, k_pos, k_valid, causal: bool, window: Optional[int]):
+    """[Cq, Ck] additive bias: 0 where attending, NEG_INF where masked."""
+    ok = jnp.broadcast_to(k_valid[None, :], (q_pos.shape[0], k_pos.shape[0]))
+    if causal:
+        ok = ok & (q_pos[:, None] >= k_pos[None, :])
+    if window is not None:
+        ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    scale: Optional[float] = None):
+    out, _ = _forward(q, k, v, causal, window, q_chunk, kv_chunk, scale)
+    return out
+
+
+def _pad_to(x, axis, mult):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+def _split(q, k, v, q_chunk, kv_chunk):
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    qck, kck = min(q_chunk, Sq), min(kv_chunk, Skv)
+    qp, Sq0 = _pad_to(q, 1, qck)
+    kp, Skv0 = _pad_to(k, 1, kck)
+    vp, _ = _pad_to(v, 1, kck)
+    nq, nk = qp.shape[1] // qck, kp.shape[1] // kck
+    G = Hq // Hkv
+    qc = qp.reshape(B, nq, qck, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)  # [nq,B,Hkv,G,Cq,D]
+    kc = kp.reshape(B, nk, kck, Hkv, D).transpose(1, 0, 3, 2, 4)        # [nk,B,Hkv,Ck,D]
+    vc = vp.reshape(B, nk, kck, Hkv, D).transpose(1, 0, 3, 2, 4)
+    return qc, kc, vc, (B, Hkv, G, D, qck, kck, nq, nk, Sq0, Skv0)
+
+
+def _forward(q, k, v, causal, window, q_chunk, kv_chunk, scale):
+    if causal and q.shape[1] != k.shape[1]:
+        raise ValueError("causal flash attention requires Sq == Skv; "
+                         "decode uses serve-side attention")
+    qc, kc, vc, (B, Hkv, G, D, qck, kck, nq, nk, Sq0, Skv0) = _split(
+        q, k, v, q_chunk, kv_chunk)
+    sc = (D ** -0.5) if scale is None else scale
+
+    def per_q_chunk(iq, qi):
+        q_pos = iq * qck + jnp.arange(qck)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            ik, ki, vi = xs
+            k_pos = ik * kck + jnp.arange(kck)
+            bias = _mask_bias(q_pos, k_pos, k_pos < Skv0, causal, window)
+            s = _ein("bhgqd,bhkd->bhgqk", qi, ki) * sc + bias[None, None, None]
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(m2 <= NEG_INF, 0.0, m2)
+            corr = jnp.exp(m - m_safe)
+            p = jnp.exp(s - m_safe[..., None])
+            l2 = l * corr + jnp.sum(p, axis=-1)
+            acc2 = acc * corr[..., None] + _ein("bhgqk,bhkd->bhgqd", p, vi)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, Hkv, G, qck), NEG_INF, _F32)
+        l0 = jnp.zeros((B, Hkv, G, qck), _F32)
+        a0 = jnp.zeros((B, Hkv, G, qck, D), _F32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    outs, lses = jax.lax.scan(
+        lambda _, x: (None, per_q_chunk(x[0], x[1])), None,
+        (jnp.arange(nq), qc))[1]
+    Hq = q.shape[2]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qck, Hq, D)
+    return out[:, :Sq0].astype(q.dtype), (lses, Sq0)
+
+
+def _fwd(q, k, v, causal, window, q_chunk, kv_chunk, scale):
+    out, (lse, _) = _forward(q, k, v, causal, window, q_chunk, kv_chunk, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, q_chunk, kv_chunk, scale, res, dout):
+    q, k, v, out, lse = res            # lse: [nq, B, Hkv, G, Cq] (f32)
+    qc, kc, vc, (B, Hkv, G, D, qck, kck, nq, nk, Sq0, Skv0) = _split(
+        q, k, v, q_chunk, kv_chunk)
+    doc = _split(dout, k, v, q_chunk, kv_chunk)[0]
+    oc = _split(out, k, v, q_chunk, kv_chunk)[0]
+    sc = (D ** -0.5) if scale is None else scale
+    delta = jnp.sum(doc.astype(_F32) * oc.astype(_F32), axis=-1)  # [nq,B,Hkv,G,Cq]
+
+    def per_kv_chunk(ik, ki, vi):
+        k_pos = ik * kck + jnp.arange(kck)
+        k_valid = k_pos < Skv0
+
+        def body(carry, xs):
+            dk, dv = carry
+            iq, qi, doi, lsei, di = xs
+            q_pos = iq * qck + jnp.arange(qck)
+            bias = _mask_bias(q_pos, k_pos, k_valid, causal, window)
+            s = _ein("bhgqd,bhkd->bhgqk", qi, ki) * sc + bias[None, None, None]
+            p = jnp.exp(s - lsei[..., None])       # [B,Hkv,G,Cq,Ck]
+            dv = dv + _ein("bhgqk,bhgqd->bhkd", p, doi)
+            dp = _ein("bhgqd,bhkd->bhgqk", doi, vi)
+            ds = p * (dp - di[..., None]) * sc
+            dk = dk + _ein("bhgqk,bhgqd->bhkd", ds, qi)
+            dq_i = _ein("bhgqk,bhkd->bhgqd", ds, ki)
+            return (dk, dv), dq_i
+
+        zk = jnp.zeros((B, Hkv, kck, D), _F32)
+        (dk, dv), dqs = jax.lax.scan(
+            body, (zk, zk), (jnp.arange(nq), qc, doc, lse, delta))
+        return dk, dv, dqs                        # dqs: [nq,B,Hkv,G,Cq,D]
+
+    def outer(dq_acc, xs):
+        ik, ki, vi = xs
+        dk_i, dv_i, dqs = per_kv_chunk(ik, ki, vi)
+        return dq_acc + dqs, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((nq, B, Hkv, G, qck, D), _F32)
+    dq_acc, (dks, dvs) = jax.lax.scan(outer, dq0, (jnp.arange(nk), kc, vc))
+    Hq = q.shape[2]
+    dq = dq_acc.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qck, Hq, D)[:, :Sq0]
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(B, nk * kck, Hkv, D)[:, :Skv0]
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(B, nk * kck, Hkv, D)[:, :Skv0]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def attention_reference(q, k, v, causal=True, window=None, scale=None):
+    """Naive O(S^2) oracle (tests only)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    sc = (D ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = _ein("bqhgd,bkhd->bhgqk", qg, k) * sc
+    bias = _mask_bias(jnp.arange(Sq), jnp.arange(Skv),
+                      jnp.ones(Skv, bool), causal, window)
+    s = s + bias[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = _ein("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

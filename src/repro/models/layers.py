@@ -1,0 +1,195 @@
+"""Shared neural net layers: norms, RoPE, attention blocks, MLPs.
+
+Functional style: params are plain dicts of jnp arrays; every `init_*`
+returns a dict and every `apply`-style function is pure. Compute runs in
+``compute_dtype`` (bf16 in production) with f32 norms/softmax.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+Init = jax.nn.initializers
+
+
+def _dense_init(rng, shape, in_axis=0):
+    fan_in = shape[in_axis]
+    return jax.random.normal(rng, shape, jnp.float32) * (fan_in ** -0.5)
+
+
+def rms_norm(x, weight, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * weight).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: [B, S, H, D]; positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [B,S,half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ attention
+def init_attention(cfg, rng, cross: bool = False):
+    hd = cfg.hd
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, cfg.n_heads * hd)),
+        "wk": _dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd)),
+        "wv": _dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd)),
+        "wo": _dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg, p, x, kv_src, positions, kv_positions, use_rope: bool):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"].astype(x.dtype)).reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"].astype(x.dtype)).reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(cfg, p, x, positions, *, causal=True, window=None,
+                    q_chunk=512, kv_chunk=512, return_kv=False):
+    """Self attention over x; used by train forward and prefill."""
+    q, k, v = _project_qkv(cfg, p, x, x, positions, positions, use_rope=True)
+    o = flash_attention(q, k, v, causal, window, q_chunk, kv_chunk)
+    o = o.reshape(x.shape[0], x.shape[1], -1) @ p["wo"].astype(x.dtype)
+    return (o, (k, v)) if return_kv else o
+
+
+def cross_attention_block(cfg, p, x, memory, *, return_kv=False, kv=None):
+    """Cross attention to encoder/vision memory (no mask, no rope)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    if kv is None:
+        m = memory.astype(x.dtype)
+        k = (m @ p["wk"].astype(x.dtype)).reshape(B, m.shape[1], cfg.n_kv_heads, hd)
+        v = (m @ p["wv"].astype(x.dtype)).reshape(B, m.shape[1], cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    else:
+        k, v = kv
+    o = flash_attention(q, k, v, False, None, 512, 512)
+    o = o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+    return (o, (k, v)) if return_kv else o
+
+
+def decode_attention(cfg, p, x1, k_cache, v_cache, lengths, positions):
+    """One-token attention against a (possibly longer) KV cache.
+
+    x1: [B, 1, D]; k_cache/v_cache: [B, Smax, Hkv, hd]; lengths: [B] valid
+    prefix per sequence (the new token is already written at lengths-1).
+    """
+    B = x1.shape[0]
+    hd = cfg.hd
+    G = cfg.n_heads // cfg.n_kv_heads
+    q = (x1 @ p["wq"].astype(x1.dtype)).reshape(B, 1, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = rope(q, positions[:, None], cfg.rope_theta)
+    qg = q.reshape(B, 1, cfg.n_kv_heads, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    k_pos = jnp.arange(k_cache.shape[1])
+    ok = k_pos[None, :] < lengths[:, None]
+    if cfg.window is not None:
+        ok = ok & (k_pos[None, :] > lengths[:, None] - 1 - cfg.window)
+    s = jnp.where(ok[:, None, None, None, :], s, -1e30)
+    pbs = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pbs, v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, cfg.n_heads * hd).astype(x1.dtype) @ p["wo"].astype(x1.dtype)
+    return o
+
+
+def append_attention(cfg, p, x, k_cache, v_cache, start, *, window=None):
+    """Prefix-continue attention: St new tokens (already written into the
+    cache at [start, start+St)) attend causally over cache[0:start+St).
+    Used by prefill-with-prefix-reuse; x: [B, St, D]; start: scalar."""
+    B, St, _ = x.shape
+    hd = cfg.hd
+    G = cfg.n_heads // cfg.n_kv_heads
+    positions = start + jnp.arange(St)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, St, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    qg = q.reshape(B, St, cfg.n_kv_heads, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    k_pos = jnp.arange(k_cache.shape[1])
+    ok = (k_pos[None, :] <= positions[:, None])          # causal, absolute pos
+    if window is not None:
+        ok = ok & (positions[:, None] - k_pos[None, :] < window)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    pbs = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pbs, v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, St, cfg.n_heads * hd).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return o
+
+
+def project_kv_token(cfg, p, x1, positions):
+    """K/V for one new token (decode cache append)."""
+    B = x1.shape[0]
+    hd = cfg.hd
+    k = (x1 @ p["wk"].astype(x1.dtype)).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x1 @ p["wv"].astype(x1.dtype)).reshape(B, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    k = rope(k, positions[:, None], cfg.rope_theta)
+    return k, v
+
+
+# ------------------------------------------------------------------ MLP
+def init_mlp(cfg, rng):
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w_gate": _dense_init(ks[0], (cfg.d_model, cfg.d_ff)),
+            "w_up": _dense_init(ks[1], (cfg.d_model, cfg.d_ff)),
+            "w_down": _dense_init(ks[2], (cfg.d_ff, cfg.d_model)),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (cfg.d_model, cfg.d_ff)),
+        "w_down": _dense_init(ks[1], (cfg.d_ff, cfg.d_model)),
+    }
+
+
+def mlp_block(cfg, p, x):
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    elif cfg.mlp_act == "sqrelu":                 # nemotron-4: squared ReLU
+        h = jnp.square(jax.nn.relu(x @ p["w_up"].astype(x.dtype)))
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype))
+    else:
+        raise ValueError(cfg.mlp_act)
+    return h @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,126 @@
+"""Mixture-of-experts FFN with capacity-based gather/scatter dispatch.
+
+Routing top-k runs as a *k-ary tournament* (iterated masked wide argmax) —
+the same compare-reduce primitive family as the paper's k-ary search
+(DESIGN.md §2.2) — validated against jax.lax.top_k in tests.
+
+Dispatch is sort-free gather/scatter (not the GShard one-hot einsum): token
+slots per expert are materialized as integer indices, so HLO FLOPs count
+only the real expert matmuls (2 * E * C * D * F), keeping the roofline
+analysis honest. Tokens over capacity are dropped (standard capacity-factor
+semantics); the aux load-balance loss pushes the router toward uniform.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+
+def tournament_topk(scores: jnp.ndarray, k: int):
+    """Top-k over the last axis by iterated wide argmax (ties -> lowest
+    index, matching lax.top_k). scores: [..., E]."""
+    vals, idxs = [], []
+    s = scores
+    for _ in range(k):
+        i = jnp.argmax(s, axis=-1)
+        v = jnp.take_along_axis(s, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i)
+        s = s.at[..., :].set(
+            jnp.where(jax.nn.one_hot(i, s.shape[-1], dtype=bool), -jnp.inf, s))
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def init_moe(cfg, rng):
+    ks = jax.random.split(rng, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": _dense_init(ks[0], (D, E)),
+        "w_gate": jax.vmap(lambda r: _dense_init(r, (D, F)))(jax.random.split(ks[1], E)),
+        "w_up": jax.vmap(lambda r: _dense_init(r, (D, F)))(jax.random.split(ks[2], E)),
+        "w_down": jax.vmap(lambda r: _dense_init(r, (F, D)))(jax.random.split(ks[3], E)),
+    }
+    if cfg.shared_expert:
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _dense_init(ks2[0], (D, F)),
+            "w_up": _dense_init(ks2[1], (D, F)),
+            "w_down": _dense_init(ks2[2], (F, D)),
+        }
+    return p
+
+
+def _dispatch_slots(expert_ids: jnp.ndarray, E: int, C: int):
+    """expert_ids: [Tk] flattened (token, k) assignments. Returns
+    slot_of [Tk] in [0, E*C] (E*C = dropped) and token_of_slot [E*C]."""
+    Tk = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    # position of each routed pair within its expert bucket
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=expert_ids.dtype))
+    pos = jnp.arange(Tk, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < C
+    slot_sorted = jnp.where(keep, sorted_e.astype(jnp.int32) * C + pos, E * C)
+    slot_of = jnp.zeros((Tk,), jnp.int32).at[order].set(slot_sorted)
+    token_of_slot = jnp.full((E * C + 1,), Tk, jnp.int32).at[slot_sorted].set(
+        order.astype(jnp.int32), mode="drop")
+    return slot_of, token_of_slot[: E * C]
+
+
+def moe_block(cfg, p, x):
+    """x: [B, S, D] -> ([B, S, D], aux_loss). Routing/dispatch in f32.
+
+    dispatch_groups (cfg.moe_groups > 1): GShard-style grouped dispatch —
+    the argsort/capacity machinery runs independently inside each group of
+    T/G tokens, so under pjit a group count aligned with the DP axis keeps
+    the sort shard-local (no global-sort all-gathers; the win is measured in
+    EXPERIMENTS.md §Perf cell D). Capacity is per group: C_g = C / G.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.topk
+    T = B * S
+    G = max(getattr(cfg, "moe_groups", 1), 1)
+    if T % G:
+        G = 1                 # e.g. decode at B < groups: ungrouped fallback
+    Tg = T // G
+    xt = x.reshape(T, D)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    gate_v, gate_i = tournament_topk(logits, k)           # [T,k]
+    weights = jax.nn.softmax(gate_v, axis=-1)             # mixtral-style renorm
+    C = max(int(Tg * k / E * cfg.capacity_factor), 1)     # per-group capacity
+
+    flat_e = gate_i.reshape(G, Tg * k)
+    slot_of, token_of_slot = jax.vmap(
+        lambda e: _dispatch_slots(e, E, C))(flat_e)       # [G,Tg*k], [G,E*C]
+    # gather tokens into [G, E, C, D] (dropped slots read token Tg -> zero pad)
+    xg = xt.reshape(G, Tg, D)
+    xp = jnp.concatenate([xg, jnp.zeros((G, 1, D), xt.dtype)], axis=1)
+    grouped = jnp.take_along_axis(
+        xp, jnp.minimum(token_of_slot // k, Tg)[..., None], axis=1
+    ).reshape(G, E, C, D)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", grouped, p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", grouped, p["w_up"].astype(x.dtype))
+    y_grouped = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+
+    # scatter back: each routed pair reads its slot (dropped -> zeros row)
+    y_flat = jnp.concatenate(
+        [y_grouped.reshape(G, E * C, D),
+         jnp.zeros((G, 1, D), y_grouped.dtype)], axis=1)
+    per_pair = jnp.take_along_axis(
+        y_flat, slot_of[..., None], axis=1).reshape(T, k, D)
+    y = jnp.sum(per_pair * weights[..., None].astype(x.dtype), axis=1)
+
+    if cfg.shared_expert:
+        sp = p["shared"]
+        hs = jax.nn.silu(xt @ sp["w_gate"].astype(x.dtype)) * (xt @ sp["w_up"].astype(x.dtype))
+        y = y + hs @ sp["w_down"].astype(x.dtype)
+
+    # switch-style load balance loss
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_routed = jnp.mean(
+        (jax.nn.one_hot(gate_i, E).sum(axis=1) > 0).astype(jnp.float32), axis=0)
+    aux = E * jnp.sum(frac_routed * jnp.mean(probs, axis=0))
+    return y.reshape(B, S, D), aux

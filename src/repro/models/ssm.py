@@ -1,0 +1,185 @@
+"""Mamba2 block — SSD (state-space duality) chunked scan + decode recurrence.
+
+Recurrence per head h (state N, head dim P):
+    h_t = a_t * h_{t-1} + dt_t * (B_t outer x_t)        a_t = exp(-exp(A_log) dt_t)
+    y_t = C_t . h_t + D * x_t
+SSD form: the sequence is chunked; within a chunk the contribution is a
+masked quadratic form (the "attention-like" dual), across chunks a small
+scan carries the [H, P, N] state — sub-quadratic in S and the reason the
+``long_500k`` shape is runnable for mamba2/jamba.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, rms_norm
+
+
+def dims(cfg):
+    H = cfg.d_model * 2 // cfg.ssm_headdim          # expand factor 2
+    d_inner = H * cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return H, d_inner, conv_dim
+
+
+def init_mamba(cfg, rng):
+    H, d_inner, conv_dim = dims(cfg)
+    ks = jax.random.split(rng, 4)
+    d_in_proj = 2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + H
+    return {
+        "in_proj": _dense_init(ks[0], (cfg.d_model, d_in_proj)),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.2,
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),   # softplus(-2) ~ 0.12
+        "gate_norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (d_inner, cfg.d_model)),
+    }
+
+
+def _causal_conv(xbc, w, state=None):
+    """Depthwise causal conv, kernel k. xbc: [B, S, C]; state: [B, k-1, C]
+    (decode carry). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)
+    y = sum(full[:, i: i + xbc.shape[1]] * w[i][None, None, :].astype(xbc.dtype)
+            for i in range(k))
+    new_state = full[:, full.shape[1] - (k - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(cfg, zxbcdt):
+    H, d_inner, _ = dims(cfg)
+    GN = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * GN]
+    dt = zxbcdt[..., 2 * d_inner + 2 * GN:]
+    return z, xbc, dt
+
+
+def _expand_heads(t, H):
+    """[B,...,G,N] -> [B,...,H,N]: head h reads group h // (H//G)."""
+    G = t.shape[-2]
+    if G == H:
+        return t
+    return jnp.repeat(t, H // G, axis=-2)
+
+
+def ssd_chunked(x, a_log, dt, B_, C_, chunk, h0=None):
+    """x: [B,S,H,P]; a_log: [B,S,H] (log decay, <=0); dt: [B,S,H];
+    B_,C_: [B,S,G,N]. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc, cs = S // chunk, chunk
+
+    def resh(t):
+        return t.reshape((Bb, nc, cs) + t.shape[2:])
+
+    xc = resh(x).astype(jnp.float32)
+    ac, dtc = resh(a_log), resh(dt)
+    Bh = _expand_heads(resh(B_), H).astype(jnp.float32)   # [B,nc,cs,H,N]
+    Ch = _expand_heads(resh(C_), H).astype(jnp.float32)
+    cum = jnp.cumsum(ac, axis=2)                          # [B,nc,cs,H]
+
+    # intra-chunk (the quadratic dual):
+    #   y_t += sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t . B_s) x_s
+    CB = jnp.einsum("bcthn,bcshn->bchts", Ch, Bh,
+                    preferred_element_type=jnp.float32)   # [B,nc,H,cs,cs]
+    q_cum = cum.transpose(0, 1, 3, 2)                     # [B,nc,H,cs]
+    decay = jnp.exp(q_cum[..., :, None] - q_cum[..., None, :])
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    M = jnp.where(mask[None, None, None], CB * decay, 0.0)
+    M = M * dtc.transpose(0, 1, 3, 2)[..., None, :]       # * dt_s
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", M, xc)
+
+    # per-chunk boundary state: sum_s exp(cum_T - cum_s) dt_s (B_s outer x_s)
+    last = cum[:, :, -1:, :]                              # [B,nc,1,H]
+    w = (jnp.exp(last - cum) * dtc)                       # [B,nc,cs,H]
+    states = jnp.einsum("bcsh,bcshn,bcshp->bchpn", w, Bh, xc)
+    chunk_decay = jnp.exp(last[:, :, 0, :])               # [B,nc,H]
+
+    def scan_body(h, xs):
+        st, cd = xs                                       # [B,H,P,N], [B,H]
+        return h * cd[..., None, None] + st, h
+
+    h_init = jnp.zeros((Bb, H, P, N), jnp.float32) if h0 is None else h0
+    h_final, h_prevs = jax.lax.scan(
+        scan_body, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # state BEFORE each chunk
+
+    # inter-chunk: y_t += exp(cum_t) * (C_t . h_prev)
+    y_inter = jnp.einsum("bcthn,bchpn->bcthp", Ch, h_prevs) \
+        * jnp.exp(cum).transpose(0, 1, 2, 3)[..., None]
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, h_final
+
+
+def mamba_block(cfg, p, x, conv_state=None, ssm_state=None, chunk=256,
+                return_state=False):
+    """Full mamba2 mixer. x: [B,S,D]. For decode pass S==1 with states."""
+    H, d_inner, conv_dim = dims(cfg)
+    P, G, N = cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    B_, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    decode = S == 1 and ssm_state is not None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xs = xbc[..., :d_inner].reshape(B_, S, H, P)
+    Bmat = xbc[..., d_inner: d_inner + G * N].reshape(B_, S, G, N)
+    Cmat = xbc[..., d_inner + G * N:].reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # [B,S,H]
+    a_log = -jnp.exp(p["A_log"])[None, None, :] * dt                # [B,S,H]
+
+    if decode:
+        a = jnp.exp(a_log[:, 0])                                    # [B,H]
+        Bh = _expand_heads(Bmat[:, 0], H).astype(jnp.float32)       # [B,H,N]
+        Ch = _expand_heads(Cmat[:, 0], H).astype(jnp.float32)
+        upd = (dt[:, 0, :, None, None] * Bh[:, :, None, :]
+               * xs[:, 0, :, :, None].astype(jnp.float32))
+        h_new = ssm_state * a[..., None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h_new)
+        y = y[:, None] + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        h_final = h_new
+    else:
+        pad = (-S) % chunk
+        if pad:
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_p = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C_p = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            xs_p, a_p, dt_p, B_p, C_p = xs, a_log, dt, Bmat, Cmat
+        y, h_final = ssd_chunked(xs_p, a_p, dt_p, B_p, C_p,
+                                 min(chunk, xs_p.shape[1]), h0=ssm_state)
+        y = y[:, :S] + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, (new_conv, h_final)
+    return out
+
+
+def naive_recurrence(x, a_log, dt, B_, C_, h0=None):
+    """O(S) per-step oracle for tests. Same shapes as ssd_chunked."""
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    h = jnp.zeros((Bb, H, P, N)) if h0 is None else h0
+    ys = []
+    for t in range(S):
+        a = jnp.exp(a_log[:, t])                                   # [B,H]
+        Bh = jnp.repeat(B_[:, t], rep, axis=1)
+        Ch = jnp.repeat(C_[:, t], rep, axis=1)
+        h = h * a[..., None, None] + (dt[:, t, :, None, None]
+                                      * Bh[:, :, None, :] * x[:, t, :, :, None])
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Ch, h))
+    return jnp.stack(ys, axis=1), h

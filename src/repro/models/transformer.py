@@ -1,0 +1,360 @@
+"""Config-driven transformer family: decoder LMs (dense / MoE / SSM /
+hybrid), encoder-decoder (whisper) and cross-attention VLM backbones.
+
+Layers run as a ``lax.scan`` over pattern *groups*: the layer pattern of
+period P (e.g. jamba's 8-layer mamba/attn interleave) is unrolled inside the
+scan body, and parameters are stacked [repeats, ...] per pattern position —
+one compiled group regardless of depth, which keeps dry-run compiles fast
+and HLO small (the roofline analyzer multiplies loop bodies back out).
+
+Modality frontends are stubs per the assignment: VLM/audio expect
+precomputed patch/frame embeddings at d_model ("memory").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from ..dist.sharding import constrain_activations
+
+
+# =============================================================== init
+def _init_block(cfg, rng, spec):
+    ks = jax.random.split(rng, 8)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if spec["mixer"] == "attn":
+        p["attn"] = L.init_attention(cfg, ks[0])
+    else:
+        p["mamba"] = SSM.init_mamba(cfg, ks[0])
+    if spec["cross"]:
+        p["ln_cross"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["cross"] = L.init_attention(cfg, ks[1], cross=True)
+    if spec["ffn"] == "dense":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = L.init_mlp(cfg, ks[2])
+    elif spec["ffn"] == "moe":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["moe"] = MOE.init_moe(cfg, ks[2])
+    return p
+
+
+def init_params(cfg, rng):
+    ks = jax.random.split(rng, 6)
+    vp = cfg.padded_vocab            # shardable size; pad cols masked in logits
+    params = {
+        "embed": jax.random.normal(ks[0], (vp, cfg.d_model), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(ks[1], (cfg.d_model, vp))
+    # decoder blocks: stacked [repeats, ...] per pattern position
+    blocks = {}
+    for p_i in range(cfg.period):
+        spec = cfg.layer_spec(p_i)
+        rngs = jax.random.split(jax.random.fold_in(ks[2], p_i), cfg.repeats)
+        blocks[f"p{p_i}"] = jax.vmap(
+            lambda r: _init_block(cfg, r, spec))(rngs)
+    params["blocks"] = blocks
+    if cfg.is_encoder_decoder:
+        enc_spec = {"mixer": "attn", "cross": False, "ffn": "dense"}
+        rngs = jax.random.split(ks[3], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda r: _init_block(cfg, r, enc_spec))(rngs),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# =============================================================== blocks
+def _apply_block(cfg, spec, bp, x, positions, memory, cross_kv, chunks):
+    """One transformer block (pre-norm residual). Returns (x, aux, kv)."""
+    aux = jnp.float32(0.0)
+    kv = {}
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if spec["mixer"] == "attn":
+        h, (k_, v_) = L.attention_block(
+            cfg, bp["attn"], h, positions, causal=True, window=cfg.window,
+            q_chunk=chunks[0], kv_chunk=chunks[1], return_kv=True)
+        kv["k"], kv["v"] = k_, v_
+    else:
+        h, (conv_s, ssm_s) = SSM.mamba_block(cfg, bp["mamba"], h,
+                                             chunk=cfg.ssd_chunk,
+                                             return_state=True)
+        kv["conv"], kv["ssm"] = conv_s, ssm_s
+    x = x + h
+    if spec["cross"]:
+        h = L.rms_norm(x, bp["ln_cross"], cfg.norm_eps)
+        h, (ck, cv) = L.cross_attention_block(cfg, bp["cross"], h, memory,
+                                              return_kv=True, kv=cross_kv)
+        kv["ck"], kv["cv"] = ck, cv
+        x = x + h
+    if spec["ffn"] == "dense":
+        x = x + L.mlp_block(cfg, bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+    elif spec["ffn"] == "moe":
+        y, aux = MOE.moe_block(cfg, bp["moe"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+        x = x + y
+    return x, aux, kv
+
+
+def _run_blocks(cfg, params, x, positions, memory, *, remat,
+                chunks=(512, 512), collect_cache: bool = False):
+    """Scan over repeats; pattern unrolled inside. Returns (x, aux, cache).
+
+    remat: False | True/'group' (checkpoint the whole pattern group) |
+    'block' (checkpoint every block — the backward working set is one block,
+    not one period group; matters for period-8 hybrids like jamba)."""
+    specs = [cfg.layer_spec(i) for i in range(cfg.period)]
+
+    def one_block(p_i):
+        def f(bp, x):
+            return _apply_block(cfg, specs[p_i], bp, x, positions, memory,
+                                None, chunks)
+        return f
+
+    def group(x, gp):
+        aux = jnp.float32(0.0)
+        kvs = {}
+        for p_i in range(cfg.period):
+            bfn = one_block(p_i)
+            if remat == "block":
+                bfn = jax.checkpoint(
+                    bfn, policy=jax.checkpoint_policies.nothing_saveable)
+            x, a, kv = bfn(gp[f"p{p_i}"], x)
+            aux = aux + a
+            if collect_cache:
+                kvs[f"p{p_i}"] = kv
+        return x, aux, kvs
+
+    gfn = group
+    if remat and remat != "block":
+        gfn = jax.checkpoint(group, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, gp):
+        x, aux = carry
+        x, a, kvs = gfn(x, gp)
+        x = constrain_activations(x)      # no-op outside a sharding context
+        return (x, aux + a), kvs
+
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    return x, aux, caches
+
+
+# =============================================================== public api
+def encode(cfg, params, memory, compute_dtype=jnp.bfloat16):
+    """Encoder stack over stub-frontend embeddings (whisper)."""
+    x = memory.astype(compute_dtype)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, bp):
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        h = L.attention_block(cfg, bp["attn"], h, pos, causal=False)
+        x = x + h
+        x = x + L.mlp_block(cfg, bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return L.rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(cfg, params, tokens, memory=None, *, remat: bool = True,
+            compute_dtype=jnp.bfloat16, chunks=(512, 512)):
+    """Training/prefill forward -> (hidden [B,S,D], aux_loss). Logits are
+    computed by the caller (chunked CE for training; last-token for serve)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    positions = jnp.arange(tokens.shape[1])
+    if cfg.is_encoder_decoder:
+        memory = encode(cfg, params, memory, compute_dtype)
+    elif memory is not None:
+        memory = memory.astype(compute_dtype)
+    x, aux, _ = _run_blocks(cfg, params, x, positions, memory, remat=remat,
+                            chunks=chunks)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def mask_padded_vocab(cfg, logits):
+    """-inf the padded logit columns (cols >= real vocab)."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    col = jnp.arange(logits.shape[-1])
+    return jnp.where(col >= cfg.vocab, -1e30, logits)
+
+
+def logits_of(cfg, params, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return mask_padded_vocab(
+        cfg, (hidden @ w.astype(hidden.dtype)).astype(jnp.float32))
+
+
+# =============================================================== serving
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               memory_len: int = 0):
+    """Zeroed decode cache pytree (shapes only matter for dry-run specs)."""
+    R, hd = cfg.repeats, cfg.hd
+    cache = {"lengths": jnp.zeros((batch,), jnp.int32), "layers": {}}
+    H, d_inner, conv_dim = (SSM.dims(cfg) if (cfg.family in ("ssm", "hybrid"))
+                            else (0, 0, 0))
+    for p_i in range(cfg.period):
+        spec = cfg.layer_spec(p_i)
+        ent = {}
+        if spec["mixer"] == "attn":
+            # NOTE: SWA (mixtral) keeps a full-length cache and masks by
+            # window; a ring buffer would cap it at window+1 (future perf).
+            ent["k"] = jnp.zeros((R, batch, max_len, cfg.n_kv_heads, hd), dtype)
+            ent["v"] = jnp.zeros((R, batch, max_len, cfg.n_kv_heads, hd), dtype)
+        else:
+            ent["conv"] = jnp.zeros((R, batch, cfg.ssm_conv - 1, conv_dim), dtype)
+            ent["ssm"] = jnp.zeros((R, batch, H, cfg.ssm_headdim, cfg.ssm_state),
+                                   jnp.float32)
+        if spec["cross"]:
+            ent["ck"] = jnp.zeros((R, batch, memory_len, cfg.n_kv_heads, hd), dtype)
+            ent["cv"] = jnp.zeros((R, batch, memory_len, cfg.n_kv_heads, hd), dtype)
+        cache["layers"][f"p{p_i}"] = ent
+    return cache
+
+
+def prefill(cfg, params, tokens, memory=None, *, compute_dtype=jnp.bfloat16,
+            max_len: Optional[int] = None, chunks=(512, 512)):
+    """Run the prompt, build the decode cache. Returns (last_logits, cache)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    positions = jnp.arange(S)
+    if cfg.is_encoder_decoder:
+        memory = encode(cfg, params, memory, compute_dtype)
+    elif memory is not None:
+        memory = memory.astype(compute_dtype)
+    x, _, kvs = _run_blocks(cfg, params, x, positions, memory, remat=False,
+                            chunks=chunks, collect_cache=True)
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = init_cache(cfg, B, max_len, compute_dtype,
+                       memory_len=memory.shape[1] if memory is not None else 0)
+    cache["lengths"] = jnp.full((B,), S, jnp.int32)
+    for p_i in range(cfg.period):
+        ent = cache["layers"][f"p{p_i}"]
+        got = {k: v for k, v in kvs[f"p{p_i}"].items()}
+        if "k" in ent:
+            k_, v_ = got["k"], got["v"]            # [R,B,S,Hkv,hd]
+            ent["k"] = jax.lax.dynamic_update_slice(
+                ent["k"], k_.astype(ent["k"].dtype), (0, 0, 0, 0, 0))
+            ent["v"] = jax.lax.dynamic_update_slice(
+                ent["v"], v_.astype(ent["v"].dtype), (0, 0, 0, 0, 0))
+        if "conv" in ent:
+            ent["conv"] = got["conv"].astype(ent["conv"].dtype)
+            ent["ssm"] = got["ssm"]
+        if "ck" in ent:
+            ent["ck"] = got["ck"].astype(ent["ck"].dtype)
+            ent["cv"] = got["cv"].astype(ent["cv"].dtype)
+    return logits_of(cfg, params, hidden[:, -1:])[:, 0], cache
+
+
+def prefill_continue(cfg, params, tokens, cache, start, *,
+                     compute_dtype=jnp.bfloat16):
+    """Continue a prefill from position `start` (prefix pages already in the
+    cache) — the serving path behind prefix reuse.  Attention-only archs
+    (SSM/hybrid states are not pageable; enc-dec cross K/V are memory-bound
+    to the request): see DESIGN.md §5."""
+    assert cfg.family in ("dense", "moe"), \
+        f"prefix-continue requires a pageable (pure-attention) arch, got {cfg.family}"
+    B, St = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    positions = start + jnp.arange(St)
+    specs = [cfg.layer_spec(i) for i in range(cfg.period)]
+
+    def body(x, xs):
+        gp, gc = xs
+        new_c = {}
+        for p_i in range(cfg.period):
+            spec, bp, ent = specs[p_i], gp[f"p{p_i}"], gc[f"p{p_i}"]
+            out = {}
+            h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            k1, v1 = L._project_qkv(cfg, bp["attn"], h, h, positions,
+                                    positions, use_rope=True)[1:]
+            kc = jax.lax.dynamic_update_slice(
+                ent["k"], k1.astype(ent["k"].dtype), (0, start, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                ent["v"], v1.astype(ent["v"].dtype), (0, start, 0, 0))
+            h = L.append_attention(cfg, bp["attn"], h, kc, vc, start,
+                                   window=cfg.window)
+            out["k"], out["v"] = kc, vc
+            x = x + h
+            if spec["ffn"] == "dense":
+                x = x + L.mlp_block(cfg, bp["mlp"],
+                                    L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+            elif spec["ffn"] == "moe":
+                y, _ = MOE.moe_block(cfg, bp["moe"],
+                                     L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+                x = x + y
+            new_c[f"p{p_i}"] = out
+        return x, new_c
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_of(cfg, params, hidden[:, -1:])[:, 0]
+    new_cache = {"lengths": jnp.full_like(cache["lengths"], start + St),
+                 "layers": new_layers}
+    return logits, new_cache
+
+
+def decode_step(cfg, params, token, cache, *, compute_dtype=jnp.bfloat16):
+    """One token for every sequence. token: [B] int32. Returns
+    (logits [B,V], new_cache). Ragged lengths per sequence supported."""
+    B = token.shape[0]
+    lengths = cache["lengths"]                      # valid BEFORE this step
+    x = jnp.take(params["embed"], token, axis=0)[:, None].astype(compute_dtype)
+    specs = [cfg.layer_spec(i) for i in range(cfg.period)]
+
+    def body(x, xs):
+        gp, gc = xs                                 # per-repeat params + cache
+        new_c = {}
+        for p_i in range(cfg.period):
+            spec, bp, ent = specs[p_i], gp[f"p{p_i}"], gc[f"p{p_i}"]
+            out = {}
+            h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+            if spec["mixer"] == "attn":
+                kv_len = ent["k"].shape[1]
+                wpos = jnp.minimum(lengths, kv_len - 1)
+                k1, v1 = L.project_kv_token(cfg, bp["attn"], h, lengths)
+                kc = jax.vmap(lambda c, t, l: jax.lax.dynamic_update_slice(
+                    c, t, (l, 0, 0)))(ent["k"], k1[:, 0][:, None], wpos)
+                vc = jax.vmap(lambda c, t, l: jax.lax.dynamic_update_slice(
+                    c, t, (l, 0, 0)))(ent["v"], v1[:, 0][:, None], wpos)
+                h = L.decode_attention(cfg, bp["attn"], h, kc, vc,
+                                       lengths + 1, lengths)
+                out["k"], out["v"] = kc, vc
+            else:
+                h, (conv_s, ssm_s) = SSM.mamba_block(
+                    cfg, bp["mamba"], h, conv_state=ent["conv"],
+                    ssm_state=ent["ssm"], return_state=True)
+                out["conv"], out["ssm"] = conv_s.astype(ent["conv"].dtype), ssm_s
+            x = x + h
+            if spec["cross"]:
+                h = L.rms_norm(x, bp["ln_cross"], cfg.norm_eps)
+                h = L.cross_attention_block(cfg, bp["cross"], h, None,
+                                            kv=(ent["ck"], ent["cv"]))
+                x = x + h
+                out["ck"], out["cv"] = ent["ck"], ent["cv"]
+            if spec["ffn"] == "dense":
+                x = x + L.mlp_block(cfg, bp["mlp"],
+                                    L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+            elif spec["ffn"] == "moe":
+                y, _ = MOE.moe_block(cfg, bp["moe"],
+                                     L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+                x = x + y
+            new_c[f"p{p_i}"] = out
+        return x, new_c
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_of(cfg, params, hidden)[:, 0]
+    new_cache = {"lengths": lengths + 1, "layers": new_layers}
+    return logits, new_cache

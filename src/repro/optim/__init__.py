@@ -1,0 +1,1 @@
+from .adamw import OptConfig, init_state, apply_updates, schedule_fn, global_norm  # noqa: F401

@@ -1,0 +1,100 @@
+"""AdamW with global-norm clipping and WSD / cosine / linear schedules.
+
+Self-contained (no optax): state is a pytree {m, v, count}; the update is a
+pure function so it jits/shards under pjit with the same PartitionSpecs as
+the parameters (m and v inherit the param sharding).
+
+WSD (warmup-stable-decay) is the minicpm-2b schedule from the assignment:
+linear warmup -> long flat stable phase -> short decay tail.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"          # cosine | wsd | linear | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    wsd_decay_frac: float = 0.1       # fraction of total spent in decay
+
+
+def schedule_fn(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        mult = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = 1.0 - cfg.wsd_decay_frac
+        mult = jnp.where(t < decay_start, 1.0,
+                         1.0 - (t - decay_start) / cfg.wsd_decay_frac)
+        mult = jnp.maximum(mult, 0.0)
+    elif cfg.schedule == "linear":
+        mult = 1.0 - t
+    elif cfg.schedule == "const":
+        mult = 1.0
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * mult
+
+
+def init_state(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path_leaf):
+    """No weight decay for norms/biases/1-D params (standard)."""
+    return path_leaf.ndim >= 2
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule_fn(cfg, count)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat, vhat = m2 / bc1, v2 / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(p):
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - lr * step).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

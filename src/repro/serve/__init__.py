@@ -1,0 +1,3 @@
+from .engine import ServeEngine, EngineStats  # noqa: F401
+from .sampler import SamplerConfig, sample    # noqa: F401
+from . import kv_cache                        # noqa: F401

@@ -1,0 +1,149 @@
+"""Paged prefix KV store with index-compiled lookup — the paper's technique
+as a first-class serving feature (DESIGN.md §2.2).
+
+RadixAttention-style prefix reuse, reorganized around the thesis' read-heavy
+OLAP regime: prompt tokens are split into pages of ``page_size`` tokens; each
+page's *chained* hash (h_i = mix(h_{i-1}, block_i)) identifies the whole
+prefix up to and including that page.  Cached (hash -> page payload) entries
+are kept in a **sorted snapshot index** probed with any of the paper's
+structures (binary / CSS / k-ary / FAST / NitroGen); inserts batch up and the
+index is rebuilt wholesale — exactly the CSS/NitroGen update model, and the
+reason an index-compiled structure is admissible here.
+
+Hash collisions are tolerated: every hit is verified against the stored
+tokens before reuse (the index accelerates, correctness never depends on it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import IndexConfig, build_index
+
+_MASK31 = (1 << 31) - 1
+
+
+def chain_hashes(tokens: np.ndarray, page_size: int) -> np.ndarray:
+    """Chained per-page hashes of a token sequence (int32, 31-bit)."""
+    tokens = np.asarray(tokens, np.int64)
+    n_pages = len(tokens) // page_size
+    hs, h = [], np.int64(0x9E3779B1)
+    for i in range(n_pages):
+        blk = tokens[i * page_size: (i + 1) * page_size]
+        for t in blk:                                  # simple polynomial mix
+            h = (h * 1_000_003 + t + 0x7F4A7C15) & _MASK31
+        hs.append(int(h))
+    return np.asarray(hs, np.int32)
+
+
+@dataclass
+class PrefixPageStore:
+    page_size: int
+    index_config: IndexConfig = field(default_factory=lambda: IndexConfig(kind="nitrogen"))
+    hashes: list = field(default_factory=list)       # int32 chained hash per page
+    tokens: list = field(default_factory=list)       # np [page_size] per page
+    payloads: list = field(default_factory=list)     # opaque per-page payload (KV slices)
+    _index: Any = None
+    _dirty: bool = True
+    stats: dict = field(default_factory=lambda: {
+        "lookups": 0, "hits": 0, "rebuilds": 0, "verify_rejects": 0})
+
+    # ---------------------------------------------------------------- write
+    def insert(self, prompt_tokens: np.ndarray, page_payloads: list):
+        """Store pages of a finished prefill. page_payloads[i] is the KV
+        payload for page i (len == full pages in the prompt)."""
+        hs = chain_hashes(prompt_tokens, self.page_size)
+        known = set(self.hashes)
+        for i, h in enumerate(hs[: len(page_payloads)]):
+            if int(h) in known:
+                continue
+            self.hashes.append(int(h))
+            self.tokens.append(np.asarray(
+                prompt_tokens[: (i + 1) * self.page_size], np.int32))
+            self.payloads.append(page_payloads[i])
+            known.add(int(h))
+        self._dirty = True
+
+    def rebuild_index(self):
+        """Batch rebuild (the CSS/NitroGen posture: updates are batched and
+        the read-optimized structure is regenerated)."""
+        if not self.hashes:
+            self._index = None
+        else:
+            self._index = build_index(
+                np.asarray(self.hashes, np.int32),
+                values=np.arange(len(self.hashes), dtype=np.int32),
+                config=self.index_config)
+        self._dirty = False
+        self.stats["rebuilds"] += 1
+
+    # ---------------------------------------------------------------- read
+    def lookup(self, prompt_tokens: np.ndarray):
+        """Longest reusable prefix. Returns (n_pages_hit, payloads[list])."""
+        self.stats["lookups"] += 1
+        if self._dirty:
+            self.rebuild_index()
+        if self._index is None:
+            return 0, []
+        hs = chain_hashes(prompt_tokens, self.page_size)
+        if hs.size == 0:
+            return 0, []
+        res = self._index.lookup(jnp.asarray(hs))
+        found = np.asarray(res.found)
+        slot = np.asarray(res.values)
+        out = []
+        for i, h in enumerate(hs):
+            if not found[i]:
+                break
+            s = int(slot[i])
+            want = np.asarray(prompt_tokens[: (i + 1) * self.page_size], np.int32)
+            if (self.tokens[s].shape != want.shape) or not np.array_equal(
+                    self.tokens[s], want):
+                self.stats["verify_rejects"] += 1
+                break                                  # hash collision
+            out.append(self.payloads[s])
+        if out:
+            self.stats["hits"] += 1
+        return len(out), out
+
+
+# --------------------------------------------------------------- KV slicing
+def slice_cache_pages(cfg, cache, n_tokens: int, page_size: int):
+    """Split a prefill cache's per-layer KV (and SSM states are NOT pageable
+    — only attention/cross entries are stored; ssm/hybrid archs re-run the
+    tail, see DESIGN.md §5) into per-page payloads."""
+    n_pages = n_tokens // page_size
+    payloads = []
+    for i in range(n_pages):
+        lo, hi = i * page_size, (i + 1) * page_size
+        ent = {}
+        for pkey, layer in cache["layers"].items():
+            if "k" in layer:
+                ent[pkey] = {
+                    "k": np.asarray(layer["k"][:, :, lo:hi]),
+                    "v": np.asarray(layer["v"][:, :, lo:hi]),
+                }
+        payloads.append(ent)
+    return payloads
+
+
+def write_pages_into_cache(cache, payloads: list, page_size: int):
+    """Install reused page payloads at the head of a fresh cache."""
+    for i, ent in enumerate(payloads):
+        lo = i * page_size
+        for pkey, kv in ent.items():
+            layer = cache["layers"][pkey]
+            layer["k"] = jax.lax.dynamic_update_slice(
+                layer["k"], jnp.asarray(kv["k"]).astype(layer["k"].dtype),
+                (0, 0, lo, 0, 0))
+            layer["v"] = jax.lax.dynamic_update_slice(
+                layer["v"], jnp.asarray(kv["v"]).astype(layer["v"].dtype),
+                (0, 0, lo, 0, 0))
+    n = len(payloads) * page_size
+    cache["lengths"] = jnp.maximum(cache["lengths"],
+                                   jnp.asarray(n, jnp.int32))
+    return cache

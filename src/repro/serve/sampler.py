@@ -1,0 +1,44 @@
+"""Token sampling. Nucleus (top-p) inverts the sorted-probability CDF —
+the thesis' search problem executed once per sequence per decode step; the
+inversion runs through the k-ary CDF kernel (kernels/cdf_search.py) or its
+jnp oracle (`use_kernel=False`, the default under jit on CPU)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0
+    top_p: float = 1.0
+    top_k: int = 0                   # 0 = off
+    use_kernel: bool = False         # route CDF inversion through Pallas
+
+
+def sample(logits: jnp.ndarray, rng, cfg: SamplerConfig = SamplerConfig()):
+    """logits: [B, V] -> token ids [B]."""
+    B, V = logits.shape
+    if cfg.temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # sort descending; restrict to the top-p nucleus; invert the CDF at u
+    order = jnp.argsort(-probs, axis=-1)
+    p_sorted = jnp.take_along_axis(probs, order, axis=-1)
+    cdf = jnp.cumsum(p_sorted, axis=-1)
+    u = jax.random.uniform(rng, (B,), minval=1e-6, maxval=1.0)
+    u = u * jnp.minimum(cfg.top_p, cdf[:, -1])        # stay inside the nucleus
+    if cfg.use_kernel:
+        idx = kops.topp_search(cdf, u)
+    else:
+        idx = jnp.sum(cdf < u[:, None], axis=-1).astype(jnp.int32)
+        idx = jnp.minimum(idx, V - 1)
+    return jnp.take_along_axis(order, idx[:, None], axis=-1)[:, 0].astype(jnp.int32)

@@ -1,0 +1,2 @@
+from .train_step import make_train_step, make_loss_fn, chunked_ce_loss  # noqa: F401
+from .trainer import Trainer, TrainConfig, TrainState                   # noqa: F401

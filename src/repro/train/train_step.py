@@ -1,0 +1,129 @@
+"""Training step: chunked cross-entropy, microbatch gradient accumulation,
+remat — the function the trainer jits and the dry-run lowers.
+
+Memory design (what makes nemotron-scale compile at 4k x 256):
+  * layer scan + ``nothing_saveable`` remat inside the model forward,
+  * the [B, S, V] logits are never materialized: CE runs in sequence chunks
+    under ``jax.checkpoint`` (backward recomputes each chunk's logits),
+  * microbatches scan with a single f32 grad accumulator -> one collective
+    reduce at the end, not one per microbatch (overlap-friendly).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..optim import adamw
+
+
+def chunked_ce_loss(cfg, params, hidden, labels, chunk: int = 1024):
+    """Mean CE over [B, S] without materializing [B, S, V]."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = hidden.shape[1] // chunk
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    hc = hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(hx, lx):
+        logits = (hx @ w.astype(hx.dtype)).astype(jnp.float32)
+        logits = T.mask_padded_vocab(cfg, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lx, 0)[..., None],
+                                 axis=-1)[..., 0]
+        valid = (lx >= 0).astype(jnp.float32)
+        return jnp.sum((logz - ll) * valid), jnp.sum(valid)
+
+    def body(carry, xs):
+        tot, n = carry
+        t, c = one(xs[0], xs[1])
+        return (tot + t, n + c), None
+
+    (tot, n), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hc, lc))
+    return tot / jnp.maximum(n, 1.0)
+
+
+def make_loss_fn(cfg, *, compute_dtype=jnp.bfloat16, remat=True,
+                 ce_chunk=1024, aux_weight=0.01, attn_chunks=(512, 512)):
+    def loss_fn(params, tokens, labels, memory=None):
+        hidden, aux = T.forward(cfg, params, tokens, memory=memory,
+                                remat=remat, compute_dtype=compute_dtype,
+                                chunks=attn_chunks)
+        ce = chunked_ce_loss(cfg, params, hidden, labels, ce_chunk)
+        return ce + aux_weight * aux, {"ce": ce, "moe_aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: adamw.OptConfig, *, microbatches: int = 1,
+                    compute_dtype=jnp.bfloat16, remat=True, ce_chunk=1024,
+                    aux_weight=0.01, attn_chunks=(512, 512),
+                    has_memory: bool = False, cast_params_once: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch: {tokens, labels[, memory]} with leading dim B
+    divisible by `microbatches`.
+
+    cast_params_once (perf knob, EXPERIMENTS.md §Perf): differentiate w.r.t.
+    a bf16 copy of the params cast OUTSIDE the microbatch loop, so the FSDP
+    all-gather of weights is loop-invariant (gathered once per step, not
+    once per microbatch). Mathematically identical — the cast's VJP is an
+    identity cast back, applied once at the end.
+
+    remat: False | True/'group' | 'block' (see models.transformer._run_blocks).
+    """
+    loss_fn = make_loss_fn(cfg, compute_dtype=compute_dtype, remat=remat,
+                           ce_chunk=ce_chunk, aux_weight=aux_weight,
+                           attn_chunks=attn_chunks)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        memory = batch.get("memory") if has_memory else None
+        B = tokens.shape[0]
+        assert B % microbatches == 0
+
+        if cast_params_once:
+            work_params = jax.tree.map(
+                lambda p: p.astype(compute_dtype)
+                if p.dtype == jnp.float32 else p, params)
+        else:
+            work_params = params
+
+        if microbatches == 1:
+            (loss, parts), grads = vg(work_params, tokens, labels, memory)
+        else:
+            mb = B // microbatches
+
+            def mb_slice(x, i):
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                gacc, lacc = carry
+                mem_i = mb_slice(memory, i) if memory is not None else None
+                (l, _), g = vg(work_params, mb_slice(tokens, i),
+                               mb_slice(labels, i), mem_i)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gacc, g)
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0)), jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = {}
+
+        new_params, new_opt, om = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step

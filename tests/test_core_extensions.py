@@ -1,0 +1,84 @@
+"""CSB+-tree (thesis §3.2, incremental updates) and range queries (§1.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IndexConfig, build_index
+from repro.core.csb_tree import CSBTree
+
+
+# ------------------------------------------------------------------ CSB+
+def test_csb_build_and_membership():
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.integers(0, 10**6, 5_000).astype(np.int32))
+    t = CSBTree.build(keys, w=8)
+    probe = np.concatenate([keys[::7], rng.integers(0, 10**6, 500).astype(np.int32)])
+    got = np.asarray(t.search(probe))
+    want = np.isin(probe, keys)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_csb_incremental_insert_no_rebuild_for_leaf_room():
+    t = CSBTree.build(np.arange(0, 1000, 10, dtype=np.int32), w=8)
+    assert not t.insert(20)                      # duplicate
+    assert t.insert(15)
+    assert bool(t.search(np.array([15], np.int32))[0])
+    assert not bool(t.search(np.array([16], np.int32))[0])
+    # tree still contains everything
+    np.testing.assert_array_equal(
+        np.sort(t.iter_keys()),
+        np.sort(np.append(np.arange(0, 1000, 10, dtype=np.int32), 15)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    base=st.lists(st.integers(0, 10**6), min_size=1, max_size=300, unique=True),
+    extra=st.lists(st.integers(0, 10**6), min_size=1, max_size=60, unique=True),
+    w=st.sampled_from([4, 8]),
+)
+def test_csb_property_inserts_preserve_membership(base, extra, w):
+    base = np.array(base, np.int32)
+    t = CSBTree.build(base, w=w)
+    for e in extra:
+        t.insert(np.int32(e))
+    allk = np.union1d(base, np.array(extra, np.int32))
+    probe = np.concatenate([allk, allk + 1])
+    got = np.asarray(t.search(probe.astype(np.int32)))
+    want = np.isin(probe, allk)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_csb_one_reference_per_node_invariant():
+    """CSB+ stores exactly one child reference per internal node."""
+    t = CSBTree.build(np.arange(500, dtype=np.int32), w=4)
+    internal = t.child[: t._n_nodes] >= 0
+    assert internal.sum() >= 1
+    # every internal node's children are contiguous starting at its base
+    for nid in np.where(internal)[0]:
+        base, ln = int(t.child[nid]), int(t.nlen[nid])
+        assert base + ln < t._n_nodes
+
+
+# ------------------------------------------------------------------ ranges
+@pytest.mark.parametrize("kind", ["binary", "css", "fast", "nitrogen"])
+def test_range_query_matches_numpy(kind):
+    rng = np.random.default_rng(1)
+    keys = np.unique(rng.integers(0, 10**5, 3_000).astype(np.int32))
+    idx = build_index(keys, config=IndexConfig(kind=kind, node_width=8,
+                                               levels=2, compiled_node_width=3))
+    lo = rng.integers(0, 10**5, 200).astype(np.int32)
+    hi = (lo + rng.integers(0, 5_000, 200)).astype(np.int32)
+    r_lo, r_hi, cnt = idx.search_range(lo, hi)
+    want_lo = np.searchsorted(keys, lo, "left")
+    want_hi = np.searchsorted(keys, hi, "right")
+    np.testing.assert_array_equal(np.asarray(r_lo), want_lo)
+    np.testing.assert_array_equal(np.asarray(r_hi), want_hi)
+    np.testing.assert_array_equal(np.asarray(cnt), want_hi - want_lo)
+
+
+def test_range_query_with_duplicates():
+    keys = np.array([2, 2, 5, 5, 5, 9], np.int32)
+    idx = build_index(keys, config=IndexConfig(kind="binary"))
+    r_lo, r_hi, cnt = idx.search_range(np.array([2, 5, 6], np.int32),
+                                       np.array([5, 5, 8], np.int32))
+    np.testing.assert_array_equal(np.asarray(cnt), [5, 3, 0])

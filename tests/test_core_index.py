@@ -1,0 +1,157 @@
+"""Property + unit tests for the index-search core: every structure must
+agree with np.searchsorted(side='left') on rank, and with exact-match
+semantics on found/values."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IndexConfig, build_index, KINDS
+from repro.core import sorted_array, css_tree, kary, fast_tree, nitrogen
+
+
+def oracle(keys, queries):
+    return np.searchsorted(np.sort(keys), queries, side="left").astype(np.int32)
+
+
+CONFIGS = [
+    IndexConfig(kind="binary"),
+    IndexConfig(kind="binary", linear_cutoff=8),
+    IndexConfig(kind="css", node_width=4),
+    IndexConfig(kind="css", node_width=4, intra="binary"),
+    IndexConfig(kind="css", node_width=16, leaf_width=8),
+    IndexConfig(kind="kary", node_width=3),
+    IndexConfig(kind="kary", node_width=7),
+    IndexConfig(kind="fast", node_width=3, page_depth=2),
+    IndexConfig(kind="fast", node_width=4, page_depth=3, leaf_width=6),
+    IndexConfig(kind="nitrogen", levels=2, compiled_node_width=3),
+    IndexConfig(kind="nitrogen", levels=3, compiled_node_width=1, bottom="vector"),
+    IndexConfig(kind="nitrogen", levels=2, compiled_node_width=2, bottom="css",
+                node_width=4),
+]
+IDS = [f"{i}-{c.kind}-w{c.node_width}-l{c.levels}-{c.intra}-{c.bottom}" for i, c in enumerate(CONFIGS)]
+
+
+@pytest.mark.parametrize("config", CONFIGS, ids=IDS)
+def test_rank_matches_oracle_int32(config):
+    rng = np.random.default_rng(0)
+    keys = rng.choice(200_000, size=3_000, replace=False).astype(np.int32)
+    queries = np.concatenate([
+        rng.integers(0, 200_000, 512).astype(np.int32),
+        keys[:256],                         # guaranteed hits
+        np.array([0, 199_999], np.int32),   # extremes
+    ])
+    idx = build_index(keys, values=np.arange(keys.size), config=config)
+    np.testing.assert_array_equal(np.asarray(idx.search(queries)), oracle(keys, queries))
+
+
+@pytest.mark.parametrize("config", CONFIGS[:6], ids=IDS[:6])
+def test_rank_matches_oracle_float32(config):
+    rng = np.random.default_rng(1)
+    keys = np.unique(rng.normal(size=2_000).astype(np.float32))
+    queries = np.concatenate([rng.normal(size=300).astype(np.float32), keys[::7]])
+    idx = build_index(keys, config=config)
+    np.testing.assert_array_equal(np.asarray(idx.search(queries)), oracle(keys, queries))
+
+
+def test_lookup_found_and_values():
+    keys = np.array([5, 1, 9, 3, 7], np.int32)
+    vals = np.array([50, 10, 90, 30, 70], np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind="css", node_width=2))
+    res = idx.lookup(np.array([1, 2, 9, 10, 5], np.int32))
+    np.testing.assert_array_equal(np.asarray(res.found), [True, False, True, False, True])
+    assert np.asarray(res.values)[0] == 10
+    assert np.asarray(res.values)[2] == 90
+    assert np.asarray(res.values)[4] == 50
+
+
+def test_duplicate_keys_return_first_occurrence():
+    keys = np.array([2, 2, 2, 5, 5, 8], np.int32)
+    for kind in KINDS:
+        cfg = IndexConfig(kind=kind, node_width=3, levels=1, compiled_node_width=1)
+        idx = build_index(keys, config=cfg)
+        got = np.asarray(idx.search(np.array([2, 5, 8, 9], np.int32)))
+        np.testing.assert_array_equal(got, [0, 3, 5, 6], err_msg=kind)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    keys=st.lists(st.integers(-2**20, 2**20), min_size=1, max_size=300, unique=True),
+    qs=st.lists(st.integers(-2**20 - 5, 2**20 + 5), min_size=1, max_size=64),
+    kind=st.sampled_from(["binary", "css", "kary", "fast", "nitrogen"]),
+    w=st.sampled_from([1, 2, 3, 7]),
+)
+def test_property_all_kinds_match_oracle(keys, qs, kind, w):
+    keys = np.array(keys, np.int32)
+    qs = np.array(qs, np.int32)
+    cfg = IndexConfig(kind=kind, node_width=w, compiled_node_width=w,
+                      levels=2, page_depth=2)
+    idx = build_index(keys, config=cfg)
+    np.testing.assert_array_equal(np.asarray(idx.search(qs)), oracle(keys, qs))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 500),
+    seed=st.integers(0, 2**31 - 1),
+    cutoff=st.sampled_from([1, 4, 16]),
+)
+def test_property_binary_cutoff(n, seed, cutoff):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(-10**6, 10**6, n).astype(np.int32))
+    qs = rng.integers(-10**6, 10**6, 50).astype(np.int32)
+    idx = sorted_array.build(keys, linear_cutoff=cutoff)
+    np.testing.assert_array_equal(
+        np.asarray(sorted_array.search(idx, qs)), oracle(keys, qs))
+
+
+def test_kary_tree_is_permutation_of_keys():
+    """SGL09 invariant: the linearized tree holds every key exactly once."""
+    keys = np.arange(63, dtype=np.int32)
+    idx = kary.build(keys, node_width=3)
+    tree = np.asarray(idx.tree)
+    real = tree[tree != np.iinfo(np.int32).max]
+    np.testing.assert_array_equal(np.sort(real), keys)
+
+
+def test_fast_page_layout_is_contiguous():
+    """FAST invariant: one page (page_depth levels of one subtree) occupies a
+    contiguous slice — the whole point of hierarchical blocking."""
+    keys = np.arange(10_000, dtype=np.int32)
+    idx = fast_tree.build(keys, node_width=3, page_depth=2)
+    f, w = 4, 3
+    psize = w * (f**2 - 1) // (f - 1)
+    # group 0 = the root page: its two levels are the first psize entries and
+    # must equal the first two levels of the flat CSS directory.
+    flat = css_tree.build(keys, node_width=3, leaf_width=4)
+    root_page = np.asarray(idx.pages[:psize])
+    lv0 = np.asarray(flat.dir_keys[flat.level_offsets[0]:flat.level_offsets[0] + w])
+    lv1 = np.asarray(flat.dir_keys[flat.level_offsets[1]:flat.level_offsets[1] + w * f])
+    np.testing.assert_array_equal(root_page, np.concatenate([lv0, lv1]))
+
+
+def test_nitrogen_equivalent_to_base_and_zero_tree_bytes():
+    rng = np.random.default_rng(3)
+    keys = np.unique(rng.integers(0, 10**6, 5_000).astype(np.int32))
+    qs = rng.integers(0, 10**6, 1_000).astype(np.int32)
+    base = build_index(keys, config=IndexConfig(kind="binary"))
+    ng = build_index(keys, config=IndexConfig(kind="nitrogen", levels=3,
+                                              compiled_node_width=3))
+    np.testing.assert_array_equal(np.asarray(ng.search(qs)), np.asarray(base.search(qs)))
+    assert ng.tree_bytes == 0           # the top lives in the executable
+    assert base.impl.tree_bytes == 0
+
+
+def test_nitrogen_searcher_is_jittable_artifact():
+    keys = np.arange(0, 1000, 7, dtype=np.int32)
+    idx = nitrogen.build(keys, levels=2, node_width=3)
+    fn = nitrogen.searcher(idx)
+    qs = np.array([0, 7, 8, 993, 10_000], np.int32)
+    np.testing.assert_array_equal(np.asarray(fn(qs)), oracle(keys, qs))
+
+
+def test_single_key_and_tiny_inputs():
+    for kind in KINDS:
+        cfg = IndexConfig(kind=kind, node_width=2, levels=1, compiled_node_width=1)
+        idx = build_index(np.array([42], np.int32), config=cfg)
+        got = np.asarray(idx.search(np.array([41, 42, 43], np.int32)))
+        np.testing.assert_array_equal(got, [0, 0, 1], err_msg=kind)

@@ -1,0 +1,82 @@
+"""Per-kernel correctness sweeps: every Pallas kernel (interpret=True) must
+match its ref.py oracle across shapes, dtypes and node widths."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import kary, fast_tree
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n_keys", [5, 63, 257, 4000])
+@pytest.mark.parametrize("w", [3, 7])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_kary_kernel_matches_oracle(n_keys, w, dtype):
+    rng = np.random.default_rng(n_keys * 7 + w)
+    if dtype == np.int32:
+        keys = np.unique(rng.integers(-2**30, 2**30, n_keys).astype(dtype))
+        qs = np.concatenate([rng.integers(-2**30, 2**30, 100).astype(dtype), keys[:50]])
+    else:
+        keys = np.unique(rng.normal(scale=1e3, size=n_keys).astype(dtype))
+        qs = np.concatenate([rng.normal(scale=1e3, size=100).astype(dtype), keys[:50]])
+    idx = kary.build(keys, node_width=w)
+    got = np.asarray(ops.kary_search(idx, qs, lane=8, tile_rows=2))
+    want = np.minimum(ref.kary_search_ref(qs, keys), keys.size)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kary_kernel_large_int_values_exact():
+    """The one-hot MXU gather must be bit-exact beyond f32's 2^24 mantissa."""
+    keys = np.array([-2**31 + 1, -2**24 - 3, 0, 2**24 + 1, 2**30 + 7], np.int32)
+    qs = np.array([-2**31 + 1, -2**24 - 3, 2**24 + 1, 2**24 + 2, 2**30 + 7, 5], np.int32)
+    idx = kary.build(keys, node_width=3)
+    got = np.asarray(ops.kary_search(idx, qs, lane=8, tile_rows=2))
+    np.testing.assert_array_equal(got, ref.kary_search_ref(qs, keys))
+
+
+def test_kary_kernel_vmem_budget_guard():
+    keys = np.arange(20_000, dtype=np.int32)
+    idx = kary.build(keys, node_width=1)      # deep binary tree -> huge onehot
+    with pytest.raises(ValueError, match="VMEM|too large"):
+        ops.kary_search(idx, keys[:8], lane=128, tile_rows=8)
+
+
+@pytest.mark.parametrize("n_keys,w,pd,tile", [
+    (100, 3, 2, 8), (5000, 7, 2, 16), (2048, 15, 1, 32),
+])
+def test_page_search_kernel_matches_oracle(n_keys, w, pd, tile):
+    rng = np.random.default_rng(n_keys + w)
+    keys = np.unique(rng.integers(0, 10**8, n_keys).astype(np.int32))
+    qs = np.concatenate([rng.integers(0, 10**8, 300).astype(np.int32), keys[:100]])
+    idx = fast_tree.build(keys, node_width=w, page_depth=pd)
+    got = np.asarray(ops.fast_page_search(idx, qs, tile=tile))
+    want = np.minimum(ref.page_search_ref(qs, keys), keys.size)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_page_search_skewed_buckets():
+    """Zipf-style skew: most queries hit one page -> multi-step buckets."""
+    keys = np.arange(0, 4096, dtype=np.int32)
+    idx = fast_tree.build(keys, node_width=7, page_depth=2)
+    qs = np.concatenate([np.full(500, 17, np.int32),       # one hot page
+                         np.arange(0, 4096, 97, np.int32)])
+    got = np.asarray(ops.fast_page_search(idx, qs, tile=64))
+    np.testing.assert_array_equal(got, ref.page_search_ref(qs, keys))
+
+
+@pytest.mark.parametrize("B,V", [(4, 100), (8, 512), (3, 1000), (16, 2048)])
+def test_cdf_search_matches_oracle(B, V):
+    rng = np.random.default_rng(B * V)
+    p = rng.dirichlet(np.ones(V), size=B).astype(np.float32)
+    cdf = np.cumsum(np.sort(p, axis=-1)[:, ::-1], axis=-1)
+    u = rng.uniform(0, 1, B).astype(np.float32)
+    got = np.asarray(ops.topp_search(cdf, u, tile_b=4, chunk=128))
+    np.testing.assert_array_equal(got, ref.cdf_search_ref(cdf, u))
+
+
+def test_cdf_search_edge_u():
+    cdf = np.array([[0.1, 0.4, 0.9, 1.0]], np.float32)
+    u = np.array([0.0], np.float32)
+    assert ops.topp_search(cdf, u, tile_b=1, chunk=128)[0] == 0
+    u = np.array([1.0], np.float32)
+    assert int(ops.topp_search(cdf, u, tile_b=1, chunk=128)[0]) == 3

@@ -1,0 +1,58 @@
+"""Launcher CLIs and roofline profiling utilities."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run(args, timeout=420):
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, env=ENV, timeout=timeout, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_train_launcher_reduced():
+    out = _run(["repro.launch.train", "--arch", "qwen3-0.6b", "--reduced",
+                "--steps", "3", "--seq-len", "16", "--global-batch", "2"])
+    assert "done: step 3" in out
+
+
+def test_serve_launcher_reduced():
+    out = _run(["repro.launch.serve", "--arch", "minicpm-2b", "--reduced",
+                "--requests", "2", "--steps", "2", "--prompt-len", "24",
+                "--shared-prefix", "16", "--index", "css"])
+    assert "prefix store" in out and "tokens out: (2, 2)" in out
+
+
+def test_dryrun_cli_single_small_cell(tmp_path):
+    out_file = tmp_path / "d.jsonl"
+    out = _run(["repro.launch.dryrun", "--arch", "whisper-small",
+                "--shape", "decode_32k", "--mesh", "single",
+                "--out", str(out_file)], timeout=590)
+    assert "ok compile" in out
+    import json
+    rec = json.loads(out_file.read_text().splitlines()[0])
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["hlo"]["flops_per_chip"] > 0
+
+
+def test_traffic_breakdown_tool():
+    from repro.roofline.analysis import traffic_breakdown
+    hlo = """
+HloModule m, num_partitions=2
+
+ENTRY %main_spmd (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64] parameter(0)
+  %d = f32[64,64] dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %ar = f32[64,64] all-reduce(%d), replica_groups={}, to_apply=%add
+}
+"""
+    items = traffic_breakdown(hlo, top=5)
+    assert len(items) == 2
+    opcodes = {i[2] for i in items}
+    assert opcodes == {"dot", "all-reduce"}

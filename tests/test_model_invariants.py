@@ -1,0 +1,75 @@
+"""Model-level correctness invariants (property-style)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.flash_attention import flash_attention
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mixtral-8x7b", "jamba-v0.1-52b"])
+def test_causality_future_tokens_do_not_change_past_logits(arch):
+    """For causal LMs, logits at position t must be invariant to any change
+    of tokens at positions > t (catches mask bugs in every mixer family)."""
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, S, t = 1, 12, 7
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    toks2 = toks.at[:, t + 1:].set((toks[:, t + 1:] + 13) % cfg.vocab)
+
+    h1, _ = T.forward(cfg, params, toks, remat=False, compute_dtype=jnp.float32,
+                      chunks=(4, 4))
+    h2, _ = T.forward(cfg, params, toks2, remat=False, compute_dtype=jnp.float32,
+                      chunks=(4, 4))
+    lg1 = np.asarray(T.logits_of(cfg, params, h1))
+    lg2 = np.asarray(T.logits_of(cfg, params, h2))
+    np.testing.assert_allclose(lg1[:, : t + 1], lg2[:, : t + 1],
+                               atol=1e-4, rtol=1e-4)
+    assert not np.allclose(lg1[:, -1], lg2[:, -1])   # future DID change
+
+
+def test_swa_window_limits_receptive_field():
+    """With window w, changing a token more than w positions back must not
+    affect the current logits (mixtral-family SWA)."""
+    cfg = get_config("mixtral-8x7b").reduced(window=4, n_layers=2)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    S = 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab)
+    # change position S-1-w-3 (well outside the window of the last token);
+    # single layer of attention => receptive field == window
+    far = S - 1 - cfg.window - 3
+    toks2 = toks.at[:, far].set((toks[:, far] + 7) % cfg.vocab)
+    cfg1 = cfg.reduced(n_layers=1, window=4)
+    p1 = T.init_params(cfg1, jax.random.PRNGKey(4))
+    h1, _ = T.forward(cfg1, p1, toks, remat=False, compute_dtype=jnp.float32,
+                      chunks=(4, 4))
+    h2, _ = T.forward(cfg1, p1, toks2, remat=False, compute_dtype=jnp.float32,
+                      chunks=(4, 4))
+    lg1 = np.asarray(T.logits_of(cfg1, p1, h1))[:, -1]
+    lg2 = np.asarray(T.logits_of(cfg1, p1, h2))[:, -1]
+    np.testing.assert_allclose(lg1, lg2, atol=1e-4, rtol=1e-4)
+
+
+def test_padded_vocab_columns_are_masked():
+    cfg = get_config("whisper-small").reduced(vocab=500)   # pads to 512
+    assert cfg.padded_vocab == 512
+    params = T.init_params(cfg, jax.random.PRNGKey(5))
+    toks = jnp.zeros((1, 4), jnp.int32)
+    mem = jax.random.normal(jax.random.PRNGKey(6), (1, cfg.encoder_seq, cfg.d_model))
+    h, _ = T.forward(cfg, params, toks, memory=mem, remat=False,
+                     compute_dtype=jnp.float32)
+    lg = np.asarray(T.logits_of(cfg, params, h))
+    assert lg.shape[-1] == 512
+    assert np.all(lg[..., 500:] < -1e29)
+
+
+def test_flash_attention_is_permutation_equivariant_over_batch():
+    q = jax.random.normal(jax.random.PRNGKey(7), (4, 16, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(8), (4, 16, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(9), (4, 16, 2, 8))
+    perm = jnp.array([2, 0, 3, 1])
+    o1 = flash_attention(q, k, v, True, None, 8, 8)[perm]
+    o2 = flash_attention(q[perm], k[perm], v[perm], True, None, 8, 8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

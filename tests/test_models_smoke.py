@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests on REDUCED configs (assignment requirement):
+instantiate each family small, run one forward/train step on CPU, assert
+output shapes + no NaNs; plus the strong consistency check
+prefill-then-decode == full forward for every family."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as T
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "nitrogen-db"]
+
+
+def _mem_for(cfg, B):
+    if cfg.family in ("vlm", "audio"):
+        return jax.random.normal(jax.random.PRNGKey(9),
+                                 (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return None
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    hidden, aux = T.forward(cfg, params, tokens, memory=_mem_for(cfg, B),
+                            remat=True, compute_dtype=jnp.float32,
+                            chunks=(8, 8))
+    logits = T.logits_of(cfg, params, hidden)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_one_train_grad_step_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    mem = _mem_for(cfg, B)
+
+    def loss_fn(p):
+        h, aux = T.forward(cfg, p, tokens, memory=mem, remat=True,
+                           compute_dtype=jnp.float32, chunks=(8, 8))
+        lg = T.logits_of(cfg, p, h)
+        ls = -jnp.mean(jax.nn.log_softmax(lg)[..., 0])
+        return ls + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    """Prefill S tokens, decode 3 more; logits must match the full forward
+    run on the whole sequence (per-family cache correctness)."""
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(4))
+    B, S, extra = 2, 10, 3
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S + extra), 0, cfg.vocab)
+    mem = _mem_for(cfg, B)
+
+    # ground truth: full forward, logits at positions S-1 .. S+extra-2
+    h, _ = T.forward(cfg, params, toks, memory=mem, remat=False,
+                     compute_dtype=jnp.float32, chunks=(32, 32))
+    want = np.asarray(T.logits_of(cfg, params, h))
+
+    lg, cache = T.prefill(cfg, params, toks[:, :S], memory=mem,
+                          compute_dtype=jnp.float32, max_len=S + extra,
+                          chunks=(32, 32))
+    np.testing.assert_allclose(np.asarray(lg), want[:, S - 1], atol=2e-3,
+                               rtol=2e-3, err_msg="prefill logits")
+    for t in range(extra):
+        lg, cache = T.decode_step(cfg, params, toks[:, S + t], cache,
+                                  compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg), want[:, S + t], atol=2e-3,
+                                   rtol=2e-3, err_msg=f"decode step {t}")
+
+
+def test_param_count_scales_with_layers():
+    cfg = get_config("qwen3-0.6b").reduced()
+    p1 = T.init_params(cfg, jax.random.PRNGKey(0))
+    cfg2 = cfg.reduced(n_layers=cfg.n_layers * 2)
+    p2 = T.init_params(cfg2, jax.random.PRNGKey(0))
+    assert T.param_count(p2) > T.param_count(p1)

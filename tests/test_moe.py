@@ -1,0 +1,120 @@
+"""MoE: tournament top-k == lax.top_k; dispatch respects capacity; output
+matches a dense per-token oracle when capacity is ample."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe
+from repro.configs.base import ArchConfig
+
+
+def test_tournament_topk_matches_lax():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    for k in (1, 2, 4):
+        v1, i1 = moe.tournament_topk(x, k)
+        v2, i2 = jax.lax.top_k(x, k)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_tournament_topk_ties_lowest_index():
+    x = jnp.array([[1.0, 3.0, 3.0, 0.0]])
+    _, i = moe.tournament_topk(x, 2)
+    np.testing.assert_array_equal(np.asarray(i)[0], [1, 2])
+
+
+def _cfg(E=4, k=2, cap=8.0):
+    return ArchConfig(name="t", family="moe", n_layers=2, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab=64,
+                      n_experts=E, topk=k, capacity_factor=cap)
+
+
+def _dense_oracle(cfg, p, x):
+    """Route every token to its top-k experts with no capacity limit."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    logits = xt @ p["router"]
+    gv, gi = jax.lax.top_k(logits, cfg.topk)
+    w = jax.nn.softmax(gv, axis=-1)
+    out = jnp.zeros_like(xt)
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(xt @ p["w_gate"][e]) * (xt @ p["w_up"][e])
+        ye = h @ p["w_down"][e]
+        for kk in range(cfg.topk):
+            out = out + jnp.where((gi[:, kk] == e)[:, None], w[:, kk:kk + 1] * ye, 0)
+    return out.reshape(B, S, D)
+
+
+def test_moe_block_matches_dense_oracle_with_ample_capacity():
+    cfg = _cfg(E=4, k=2, cap=8.0)        # capacity >= T*k/E * 8 -> no drops
+    p = moe.init_moe(cfg, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model))
+    got, aux = moe.moe_block(cfg, p, x)
+    want = _dense_oracle(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_capacity_drops_do_not_crash_and_keep_shape():
+    cfg = _cfg(E=4, k=2, cap=0.25)       # deliberately tiny capacity
+    p = moe.init_moe(cfg, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model))
+    y, aux = moe.moe_block(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_moe_shared_expert_added():
+    cfg = ArchConfig(name="t", family="moe", n_layers=2, d_model=16,
+                     n_heads=2, n_kv_heads=2, d_ff=32, vocab=64,
+                     n_experts=4, topk=1, shared_expert=True,
+                     capacity_factor=8.0)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 8, cfg.d_model))
+    y_with, _ = moe.moe_block(cfg, p, x)
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y_zero_shared, _ = moe.moe_block(cfg, p2, x)
+    assert not np.allclose(np.asarray(y_with), np.asarray(y_zero_shared))
+
+
+def test_moe_grads_finite():
+    cfg = _cfg()
+    p = moe.init_moe(cfg, jax.random.PRNGKey(7))
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe.moe_block(cfg, p, x)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_grouped_dispatch_matches_dense_oracle():
+    """moe_groups>1 must stay exact when capacity is ample per group."""
+    import dataclasses
+    cfg = dataclasses.replace(_cfg(E=4, k=2, cap=8.0), moe_groups=4)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(9))
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 16, cfg.d_model))
+    got, aux = moe.moe_block(cfg, p, x)
+    want = _dense_oracle(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_grouped_dispatch_grads_finite():
+    import dataclasses
+    cfg = dataclasses.replace(_cfg(), moe_groups=2)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(11))
+    x = jax.random.normal(jax.random.PRNGKey(12), (1, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe.moe_block(cfg, p, x)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    for leaf in jax.tree.leaves(jax.grad(loss)(p)):
+        assert np.all(np.isfinite(np.asarray(leaf)))

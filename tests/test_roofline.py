@@ -1,0 +1,82 @@
+"""Roofline HLO analyzer: exact FLOPs on a known module, trip-count
+recovery, collective byte accounting, model-FLOPs formulas."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.roofline import analysis as RA
+
+CANNED = """
+HloModule jit_f, num_partitions=4
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (q: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %q = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%q), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), replica_groups={}, to_apply=%add
+  %i2 = s32[] get-tuple-element(%q), index=0
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %ar)
+}
+
+ENTRY %main_spmd (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %c = s32[] constant(0)
+  %tup = (s32[], f32[8,8]) tuple(%c, %a)
+  %w = (s32[], f32[8,8]) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_canned_module_flops_and_trips():
+    st = RA.analyze_hlo(CANNED)
+    # one dot [8,8]x[8,8] = 2*8*8*8 = 1024 flops, x5 trips
+    assert st.flops == 1024 * 5
+    assert st.while_loops == {"w": 5}
+    # all-reduce: operand 256B + result 256B, x5
+    assert st.collective_bytes == 256 * 5
+    assert st.collectives == {"all-reduce": 256 * 5.0}
+
+
+def test_backend_config_trip_count_preferred():
+    mod = CANNED.replace(
+        "body=%body", 'body=%body, backend_config={"known_trip_count":{"n":"7"}}')
+    st = RA.analyze_hlo(mod)
+    assert st.while_loops == {"w": 7}
+    assert st.flops == 1024 * 7
+
+
+def test_shape_bytes_tuple_with_comments():
+    t = "(s32[], f32[4,8]{1,0}, /*index=2*/bf16[2,2])"
+    assert RA._shape_bytes(t) == 4 + 4 * 32 + 2 * 4
+
+
+def test_roofline_terms_dominance():
+    st = RA.HLOStats(flops=197e12, bytes_hbm=819e9 * 2, collective_bytes=1)
+    r = RA.roofline_terms(st, model_flops_total=197e12 * 256, chips=256)
+    assert r.dominant == "memory"
+    assert abs(r.compute_s - 1.0) < 1e-6
+    assert abs(r.memory_s - 2.0) < 1e-6
+    assert abs(r.useful_ratio - 1.0) < 1e-6
+
+
+def test_model_flops_formulas():
+    cfg = get_config("mixtral-8x7b")
+    n_act = RA.active_params(cfg)
+    # mixtral active ~12.9B (2 of 8 experts + attn + embeddings)
+    assert 11e9 < n_act < 15e9
+    train = RA.model_flops(cfg, "train", 4096, 256)
+    assert abs(train - 6 * n_act * 4096 * 256) / train < 1e-9
+    dec = RA.model_flops(cfg, "decode", 32768, 128)
+    assert dec > 2 * n_act * 128          # adds attention-over-cache term
+
+    dense = get_config("qwen3-0.6b")
+    nd = RA.active_params(dense)
+    assert 0.4e9 < nd < 1.1e9

@@ -1,0 +1,110 @@
+"""Serving stack: prefix reuse must be bit-compatible with a cold prefill;
+the sampler must match a numpy oracle; the engine must decode batches."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import IndexConfig
+from repro.models import transformer as T
+from repro.serve import ServeEngine, SamplerConfig, sample
+from repro.serve.kv_cache import PrefixPageStore, chain_hashes
+
+
+def _tiny_engine(arch="qwen3-0.6b", **kw):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, ServeEngine(cfg, params, max_len=64, page_size=8, **kw)
+
+
+def test_chain_hash_prefix_property():
+    t1 = np.arange(32)
+    t2 = np.concatenate([np.arange(24), [99, 98, 97, 96, 95, 94, 93, 92]])
+    h1, h2 = chain_hashes(t1, 8), chain_hashes(t2, 8)
+    np.testing.assert_array_equal(h1[:3], h2[:3])   # shared 24-token prefix
+    assert h1[3] != h2[3]
+
+
+def test_prefix_store_hit_and_verify():
+    store = PrefixPageStore(8, IndexConfig(kind="css", node_width=4))
+    toks = np.arange(32, dtype=np.int32)
+    store.insert(toks, [{"pay": i} for i in range(4)])
+    n, payloads = store.lookup(toks)
+    assert n == 4 and [p["pay"] for p in payloads] == [0, 1, 2, 3]
+    # diverging suffix: only the shared pages hit
+    toks2 = np.concatenate([toks[:16], np.full(16, 7, np.int32)])
+    n2, _ = store.lookup(toks2)
+    assert n2 == 2
+    assert store.stats["hits"] == 2
+
+
+def test_prefix_reuse_matches_cold_prefill():
+    """The whole point: logits after reused-prefix prefill == cold prefill."""
+    cfg, params, eng = _tiny_engine()
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, 24)
+    p1 = np.concatenate([shared, rng.integers(0, cfg.vocab, 9)])
+    p2 = np.concatenate([shared, rng.integers(0, cfg.vocab, 9)])
+
+    lg1, _ = eng.prefill_one(p1)                    # cold: inserts pages
+    lg2_warm, _ = eng.prefill_one(p2)               # warm: reuses 3 pages
+    assert eng.stats.reused_tokens == 24
+
+    cold = ServeEngine(cfg, params, max_len=64, page_size=8)
+    lg2_cold, _ = cold.prefill_one(p2)
+    np.testing.assert_allclose(np.asarray(lg2_warm), np.asarray(lg2_cold),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("kind", ["binary", "nitrogen", "fast"])
+def test_engine_generate_batched_greedy(kind):
+    cfg, params, eng = _tiny_engine(
+        index_config=IndexConfig(kind=kind, levels=2, node_width=3))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, 12), rng.integers(0, cfg.vocab, 12)]
+    out = eng.generate(prompts, steps=4)
+    assert out.shape == (2, 4)
+    # greedy continuation must equal argmax chain of full forwards
+    toks = np.concatenate([prompts[0], np.asarray(out[0])])
+    h, _ = T.forward(cfg, params, jnp.asarray(toks[None, :-1]), remat=False,
+                     compute_dtype=jnp.float32)
+    lg = T.logits_of(cfg, params, h)
+    want_last = int(jnp.argmax(lg[0, -1]))
+    assert int(out[0, -1]) == want_last
+
+
+def test_ssm_arch_skips_prefix_reuse():
+    cfg, params, eng = _tiny_engine("mamba2-370m")
+    assert not eng.pageable
+    p = np.arange(20) % cfg.vocab
+    eng.prefill_one(p)
+    eng.prefill_one(p)
+    assert eng.stats.reused_tokens == 0             # no reuse path for SSM
+
+
+def test_sampler_matches_numpy_oracle():
+    rng = jax.random.PRNGKey(0)
+    logits = jax.random.normal(rng, (16, 100)) * 3
+    cfg = SamplerConfig(temperature=1.0, top_p=0.8)
+    toks = sample(logits, jax.random.PRNGKey(1), cfg)
+    assert toks.shape == (16,)
+    # every sampled token must lie inside its row's top-p nucleus
+    probs = np.asarray(jax.nn.softmax(logits, -1))
+    for b in range(16):
+        order = np.argsort(-probs[b])
+        cdf = np.cumsum(probs[b][order])
+        nucleus = set(order[: int(np.searchsorted(cdf, 0.8, "left") + 1)])
+        assert int(toks[b]) in nucleus
+
+
+def test_sampler_greedy_and_kernel_path_agree():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (8, 64)) * 2
+    g = sample(logits, jax.random.PRNGKey(3), SamplerConfig(temperature=0.0))
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    a = sample(logits, jax.random.PRNGKey(4),
+               SamplerConfig(temperature=0.7, top_p=0.9, use_kernel=False))
+    b = sample(logits, jax.random.PRNGKey(4),
+               SamplerConfig(temperature=0.7, top_p=0.9, use_kernel=True))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

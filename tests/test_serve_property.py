@@ -1,0 +1,61 @@
+"""Hypothesis property tests for serving-layer invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IndexConfig
+from repro.serve.kv_cache import PrefixPageStore, chain_hashes
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    prefix=st.lists(st.integers(0, 1000), min_size=8, max_size=64),
+    suffix_a=st.lists(st.integers(0, 1000), min_size=0, max_size=32),
+    suffix_b=st.lists(st.integers(0, 1000), min_size=0, max_size=32),
+    page=st.sampled_from([4, 8]),
+)
+def test_chain_hash_common_prefix_property(prefix, suffix_a, suffix_b, page):
+    """Hashes agree exactly on the shared whole-page prefix and (modulo
+    collisions, none expected at this scale) diverge at the first differing
+    page."""
+    a = np.array(prefix + suffix_a, np.int32)
+    b = np.array(prefix + suffix_b, np.int32)
+    ha, hb = chain_hashes(a, page), chain_hashes(b, page)
+    shared_pages = 0
+    for i in range(min(len(ha), len(hb))):
+        if np.array_equal(a[: (i + 1) * page], b[: (i + 1) * page]):
+            shared_pages = i + 1
+        else:
+            break
+    np.testing.assert_array_equal(ha[:shared_pages], hb[:shared_pages])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_seqs=st.integers(1, 5),
+    seed=st.integers(0, 10_000),
+    kind=st.sampled_from(["binary", "css", "nitrogen"]),
+)
+def test_prefix_store_lookup_is_always_verified_prefix(n_seqs, seed, kind):
+    """Whatever the index returns, lookup() must only hand back pages whose
+    stored tokens literally equal the probe's prefix (collision safety)."""
+    rng = np.random.default_rng(seed)
+    page = 8
+    store = PrefixPageStore(page, IndexConfig(kind=kind, levels=2,
+                                              compiled_node_width=1,
+                                              node_width=4))
+    seqs = []
+    for i in range(n_seqs):
+        toks = rng.integers(0, 100, rng.integers(page, 5 * page))
+        n_pages = len(toks) // page
+        store.insert(toks, [{"i": (i, j)} for j in range(n_pages)])
+        seqs.append(toks)
+    probe = seqs[rng.integers(0, n_seqs)]
+    n, payloads = store.lookup(probe)
+    assert n == len(probe) // page                 # full self-hit
+    # and a random probe returns only verified pages
+    q = rng.integers(0, 100, 3 * page)
+    n2, _ = store.lookup(q)
+    if n2:
+        s = None
+        for i, h in enumerate(chain_hashes(q, page)[:n2]):
+            assert h in store.hashes
