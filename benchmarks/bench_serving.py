@@ -42,12 +42,16 @@ def run():
     for kind, cfg in [
         ("binary", IndexConfig(kind="binary")),
         ("css", IndexConfig(kind="css", node_width=128)),
+        ("kary", IndexConfig(kind="kary", node_width=127)),
         ("fast", IndexConfig(kind="fast", node_width=127, page_depth=2)),
         ("nitrogen", IndexConfig(kind="nitrogen", levels=3,
                                  compiled_node_width=3)),
+        ("tiered", IndexConfig(kind="tiered")),
     ]:
         idx = build_index(hashes, config=cfg)
-        fn = jax.jit(idx.search)
+        # tiered search has a host-side schedule stage, so it cannot sit under
+        # one jax.jit; its device stages are jit-cached internally
+        fn = idx.search if kind == "tiered" else jax.jit(idx.search)
         us = time_fn(fn, probes)
         emit(f"serving/prefix-probe/{kind}", us,
              f"probes_per_s={256/(us*1e-6):.0f}")

@@ -1,0 +1,98 @@
+"""Tiered-engine benchmark (ours, DESIGN.md §4): batch size x tree size x
+index kind, plus the sort-and-bucket schedule statistics that determine the
+HBM tier's DMA efficiency.
+
+Emits the usual CSV lines *and* writes ``BENCH_tiered.json`` with per-kind
+throughput so downstream tooling (experiments/render_tables.py, CI trend
+jobs) can diff runs.
+
+Workload: half the batch are Zipf-distributed hits (thesis §5.2.1 — skewed
+re-reference is what serving traffic looks like and what makes buckets
+deep), half uniform misses.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_tiered [--full] [--out F]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.core import IndexConfig, build_index
+from repro.engine import tiered
+from ._timing import emit, time_fn, zipf_queries
+
+KINDS = {
+    "binary": lambda: IndexConfig(kind="binary"),
+    "css": lambda: IndexConfig(kind="css", node_width=128),
+    "kary": lambda: IndexConfig(kind="kary", node_width=127),
+    "fast": lambda: IndexConfig(kind="fast", node_width=127, page_depth=2),
+    "nitrogen": lambda: IndexConfig(kind="nitrogen", levels=3,
+                                    compiled_node_width=3),
+    "tiered": lambda: IndexConfig(kind="tiered"),
+}
+
+
+def _queries(keys: np.ndarray, batch: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    hits = zipf_queries(keys, batch // 2, seed=seed)
+    misses = rng.integers(0, 2**31 - 2, batch - batch // 2).astype(np.int32)
+    return np.concatenate([hits, misses])
+
+
+def run(sizes=(2**14, 2**17), batches=(1024, 8192), out="BENCH_tiered.json"):
+    rng = np.random.default_rng(7)
+    results = []
+    for n in sizes:
+        keys = np.unique(rng.integers(0, 2**31 - 2, int(n * 1.1)
+                                      ).astype(np.int32))[:n]
+        oracle_sorted = np.sort(keys)
+        for batch in batches:
+            qs = _queries(keys, batch, seed=n % 1000 + batch)
+            want = np.searchsorted(oracle_sorted, qs, side="left")
+            for kind, mk in KINDS.items():
+                idx = build_index(keys, config=mk())
+                fn = idx.search if kind == "tiered" else jax.jit(idx.search)
+                got = np.asarray(fn(qs))
+                assert np.array_equal(got, want), f"{kind} n={n} b={batch}"
+                us = time_fn(fn, qs)
+                rec = {"kind": kind, "n": int(n), "batch": int(batch),
+                       "us_per_batch": round(us, 2),
+                       "queries_per_s": round(batch / (us * 1e-6), 0),
+                       "tree_bytes": idx.tree_bytes}
+                if kind == "tiered":
+                    _, plan = tiered.search_with_plan(idx.impl, qs)
+                    rec["schedule"] = {
+                        "grid": plan.grid, "steps_used": plan.steps_used,
+                        "occupancy": round(plan.occupancy, 3),
+                        "num_pages": idx.impl.num_pages,
+                        "leaf_width": idx.impl.leaf_width,
+                        "top_kind": idx.impl.top_kind,
+                    }
+                results.append(rec)
+                emit(f"tiered/{kind}/n{n}/b{batch}", us,
+                     f"qps={rec['queries_per_s']:.0f}")
+    payload = {"backend": jax.default_backend(),
+               "interpret_kernels": jax.default_backend() == "cpu",
+               "results": results}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out} ({len(results)} rows)")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="add the 1M-key tree (slow under interpret mode)")
+    ap.add_argument("--out", default="BENCH_tiered.json")
+    args = ap.parse_args()
+    sizes = (2**14, 2**17, 2**20) if args.full else (2**14, 2**17)
+    run(sizes=sizes, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

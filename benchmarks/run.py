@@ -11,7 +11,7 @@ import time
 import traceback
 
 MODULES = ["bench_fig5_1", "bench_fig5_2", "bench_fig5_3", "bench_table4_1",
-           "bench_serving"]
+           "bench_serving", "bench_tiered"]
 
 
 def main() -> None:

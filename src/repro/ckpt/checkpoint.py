@@ -18,9 +18,14 @@ from typing import Any, Optional
 import numpy as np
 import jax
 
+try:                                      # jax >= 0.6
+    _flatten_with_path = jax.tree.flatten_with_path
+except AttributeError:                    # jax 0.4.x
+    _flatten_with_path = jax.tree_util.tree_flatten_with_path
+
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = _flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -102,7 +107,7 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
             continue                            # torn checkpoint: skip back
         with np.load(os.path.join(path, "arrays.host0.npz")) as z:
             arrays = {k: z[k] for k in z.files}
-        flat, treedef = jax.tree.flatten_with_path(target)
+        flat, treedef = _flatten_with_path(target)
         leaves = []
         sflat = jax.tree.leaves(shardings) if shardings is not None else None
         for i, (pth, leaf) in enumerate(flat):

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from . import sorted_array, css_tree, kary, fast_tree, nitrogen
 
-KINDS = ("binary", "css", "kary", "fast", "nitrogen")
+KINDS = ("binary", "css", "kary", "fast", "nitrogen", "tiered")
 
 
 @dataclass(frozen=True)
@@ -30,6 +30,8 @@ class IndexConfig:
     compiled_node_width: int = 3  # nitrogen: separators per compiled node
     bottom: str = "binary"       # nitrogen: base approach under the code
     intra: str = "vector"        # css: intra-node search style
+    top: str = "auto"            # tiered: top tier ('auto'|'nitrogen'|'kary')
+    tile: int = 128              # tiered: queries per bucket / grid step
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -53,7 +55,7 @@ class Index:
 
     def search(self, queries) -> jnp.ndarray:
         q = jnp.asarray(queries)
-        mod = _MODULES[self.config.kind]
+        mod = _module_for(self.config.kind)
         return mod.search(self.impl, q)
 
     def search_range(self, lo, hi) -> tuple:
@@ -100,6 +102,15 @@ _MODULES = {
 }
 
 
+def _module_for(kind: str):
+    """Searcher module per kind; the tiered engine is imported lazily to
+    keep core -> engine -> core from becoming an import cycle."""
+    if kind == "tiered":
+        from ..engine import tiered
+        return tiered
+    return _MODULES[kind]
+
+
 def build_index(keys, values=None, config: IndexConfig = IndexConfig()) -> Index:
     keys = np.asarray(keys)
     order = np.argsort(keys, kind="stable")
@@ -126,6 +137,10 @@ def build_index(keys, values=None, config: IndexConfig = IndexConfig()) -> Index
         impl = nitrogen.build(srt, levels=c.levels,
                               node_width=c.compiled_node_width, bottom=c.bottom,
                               css_node_width=c.node_width)
+    elif c.kind == "tiered":
+        from ..engine import tiered
+        impl = tiered.build(srt, leaf_width=c.leaf_width, tile=c.tile,
+                            top=c.top)
     else:  # pragma: no cover
         raise AssertionError
     return Index(config=c, impl=impl, keys_sorted=jnp.asarray(srt),

@@ -38,6 +38,11 @@ def as_sorted_numpy(keys) -> np.ndarray:
     return srt
 
 
+def ceil_to(x: int, m: int) -> int:
+    """Round x up to a multiple of m (tile/lane alignment everywhere)."""
+    return -(-x // m) * m
+
+
 def next_pow(base: int, n: int) -> int:
     """Smallest base**L with base**L >= n; returns the exponent L."""
     level, cap = 0, 1

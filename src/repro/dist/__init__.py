@@ -1,0 +1,3 @@
+# Distribution layer: sharding rules shared by train/serve/dry-run, and
+# gradient compression for the data-parallel allreduce.
+from . import sharding, compression  # noqa: F401

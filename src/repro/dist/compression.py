@@ -1,0 +1,65 @@
+"""Gradient compression for the data-parallel allreduce: int8 quantization
+with error feedback (1-bit-Adam / PowerSGD lineage, int8 variant).
+
+Reference semantics operate on the *stacked-device* form: every gradient
+leaf carries a leading device axis ``[D, ...]`` (row d = device d's local
+gradient). One round:
+
+    c_d   = Q8(g_d + e_d)          per-device quantize with carried error
+    e_d'  = (g_d + e_d) - c_d      residual kept locally (error feedback)
+    out   = mean_d(c_d)            the allreduce, broadcast back to [D, ...]
+
+The residual re-enters the next round's quantizer, so quantization error
+averages out across steps instead of accumulating — the compensated
+two-round mean is strictly closer to the true mean than one round alone
+(asserted in tests/test_dist.py). On a real mesh the same math runs under
+shard_map with ``lax.pmean`` over the data axis; the stacked form is
+bit-identical and runs anywhere, which is what the tests and the dry-run
+exercise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(grads):
+    """Zeroed error-feedback residuals, one per gradient leaf."""
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def _quantize_int8(x):
+    """Per-device-slice symmetric int8 quantization. x: [D, ...]; the scale
+    is per leading row (each device scales its own tensor)."""
+    red = tuple(range(1, x.ndim))
+    scale = jnp.max(jnp.abs(x), axis=red, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q * scale                                   # dequantized
+
+
+def make_compressed_allreduce(mesh, axis: str):
+    """Returns f(grads, err) -> (reduced, err'): int8-compressed mean over
+    the device axis with error feedback. `grads`/`err` are pytrees whose
+    leaves carry the leading [D] device axis; the reduced mean is broadcast
+    back to the same shape (every device holds the result, as after a real
+    allreduce over `axis`)."""
+    n_dev = mesh.shape[axis]
+
+    def one(g, e):
+        assert g.shape[0] == n_dev, (g.shape, n_dev)
+        compensated = g + e
+        deq = _quantize_int8(compensated)
+        new_err = compensated - deq
+        mean = jnp.mean(deq, axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, g.shape), new_err
+
+    def f(grads, err):
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(err)
+        pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        out = tdef.unflatten([p[0] for p in pairs])
+        new_err = tdef.unflatten([p[1] for p in pairs])
+        return out, new_err
+
+    return f

@@ -1,0 +1,161 @@
+"""Sharding rules for every production mesh (DESIGN.md §2.2).
+
+One policy, applied uniformly by shape — FSDP x tensor-parallel:
+
+  * >=2-D parameters shard their second-to-last dim over the data axes
+    (FSDP: the parameter itself is distributed across the DP fleet) and
+    their last dim over the ``model`` axis (tensor parallel);
+  * 1-D / scalar leaves (norms, counters) are replicated;
+  * batches shard their leading dim over the data axes;
+  * decode caches shard batch over data and (configurably) head_dim or the
+    kv-head dim over ``model``.
+
+Every rule is divisibility-guarded (``_maybe``): a dim that does not divide
+its mesh axes stays unsharded instead of erroring, so the same functions
+serve the 16x16 production mesh, the 2x16x16 multi-pod mesh, and tiny CI
+meshes.
+
+``activation_sharding`` / ``constrain_activations`` are the activation-side
+hook: inside the context, the per-group scan carry in the transformer is
+constrained to (data-sharded batch, optional sequence axis); outside any
+context it is an exact no-op, which is what keeps single-device tests and
+benchmarks oblivious to this module.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axis names of a mesh: every axis that is not 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh, axes, size: int):
+    """`axes` if `size` divides the total mesh extent of `axes`, else None
+    (replicate rather than error on uneven shapes)."""
+    if axes is None:
+        return None
+    ext = _axis_size(mesh, axes)
+    if ext <= 1 or size % ext:
+        return None
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
+
+
+def _leaf_spec(mesh, shape) -> P:
+    """FSDP x TP rule for one parameter leaf."""
+    if len(shape) < 2:
+        return P()
+    dp = dp_axes(mesh)
+    dims = [None] * len(shape)
+    dims[-2] = _maybe(mesh, dp, shape[-2])
+    dims[-1] = _maybe(mesh, "model", shape[-1]) if "model" in mesh.axis_names else None
+    return P(*dims)
+
+
+def params_shardings(mesh, params):
+    """NamedSharding pytree matching `params` (concrete or abstract)."""
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, _leaf_spec(mesh, x.shape)), params)
+
+
+def opt_state_shardings(mesh, opt_state, param_shardings):
+    """AdamW moments follow the parameters; the step counter is replicated."""
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(mesh, has_memory: bool = False, batch: int | None = None):
+    """Input shardings: batch dim over the data axes, everything else
+    replicated. Keys mirror the train/prefill batch dicts exactly (the tree
+    is passed straight to jit in_shardings); decode's scalar token sharding
+    is built at the call site. Pass `batch` to divisibility-guard the batch
+    dim like every other rule; without it the caller asserts divisibility
+    (jit rejects uneven input shardings)."""
+    dp = dp_axes(mesh)
+    if batch is not None:
+        dp_spec = _maybe(mesh, dp, batch)
+    else:
+        dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = {
+        "tokens": NamedSharding(mesh, P(dp_spec, None)),
+        "labels": NamedSharding(mesh, P(dp_spec, None)),
+    }
+    if has_memory:
+        out["memory"] = NamedSharding(mesh, P(dp_spec, None, None))
+    return out
+
+
+def cache_shardings(mesh, abstract_cache, batch: int, kv_shard: str = "hd"):
+    """Decode-cache shardings. Leaves are [R, B, ...]: B shards over data;
+    kv_shard picks the model-parallel dim of attention entries —
+    'hd' (head_dim, the last dim) or 'heads' (the kv-head dim)."""
+    dp = dp_axes(mesh)
+    b_axis = _maybe(mesh, dp, batch)
+
+    def one(x):
+        shape = x.shape
+        if len(shape) == 1:                       # lengths [B]
+            return NamedSharding(mesh, P(b_axis))
+        dims = [None] * len(shape)
+        if len(shape) >= 2:
+            dims[1] = b_axis
+        if len(shape) >= 3 and "model" in mesh.axis_names:
+            tp_dim = len(shape) - 1 if kv_shard == "hd" else len(shape) - 2
+            if tp_dim > 1:
+                dims[tp_dim] = _maybe(mesh, "model", shape[tp_dim])
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(one, abstract_cache)
+
+
+# ----------------------------------------------------------- activations
+_ctx = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh, seq_axis: Optional[str] = None):
+    """Inside this context, ``constrain_activations`` pins [B, S, D]
+    activations to (data-sharded batch, seq_axis-sharded sequence). Nestable;
+    a no-op everywhere outside."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, seq_axis)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def constrain_activations(x):
+    """Sharding constraint on a [B, S, D] activation; identity outside an
+    ``activation_sharding`` context or when the shape does not divide."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, seq_axis = state
+    dp = dp_axes(mesh)
+    dims = [None] * x.ndim
+    dims[0] = _maybe(mesh, dp, x.shape[0])
+    if seq_axis is not None and x.ndim >= 2:
+        dims[1] = _maybe(mesh, seq_axis, x.shape[1])
+    spec = P(*dims)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

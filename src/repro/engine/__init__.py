@@ -1,0 +1,7 @@
+# Tiered batch-search engine: sort-and-bucket scheduling over the compiled /
+# VMEM / HBM tiers (DESIGN.md §4). `tiered` is the single-device engine
+# behind IndexConfig(kind="tiered"); `sharded` splits the key space over a
+# mesh axis and all-gathers ranks via psum.
+from .schedule import BucketPlan, bucket_plan  # noqa: F401
+from .tiered import TieredIndex, build, plan_tiers, search, searcher  # noqa: F401
+from . import sharded  # noqa: F401

@@ -1,0 +1,89 @@
+"""Sort-and-bucket scheduling for batched index search (DESIGN.md §2.1).
+
+A query batch that descends the top tier yields one leaf-page id per query.
+Streaming those pages in *request order* would DMA the same page many times;
+sorting the batch by page id first (argsort + segment boundaries) turns the
+bottom tier into a sequential sweep over the distinct pages actually
+touched — the batch-traversal idea of BS-tree (arXiv 2505.01180) and the
+FPGA level-wise batch paper (arXiv 2604.21117), landed on the TPU's
+scalar-prefetched DMA grid.
+
+The plan is computed host-side with vectorized numpy (O(Q log Q), no Python
+loop over queries) and padded to a **static grid ladder**: the grid size G
+is rounded up to the next power of two, so the downstream
+``page_search_bucketed`` Pallas call — and everything jitted around it —
+sees only O(log Q) distinct shapes per (n, batch-shape) and the jit cache
+stays warm under serving traffic with wobbling bucket counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    """DMA plan for one sorted batch.
+
+    gather:     [G_pad * tile] int32 — indices into the request-order query
+                array; slot k holds the query served in grid step k // tile,
+                lane k % tile. Padded slots point at query 0 and are masked.
+    valid:      [G_pad * tile] bool — True where `gather` is a real query.
+    step_pages: [G_pad] int32 — the one leaf page DMA'd by each grid step
+                (padded steps re-fetch page 0; their lanes are invalid).
+    grid:       G_pad (static, power of two).
+    steps_used: the un-padded grid size G (for stats / occupancy).
+    """
+    gather: np.ndarray
+    valid: np.ndarray
+    step_pages: np.ndarray
+    grid: int
+    steps_used: int
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of kernel lanes doing real work."""
+        return float(self.valid.sum()) / max(self.valid.size, 1)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def bucket_plan(page_of: np.ndarray, tile: int) -> BucketPlan:
+    """Group queries by leaf page into grid steps of `tile` lanes.
+
+    Queries in one step all live in step_pages[step]; a page with more than
+    `tile` queries spans consecutive steps. Fully vectorized: argsort, run
+    boundaries via neighbor comparison, per-run tile counts via cumsum.
+    """
+    page_of = np.asarray(page_of)
+    q_n = page_of.size
+    if q_n == 0:
+        raise ValueError("empty query batch")
+    order = np.argsort(page_of, kind="stable")
+    sp = page_of[order]                                  # sorted page ids
+    new_run = np.empty(q_n, bool)
+    new_run[0] = True
+    np.not_equal(sp[1:], sp[:-1], out=new_run[1:])
+    run_id = np.cumsum(new_run) - 1                      # [Q] run index
+    run_start = np.flatnonzero(new_run)                  # [R]
+    run_len = np.diff(np.append(run_start, q_n))         # [R]
+    tiles_per_run = -(-run_len // tile)                  # ceil
+    tile_off = np.concatenate(([0], np.cumsum(tiles_per_run)[:-1]))
+    slot = np.arange(q_n) - run_start[run_id]            # position within run
+    step = (tile_off[run_id] + slot // tile).astype(np.int64)
+    pos = slot % tile
+    G = int(tiles_per_run.sum())
+    G_pad = _next_pow2(G)
+
+    gather = np.zeros(G_pad * tile, np.int32)
+    valid = np.zeros(G_pad * tile, bool)
+    flat = step * tile + pos
+    gather[flat] = order
+    valid[flat] = True
+    step_pages = np.zeros(G_pad, np.int32)
+    step_pages[step] = sp                                # every step of a run
+    return BucketPlan(gather=gather, valid=valid, step_pages=step_pages,
+                      grid=G_pad, steps_used=G)

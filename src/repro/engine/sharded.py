@@ -1,0 +1,94 @@
+"""Key-space-sharded tiered search over a device mesh (DESIGN.md §4.2).
+
+The sorted key array is split into D contiguous, sentinel-padded shards —
+one per device along a mesh data axis. Each device runs the two-tier search
+of its shard (page-boundary top + in-page count) against the *replicated*
+query batch, producing its local ``|{k in shard : k < q}|``. Because
+searchsorted-left rank is a pure count of keys below q, the global rank is
+the psum of the local counts — the all-gather of ranks falls out of one
+scalar collective, with no query routing and no rank renumbering.
+
+The per-shard search is expressed in jnp (wide compares + one page gather)
+rather than Pallas so it shard_maps over any axis size, including the
+single-device CI mesh; the dense tiered engine (tiered.py) is the
+single-device fast path with the DMA-scheduled kernel bottom.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                                       # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                        # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from ..core.util import as_sorted_numpy, ceil_to as _ceil_to, sentinel_for
+
+
+@dataclass(frozen=True)
+class ShardedTieredIndex:
+    mesh: object
+    axis: str
+    pages: jnp.ndarray           # [D, pages_per_shard, lw] sentinel padded
+    seps: jnp.ndarray            # [D, pages_per_shard] page-last-keys
+    n: int
+    leaf_width: int
+    shard_size: int              # padded keys per shard
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.pages.shape[0])
+
+
+def build(keys, mesh, *, axis: str = "data",
+          leaf_width: int = 128) -> ShardedTieredIndex:
+    """Split the sorted key space into one contiguous shard per device on
+    `mesh`'s `axis`; each shard gets its own page array + boundary seps."""
+    srt = as_sorted_numpy(keys)
+    n = int(srt.size)
+    d = int(mesh.shape[axis])
+    lw = int(leaf_width)
+    shard_size = _ceil_to(max(-(-n // d), 1), lw)
+    pages_per_shard = shard_size // lw
+    sent = sentinel_for(srt.dtype)
+    flat = np.full(d * shard_size, sent, srt.dtype)
+    flat[:n] = srt
+    pages = flat.reshape(d, pages_per_shard, lw)
+    seps = pages[:, :, -1].copy()
+    pages_sh = jax.device_put(
+        jnp.asarray(pages), NamedSharding(mesh, P(axis, None, None)))
+    seps_sh = jax.device_put(
+        jnp.asarray(seps), NamedSharding(mesh, P(axis, None)))
+    return ShardedTieredIndex(mesh=mesh, axis=axis, pages=pages_sh,
+                              seps=seps_sh, n=n, leaf_width=lw,
+                              shard_size=shard_size)
+
+
+def search(index: ShardedTieredIndex, queries) -> jnp.ndarray:
+    """Replicated ranks for a replicated query batch: per-shard two-tier
+    count, psum over the key-space axis."""
+    q = jnp.asarray(queries)
+    axis = index.axis
+    lw = index.leaf_width
+
+    def local_count(pages, seps, q):
+        pages, seps = pages[0], seps[0]          # [P, lw], [P]
+        page = jnp.sum(seps[None, :] < q[:, None], axis=-1).astype(jnp.int32)
+        page_c = jnp.minimum(page, seps.shape[0] - 1)
+        rows = jnp.take(pages, page_c, axis=0)   # [Q, lw]
+        in_page = jnp.sum(rows < q[:, None], axis=-1).astype(jnp.int32)
+        # pages fully below are full of real keys (padding is trailing-only)
+        local = jnp.where(page >= seps.shape[0],
+                          jnp.int32(pages.size), page_c * lw + in_page)
+        return jax.lax.psum(local[None, :], axis)
+
+    f = _shard_map(local_count, mesh=index.mesh,
+                   in_specs=(P(axis, None, None), P(axis, None), P()),
+                   out_specs=P())
+    ranks = f(index.pages, index.seps, q)[0]
+    return jnp.minimum(ranks, index.n)

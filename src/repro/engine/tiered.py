@@ -1,0 +1,206 @@
+"""Tiered batch-search engine (DESIGN.md §4): one index, three memory tiers.
+
+Composition per batch:
+
+  1. **Top tier** — map each query to its leaf-page id. The top is itself an
+     index over the page-last-keys array (`seps[p]` = last slot of page p),
+     because ``page_of(q) == |{p : seps[p] < q}|`` — the page id is exactly
+     the searchsorted rank among page boundaries, so the top tier is a
+     recursive instance of the same search problem at 1/leaf_width the size.
+     Small tops compile to a NitroGen constant network (XLA literal pool —
+     the "instruction cache" tier); larger tops run the k-ary VMEM kernel.
+  2. **Schedule** — sort-and-bucket the batch by page id (engine/schedule.py,
+     DESIGN.md §2.1), padded to a power-of-two grid.
+  3. **Bottom tier** — ``page_search_bucketed`` streams exactly one leaf
+     page HBM->VMEM per grid step via scalar-prefetched DMA.
+  4. **Un-permute** — scatter ranks back to request order (valid-masked,
+     out-of-bounds drop).
+
+Tier sizing is automatic: ``plan_tiers`` grows the leaf width until the top
+tier fits the VMEM budget check from ``kernels/ops.py``. The top descent and
+the finish (gather -> kernel -> scatter) are jit-cached per (n, batch-shape);
+the schedule's power-of-two grid ladder keeps the finish cache to O(log Q)
+entries per batch shape.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import kary, nitrogen
+from ..core.util import (as_sorted_numpy, ceil_to as _ceil_to, next_pow,
+                         pad_to, sentinel_for)
+from ..kernels import ops
+from ..kernels import kary_search as _kary
+from ..kernels import page_search as _page
+from .schedule import BucketPlan, bucket_plan
+
+# Tops at or below this page count compile to a NitroGen constant network;
+# larger tops use the k-ary VMEM kernel (trace cost of the constant network
+# grows with the page count; see DESIGN.md §3 for the crossover reasoning).
+NITROGEN_TOP_MAX_PAGES = 256
+
+
+def plan_tiers(n: int, *, tile: int = 128,
+               vmem_budget: int = ops.VMEM_BUDGET_BYTES):
+    """Automatic tier sizing: the smallest tile-aligned leaf width whose
+    page-boundary top tier passes the kary-kernel VMEM budget (half the
+    budget is reserved for query tiles and the streamed page)."""
+    budget = vmem_budget // 2
+    max_pages = tile
+    while ops.kary_vmem_bytes(max_pages * 2) <= budget:
+        max_pages *= 2
+    leaf_width = max(tile, _ceil_to(-(-n // max_pages), tile))
+    num_pages = -(-n // leaf_width)
+    top_kind = "nitrogen" if num_pages <= NITROGEN_TOP_MAX_PAGES else "kary"
+    return leaf_width, num_pages, top_kind
+
+
+@dataclass(frozen=True)
+class TieredIndex:
+    # no sorted-array copy here: the padded leaf pages ARE the bottom tier
+    # storage (api.Index keeps keys_sorted for found/values semantics)
+    pages: jnp.ndarray           # [num_pages, lw_pad] sentinel-padded leaves
+    seps: jnp.ndarray            # [num_pages] last slot of each page
+    n: int
+    leaf_width: int
+    lw_pad: int
+    num_pages: int
+    tile: int                    # queries per grid step (bucket width)
+    top_kind: str                # 'nitrogen' | 'kary' | 'trivial'
+    top: Any                     # the inner index over `seps` (None if trivial)
+    page_of: Callable            # jit-cached: q[batch] -> leaf-page id
+    interpret: bool = True
+
+    @property
+    def tree_bytes(self) -> int:
+        # the leaf pages replace the sorted array; the resident top tier is
+        # the seps structure (compiled tops live in the executable: 0 bytes)
+        if self.top_kind == "kary":
+            return int(self.top.tree.size * self.top.tree.dtype.itemsize)
+        return 0
+
+
+def _make_page_of(top_kind: str, top, num_pages: int, *, lane: int,
+                  tile_rows: int, interpret: bool) -> Callable:
+    """Build the jitted top-tier descent: query batch -> clipped page id."""
+    if top_kind == "trivial":
+        return jax.jit(lambda q: jnp.zeros(q.shape, jnp.int32))
+    if top_kind == "nitrogen":
+        @jax.jit
+        def page_of(q):
+            return jnp.minimum(nitrogen.search(top, q), num_pages - 1)
+        return page_of
+    # kary: pre-split the tree into per-level VMEM operands once at build
+    levels = ops.kary_levels(top, lane)
+    fanout = top.fanout
+    tq = tile_rows * lane
+
+    @jax.jit
+    def page_of(q):
+        n_q = q.shape[0]
+        pad = _ceil_to(max(n_q, 1), tq) - n_q
+        qp = jnp.concatenate([q, jnp.zeros((pad,), q.dtype)]) if pad else q
+        ranks = _kary.kary_search_tiled(qp.reshape(-1, lane), levels,
+                                        fanout=fanout, tile_rows=tile_rows,
+                                        interpret=interpret)
+        return jnp.minimum(ranks.reshape(-1)[:n_q], num_pages - 1)
+
+    return page_of
+
+
+def build(keys, *, leaf_width: int | None = None, tile: int = 128,
+          top: str = "auto", vmem_budget: int = ops.VMEM_BUDGET_BYTES,
+          interpret: bool = True) -> TieredIndex:
+    if top not in ("auto", "nitrogen", "kary"):
+        raise ValueError(f"unknown top tier {top!r}; "
+                         "want 'auto', 'nitrogen' or 'kary'")
+    srt = as_sorted_numpy(keys)
+    n = int(srt.size)
+    auto_lw, _, auto_top = plan_tiers(n, tile=tile, vmem_budget=vmem_budget)
+    lw = int(leaf_width) if leaf_width else auto_lw
+    num_pages = -(-n // lw)
+    lw_pad = _ceil_to(lw, 128)
+    sent = sentinel_for(srt.dtype)
+    pages = np.full((num_pages, lw_pad), sent, srt.dtype)
+    pages[:, :lw] = pad_to(srt, num_pages * lw).reshape(num_pages, lw)
+    seps = pages[:, lw - 1].copy()          # ascending; sentinel on partial tail
+
+    top_kind = top
+    if top == "auto":
+        top_kind = auto_top if leaf_width is None else (
+            "nitrogen" if num_pages <= NITROGEN_TOP_MAX_PAGES else "kary")
+    if num_pages == 1:
+        top_kind = "trivial"
+    if top_kind == "nitrogen":
+        levels = max(1, next_pow(4, num_pages) - 1)
+        top_idx = nitrogen.build(seps, levels=levels, node_width=3,
+                                 bottom="vector")
+    elif top_kind == "kary":
+        top_idx = kary.build(seps, node_width=127)
+        vmem = ops.kary_vmem_bytes(num_pages, node_width=127)
+        if vmem > vmem_budget:
+            raise ValueError(
+                f"top tier over {num_pages} pages needs ~{vmem/2**20:.1f} MiB "
+                "VMEM; increase leaf_width or lower vmem_budget pressure")
+    else:                                   # trivial: single-page index
+        top_idx = None
+
+    page_of = _make_page_of(top_kind, top_idx, num_pages, lane=128,
+                            tile_rows=8, interpret=interpret)
+    return TieredIndex(
+        pages=jnp.asarray(pages),
+        seps=jnp.asarray(seps), n=n, leaf_width=lw, lw_pad=lw_pad,
+        num_pages=num_pages, tile=int(tile), top_kind=top_kind, top=top_idx,
+        page_of=page_of, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_width", "n", "interpret"))
+def _finish(q, pages, gather, valid, step_pages, *, leaf_width: int, n: int,
+            interpret: bool):
+    """Gather sorted tiles -> bucketed page kernel -> un-permute to request
+    order. Static grid comes from `gather`'s (ladder-padded) shape."""
+    tile = gather.shape[0] // step_pages.shape[0]
+    qb = jnp.take(q, gather, axis=0).reshape(step_pages.shape[0], tile)
+    ranks = _page.page_search_bucketed(qb, step_pages, pages,
+                                       leaf_width=leaf_width,
+                                       interpret=interpret)
+    flat = ranks.reshape(-1)
+    q_n = q.shape[0]
+    # padded lanes scatter out of bounds and are dropped
+    out = jnp.zeros((q_n,), jnp.int32).at[
+        jnp.where(valid, gather, q_n)].set(flat, mode="drop")
+    return jnp.minimum(out, n)
+
+
+def search_with_plan(index: TieredIndex, queries) -> tuple:
+    """Full tiered search; also returns the BucketPlan (for stats)."""
+    q = jnp.asarray(queries)
+    if q.shape[0] == 0:                     # same contract as every kind
+        return jnp.zeros((0,), jnp.int32), None
+    pids = np.asarray(index.page_of(q))
+    plan = bucket_plan(pids, index.tile)
+    ranks = _finish(q, index.pages, jnp.asarray(plan.gather),
+                    jnp.asarray(plan.valid), jnp.asarray(plan.step_pages),
+                    leaf_width=index.leaf_width, n=index.n,
+                    interpret=index.interpret)
+    return ranks, plan
+
+
+def search(index: TieredIndex, queries) -> jnp.ndarray:
+    ranks, _ = search_with_plan(index, queries)
+    return ranks
+
+
+def searcher(index: TieredIndex) -> Callable:
+    """The engine's serving entry point: a closure whose device stages (top
+    descent, finish) are jit-cached per batch shape, with the host-side
+    bucket plan in between."""
+    def run(queries):
+        return search(index, queries)
+    return run

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 
 from ..core.kary import KaryTreeIndex
 from ..core.fast_tree import FastTreeIndex, leaf_page_of
-from ..core.util import sentinel_for
+from ..core.util import ceil_to as _ceil_to
+from ..core.util import next_pow, sentinel_for
 from . import kary_search as _kary
 from . import page_search as _page
 from . import cdf_search as _cdf
@@ -19,8 +20,17 @@ from . import cdf_search as _cdf
 VMEM_BUDGET_BYTES = 12 * 2**20     # conservative per-core VMEM for tree+onehot
 
 
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
+def kary_vmem_bytes(n_keys: int, *, node_width: int = 127, lane: int = 128,
+                    tile_rows: int = 8) -> int:
+    """VMEM the in-VMEM k-ary kernel needs for a tree over `n_keys`:
+    lane-padded per-level operands plus the deepest level's one-hot gather
+    matrix. This is the budget check behind tier sizing (DESIGN.md §3)."""
+    f = node_width + 1
+    depth = max(next_pow(f, n_keys + 1), 1)
+    wpad = _ceil_to(node_width, lane)
+    tree = sum(f**l * wpad for l in range(depth)) * 4
+    onehot = tile_rows * lane * f ** (depth - 1) * 4
+    return tree + onehot
 
 
 def kary_levels(index: KaryTreeIndex, lane: int) -> list[jnp.ndarray]:

@@ -85,7 +85,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
     psh = SH.params_shardings(mesh, aparams)
     specs = input_specs(cfg, shape_name, mesh)
-    bsh = SH.batch_shardings(mesh, has_memory="memory" in specs)
+    bsh = SH.batch_shardings(mesh, has_memory="memory" in specs, batch=B)
     meta = {"arch": arch, "shape": shape_name,
             "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
             "seq_len": S, "global_batch": B, "kind": sh["kind"],
@@ -168,6 +168,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     meta["memory"]["peak_bytes_per_device"] = peak
     meta["memory"]["fits_16GB"] = bool(peak < 16 * 2**30)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     meta["cost_analysis"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

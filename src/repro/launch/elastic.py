@@ -16,6 +16,7 @@ import numpy as np
 import jax
 
 from ..dist import sharding as SH
+from .mesh import _make_mesh
 
 
 def choose_mesh(n_devices: int, *, prefer_model: int = 16):
@@ -25,10 +26,8 @@ def choose_mesh(n_devices: int, *, prefer_model: int = 16):
     while n_devices % model:
         model -= 1
     data = n_devices // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        devices=jax.devices()[:data * model],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"),
+                      jax.devices()[:data * model])
 
 
 def reshard_state(state: dict, new_mesh, abstract_params) -> dict:

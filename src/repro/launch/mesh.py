@@ -5,6 +5,15 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes, devices):
+    """jax.make_mesh across jax versions: axis_types only where supported
+    (>= 0.5 exposes jax.sharding.AxisType; 0.4.x does not)."""
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devices, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading pod=2 axis
     (512 chips). Requires the runtime to expose enough devices — the dry-run
@@ -19,14 +28,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for {'multi' if multi_pod else 'single'}-pod "
             f"mesh, have {len(devs)} — run under dryrun.py (which forces 512 "
             "host devices) or on real hardware")
-    return jax.make_mesh(
-        shape, axes, devices=devs[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devs[:n])
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over whatever devices exist (CI/dist tests)."""
     import numpy as np
     n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, jax.devices()[:n])

@@ -20,8 +20,9 @@ def main():
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--index", default="nitrogen",
-                    choices=["binary", "css", "kary", "fast", "nitrogen"])
+    ap.add_argument("--index", default="tiered",
+                    choices=["binary", "css", "kary", "fast", "nitrogen",
+                             "tiered"])
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-p", type=float, default=0.9)
     args = ap.parse_args()

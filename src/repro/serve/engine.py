@@ -43,8 +43,11 @@ class ServeEngine:
         self.sampler = sampler
         self.dtype = compute_dtype
         self.pageable = cfg.family in ("dense", "moe")
+        # default probe structure is the tiered engine (DESIGN.md §4): it
+        # self-sizes from a one-page store up to VMEM-overflowing hash sets,
+        # so the store never needs re-configuring as traffic accumulates
         self.store = KV.PrefixPageStore(
-            page_size, index_config or IndexConfig(kind="nitrogen", levels=2))
+            page_size, index_config or IndexConfig(kind="tiered"))
         self.stats = EngineStats()
         self._jit_decode = jax.jit(
             lambda p, t, c: T.decode_step(cfg, p, t, c, compute_dtype=compute_dtype))

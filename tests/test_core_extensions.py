@@ -1,6 +1,9 @@
 """CSB+-tree (thesis §3.2, incremental updates) and range queries (§1.1)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import IndexConfig, build_index

@@ -3,6 +3,9 @@ agree with np.searchsorted(side='left') on rank, and with exact-match
 semantics on found/values."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import IndexConfig, build_index, KINDS

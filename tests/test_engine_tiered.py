@@ -1,0 +1,192 @@
+"""Tiered batch-search engine: oracle equality against np.searchsorted,
+sort-and-bucket schedule invariants, tier auto-sizing, and the key-space-
+sharded variant (subprocess, 8 forced host devices). Hypothesis-free so the
+suite collects on a bare CPU box."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import IndexConfig, build_index
+from repro.engine import schedule, tiered
+from repro.kernels import ops
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def oracle(keys, queries):
+    return np.searchsorted(np.sort(keys), queries, side="left").astype(np.int32)
+
+
+# ------------------------------------------------------------- oracle tests
+@pytest.mark.parametrize("n,q_n,desc", [
+    (1, 16, "single-element"),
+    (7, 64, "tiny"),
+    (300, 500, "non-pow2 small"),
+    (9001, 8192, "non-pow2, batch >= 8192"),
+    (16384, 8192, "pow2, full pages"),
+])
+def test_tiered_rank_matches_oracle_int32(n, q_n, desc):
+    rng = np.random.default_rng(n)
+    keys = rng.integers(0, 2**31 - 2, n).astype(np.int32)       # dups allowed
+    queries = np.concatenate([
+        keys[rng.integers(0, n, q_n // 2)],                      # hits
+        rng.integers(0, 2**31 - 2, q_n - q_n // 2).astype(np.int32),
+    ])
+    idx = build_index(keys, config=IndexConfig(kind="tiered"))
+    np.testing.assert_array_equal(np.asarray(idx.search(queries)),
+                                  oracle(keys, queries))
+
+
+def test_tiered_duplicate_heavy_keys():
+    """Pages full of one value; boundary separators repeat across pages."""
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 40, 5000).astype(np.int32)            # ~125 dups each
+    queries = np.arange(-2, 44, dtype=np.int32)
+    idx = build_index(keys, config=IndexConfig(kind="tiered", leaf_width=128))
+    np.testing.assert_array_equal(np.asarray(idx.search(queries)),
+                                  oracle(keys, queries))
+
+
+def test_tiered_all_miss_batch():
+    keys = (np.arange(4096, dtype=np.int32) * 4) + 2             # only even+2
+    queries = (np.arange(8192, dtype=np.int32) * 2) + 1          # all odd: miss
+    idx = build_index(keys, config=IndexConfig(kind="tiered"))
+    res = idx.lookup(queries)
+    assert not bool(np.asarray(res.found).any())
+    np.testing.assert_array_equal(np.asarray(res.rank), oracle(keys, queries))
+
+
+def test_tiered_kary_top_large_tree():
+    """leaf_width=128 over 128k keys forces the k-ary VMEM top tier."""
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 2**31 - 2, 131072).astype(np.int32)
+    queries = np.concatenate([keys[:4096],
+                              rng.integers(0, 2**31 - 2, 4096).astype(np.int32)])
+    idx = build_index(keys, config=IndexConfig(kind="tiered", leaf_width=128))
+    assert idx.impl.top_kind == "kary"
+    np.testing.assert_array_equal(np.asarray(idx.search(queries)),
+                                  oracle(keys, queries))
+
+
+def test_tiered_float32():
+    rng = np.random.default_rng(6)
+    keys = rng.normal(size=4000).astype(np.float32)
+    queries = np.concatenate([keys[::5],
+                              rng.normal(size=1000).astype(np.float32)])
+    idx = build_index(keys, config=IndexConfig(kind="tiered"))
+    np.testing.assert_array_equal(np.asarray(idx.search(queries)),
+                                  oracle(keys, queries))
+
+
+def test_tiered_permutation_invariance():
+    """Shuffling the batch must shuffle the ranks identically — the schedule
+    un-permutes exactly (DESIGN.md §2.1 contract)."""
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 2**31 - 2, 20000).astype(np.int32)
+    queries = np.concatenate([keys[rng.integers(0, 20000, 4096)],
+                              rng.integers(0, 2**31 - 2, 4096).astype(np.int32)])
+    idx = build_index(keys, config=IndexConfig(kind="tiered"))
+    base = np.asarray(idx.search(queries))
+    perm = rng.permutation(queries.size)
+    np.testing.assert_array_equal(np.asarray(idx.search(queries[perm])),
+                                  base[perm])
+
+
+def test_tiered_range_and_lookup_api():
+    """kind='tiered' supports the full Index facade, not just .search."""
+    keys = np.arange(0, 50_000, 5, dtype=np.int32)
+    vals = np.arange(keys.size, dtype=np.int32) * 7
+    idx = build_index(keys, vals, IndexConfig(kind="tiered"))
+    res = idx.lookup(np.array([0, 5, 7, 49_995, 10**6], np.int32))
+    np.testing.assert_array_equal(np.asarray(res.found),
+                                  [True, True, False, True, False])
+    assert int(np.asarray(res.values)[1]) == 7
+    lo, hi_excl, cnt = idx.search_range(np.array([10], np.int32),
+                                        np.array([29], np.int32))
+    assert int(cnt[0]) == 4                                      # 10,15,20,25
+
+
+# ------------------------------------------------------------- schedule
+def test_bucket_plan_partitions_batch_exactly():
+    rng = np.random.default_rng(11)
+    page_of = rng.integers(0, 37, 5000).astype(np.int32)
+    plan = schedule.bucket_plan(page_of, tile=64)
+    # every query appears exactly once among the valid lanes
+    assert sorted(plan.gather[plan.valid].tolist()) == list(range(5000))
+    # every valid lane's query lives in its step's page
+    steps = np.repeat(np.arange(plan.grid), 64)
+    assert (page_of[plan.gather[plan.valid]]
+            == plan.step_pages[steps[plan.valid]]).all()
+    assert plan.grid >= plan.steps_used and plan.grid & (plan.grid - 1) == 0
+    assert 0 < plan.occupancy <= 1
+
+
+def test_bucket_plan_single_page_is_dense():
+    plan = schedule.bucket_plan(np.zeros(256, np.int32), tile=128)
+    assert plan.steps_used == 2 and plan.grid == 2
+    assert plan.occupancy == 1.0
+
+
+def test_tiered_rejects_unknown_top():
+    # must raise even when the key set is small enough for the trivial top
+    with pytest.raises(ValueError, match="unknown top tier"):
+        tiered.build(np.arange(10, dtype=np.int32), top="bogus")
+
+
+# ------------------------------------------------------------- tier sizing
+def test_plan_tiers_respects_vmem_budget():
+    for n in [100, 10**5, 10**7, 10**9]:
+        lw, num_pages, top = tiered.plan_tiers(n)
+        assert lw % 128 == 0
+        assert num_pages == -(-n // lw)
+        assert ops.kary_vmem_bytes(num_pages) <= ops.VMEM_BUDGET_BYTES // 2
+    # a tighter budget must force wider leaves (fewer pages)
+    lw_small, _, _ = tiered.plan_tiers(10**7, vmem_budget=2**20)
+    lw_big, _, _ = tiered.plan_tiers(10**7)
+    assert lw_small >= lw_big
+
+
+# ------------------------------------------------------------- serve probe
+def test_prefix_store_accepts_tiered_kind():
+    from repro.serve.kv_cache import PrefixPageStore
+    store = PrefixPageStore(8, IndexConfig(kind="tiered"))
+    toks = np.arange(32, dtype=np.int32)
+    store.insert(toks, [{"pay": i} for i in range(4)])
+    n, payloads = store.lookup(toks)
+    assert n == 4 and [p["pay"] for p in payloads] == [0, 1, 2, 3]
+
+
+# ------------------------------------------------------------- sharded
+def test_sharded_search_8_devices_matches_oracle():
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import numpy as np
+        from repro.engine import sharded
+        from repro.launch.mesh import make_host_mesh
+
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 2**31 - 2, 50_000).astype(np.int32)
+        qs = np.concatenate([keys[rng.integers(0, keys.size, 1024)],
+                             rng.integers(0, 2**31 - 2, 1024).astype(np.int32)])
+        mesh = make_host_mesh((8,), ("data",))
+        idx = sharded.build(keys, mesh)
+        got = np.asarray(sharded.search(idx, qs))
+        want = np.searchsorted(np.sort(keys), qs, side="left")
+        print("RESULT:" + json.dumps({
+            "equal": bool(np.array_equal(got, want)),
+            "shards": idx.num_shards}))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDERR:\n{out.stderr[-3000:]}"
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][0]
+    r = json.loads(line[len("RESULT:"):])
+    assert r["equal"] and r["shards"] == 8
