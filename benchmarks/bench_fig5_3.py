@@ -45,12 +45,14 @@ def run():
     # is meaningless — report the DMA-plan structure instead: pages touched
     # and grid steps per batch (what the scalar-prefetch grid would stream).
     from repro.core.fast_tree import leaf_page_of
-    from repro.kernels.page_search import plan_buckets
+    from repro.engine.schedule import bucket_plan
     fidx = fast_tree.build(keys, node_width=127, page_depth=2)
     page_of = np.asarray(leaf_page_of(fidx, qs))
-    gather, valid, step_pages, G = plan_buckets(page_of, 128)
+    plan = bucket_plan(page_of, 128)
+    touched = plan.step_pages[:plan.steps_used]
     emit("fig5.3/two-phase-plan", 0.0,
-         f"grid_steps={G};unique_pages={len(set(step_pages.tolist()))};"
+         f"grid_steps={plan.steps_used};"
+         f"unique_pages={len(set(touched.tolist()))};"
          f"queries={N_QUERIES};dma_bytes_per_step={fidx.leaf_width*4}")
 
 

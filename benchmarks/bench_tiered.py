@@ -2,9 +2,18 @@
 index kind, plus the sort-and-bucket schedule statistics that determine the
 HBM tier's DMA efficiency.
 
+The tiered engine is swept over both schedule placements
+(``--plan {host,device,both}``): the host plan syncs once per batch (top
+descent -> numpy bucket plan -> kernel), the device plan runs the whole
+search as one jitted dispatch with zero host syncs (DESIGN.md §2.1). Each
+tiered row records its ``host_syncs_per_batch`` and the executed grid /
+occupancy so trend jobs can diff the two placements.
+
 Emits the usual CSV lines *and* writes ``BENCH_tiered.json`` with per-kind
 throughput so downstream tooling (experiments/render_tables.py, CI trend
-jobs) can diff runs.
+jobs) can diff runs. ``--smoke`` runs the small tiered-only sweep and
+asserts the device plan is no slower than the host plan on the 8192-query
+batch (interpret mode, trend-only — the CI gate).
 
 Workload: half the batch are Zipf-distributed hits (thesis §5.2.1 — skewed
 re-reference is what serving traffic looks like and what makes buckets
@@ -16,13 +25,12 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
 import jax
 
 from repro.core import IndexConfig, build_index
-from repro.engine import tiered
+from repro.engine import schedule, tiered
 from ._timing import emit, time_fn, zipf_queries
 
 KINDS = {
@@ -32,7 +40,6 @@ KINDS = {
     "fast": lambda: IndexConfig(kind="fast", node_width=127, page_depth=2),
     "nitrogen": lambda: IndexConfig(kind="nitrogen", levels=3,
                                     compiled_node_width=3),
-    "tiered": lambda: IndexConfig(kind="tiered"),
 }
 
 
@@ -43,9 +50,33 @@ def _queries(keys: np.ndarray, batch: int, seed: int) -> np.ndarray:
     return np.concatenate([hits, misses])
 
 
-def run(sizes=(2**14, 2**17), batches=(1024, 8192), out="BENCH_tiered.json"):
+def _schedule_stats(impl, qs: np.ndarray, plan_mode: str) -> dict:
+    """Executed-grid statistics for one (index, batch, plan) cell. The host
+    plan is computed out-of-band here for both modes: the device plan's
+    rung selection lands on the same power-of-two grid, so `grid` and
+    `occupancy` describe what actually executed in either mode."""
+    pids = np.asarray(impl.page_of(qs))
+    hp = schedule.bucket_plan(pids, impl.tile)
+    stats = {
+        "grid": hp.grid, "steps_used": hp.steps_used,
+        "occupancy": round(hp.occupancy, 3),
+        "num_pages": impl.num_pages,
+        "leaf_width": impl.leaf_width,
+        "top_kind": impl.top_kind,
+    }
+    if plan_mode == "device":
+        # static plan-array cap; surplus over `grid` is masked, not executed
+        stats["grid_cap"] = schedule.ladder_grid(qs.size, impl.tile,
+                                                 impl.num_pages)
+    return stats
+
+
+def run(sizes=(2**14, 2**17), batches=(1024, 8192),
+        plans=("host", "device"), kinds=KINDS, out="BENCH_tiered.json",
+        assert_trend=False):
     rng = np.random.default_rng(7)
     results = []
+    trend_cells = {}
     for n in sizes:
         keys = np.unique(rng.integers(0, 2**31 - 2, int(n * 1.1)
                                       ).astype(np.int32))[:n]
@@ -53,45 +84,82 @@ def run(sizes=(2**14, 2**17), batches=(1024, 8192), out="BENCH_tiered.json"):
         for batch in batches:
             qs = _queries(keys, batch, seed=n % 1000 + batch)
             want = np.searchsorted(oracle_sorted, qs, side="left")
-            for kind, mk in KINDS.items():
+            for kind, mk in kinds.items():
                 idx = build_index(keys, config=mk())
-                fn = idx.search if kind == "tiered" else jax.jit(idx.search)
+                fn = jax.jit(idx.search)
                 got = np.asarray(fn(qs))
                 assert np.array_equal(got, want), f"{kind} n={n} b={batch}"
                 us = time_fn(fn, qs)
-                rec = {"kind": kind, "n": int(n), "batch": int(batch),
-                       "us_per_batch": round(us, 2),
-                       "queries_per_s": round(batch / (us * 1e-6), 0),
-                       "tree_bytes": idx.tree_bytes}
-                if kind == "tiered":
-                    _, plan = tiered.search_with_plan(idx.impl, qs)
-                    rec["schedule"] = {
-                        "grid": plan.grid, "steps_used": plan.steps_used,
-                        "occupancy": round(plan.occupancy, 3),
-                        "num_pages": idx.impl.num_pages,
-                        "leaf_width": idx.impl.leaf_width,
-                        "top_kind": idx.impl.top_kind,
-                    }
-                results.append(rec)
+                results.append(
+                    {"kind": kind, "n": int(n), "batch": int(batch),
+                     "us_per_batch": round(us, 2),
+                     "queries_per_s": round(batch / (us * 1e-6), 0),
+                     "tree_bytes": idx.tree_bytes})
                 emit(f"tiered/{kind}/n{n}/b{batch}", us,
-                     f"qps={rec['queries_per_s']:.0f}")
+                     f"qps={results[-1]['queries_per_s']:.0f}")
+            # tiered: one build, both schedule placements
+            idx = build_index(keys, config=IndexConfig(kind="tiered"))
+            for mode in plans:
+                fn = (lambda q, m=mode: tiered.search(idx.impl, q, plan=m))
+                got = np.asarray(fn(qs))
+                assert np.array_equal(got, want), \
+                    f"tiered/{mode} n={n} b={batch}"
+                us = time_fn(fn, qs)
+                rec = {"kind": "tiered", "plan": mode, "n": int(n),
+                       "batch": int(batch), "us_per_batch": round(us, 2),
+                       "queries_per_s": round(batch / (us * 1e-6), 0),
+                       "tree_bytes": idx.tree_bytes,
+                       "host_syncs_per_batch": 1 if mode == "host" else 0,
+                       "schedule": _schedule_stats(idx.impl, qs, mode)}
+                results.append(rec)
+                trend_cells[(n, batch, mode)] = us
+                emit(f"tiered/tiered[{mode}]/n{n}/b{batch}", us,
+                     f"qps={rec['queries_per_s']:.0f};"
+                     f"syncs={rec['host_syncs_per_batch']};"
+                     f"occ={rec['schedule']['occupancy']}")
     payload = {"backend": jax.default_backend(),
                "interpret_kernels": jax.default_backend() == "cpu",
                "results": results}
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {out} ({len(results)} rows)")
+    if assert_trend:
+        _assert_device_trend(sizes, trend_cells)
     return payload
+
+
+def _assert_device_trend(sizes, cells):
+    """CI smoke gate: on the deep-bucket batch (8192) the device plan must
+    not be slower than the host plan. Interpret mode on CPU, so this is a
+    trend check (5% noise floor), not a perf claim."""
+    for n in sizes:
+        host, dev = cells[(n, 8192, "host")], cells[(n, 8192, "device")]
+        verdict = "ok" if dev <= host * 1.05 else "REGRESSION"
+        print(f"# trend n={n} b=8192: host={host:.0f}us device={dev:.0f}us "
+              f"({verdict})")
+        assert dev <= host * 1.05, (
+            f"device plan slower than host plan at n={n}, batch=8192: "
+            f"{dev:.0f}us vs {host:.0f}us")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="add the 1M-key tree (slow under interpret mode)")
+    ap.add_argument("--plan", choices=("host", "device", "both"),
+                    default="both", help="tiered schedule placement(s)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small tiered-only sweep + device>=host trend "
+                         "assert on the 8192 batch (the CI gate)")
     ap.add_argument("--out", default="BENCH_tiered.json")
     args = ap.parse_args()
+    plans = ("host", "device") if args.plan == "both" else (args.plan,)
+    if args.smoke:
+        run(sizes=(2**14,), batches=(1024, 8192), plans=("host", "device"),
+            kinds={}, out=args.out, assert_trend=True)
+        return
     sizes = (2**14, 2**17, 2**20) if args.full else (2**14, 2**17)
-    run(sizes=sizes, out=args.out)
+    run(sizes=sizes, plans=plans, out=args.out)
 
 
 if __name__ == "__main__":

@@ -32,10 +32,14 @@ class IndexConfig:
     intra: str = "vector"        # css: intra-node search style
     top: str = "auto"            # tiered: top tier ('auto'|'nitrogen'|'kary')
     tile: int = 128              # tiered: queries per bucket / grid step
+    plan: str = "device"         # tiered: schedule placement ('device'|'host')
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown index kind {self.kind!r}; want one of {KINDS}")
+        if self.plan not in ("device", "host"):
+            raise ValueError(
+                f"unknown plan mode {self.plan!r}; want 'device' or 'host'")
 
 
 @dataclass(frozen=True)
@@ -140,7 +144,7 @@ def build_index(keys, values=None, config: IndexConfig = IndexConfig()) -> Index
     elif c.kind == "tiered":
         from ..engine import tiered
         impl = tiered.build(srt, leaf_width=c.leaf_width, tile=c.tile,
-                            top=c.top)
+                            top=c.top, plan=c.plan)
     else:  # pragma: no cover
         raise AssertionError
     return Index(config=c, impl=impl, keys_sorted=jnp.asarray(srt),

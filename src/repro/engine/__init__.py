@@ -1,7 +1,11 @@
 # Tiered batch-search engine: sort-and-bucket scheduling over the compiled /
 # VMEM / HBM tiers (DESIGN.md §4). `tiered` is the single-device engine
 # behind IndexConfig(kind="tiered"); `sharded` splits the key space over a
-# mesh axis and all-gathers ranks via psum.
-from .schedule import BucketPlan, bucket_plan  # noqa: F401
+# mesh axis and all-gathers ranks via psum. The schedule has a host form
+# (bucket_plan, numpy) and a device-resident twin (device_plan, jnp) that
+# keeps the whole search a single jitted dispatch.
+from .schedule import (BucketPlan, DevicePlan, bucket_plan,  # noqa: F401
+                       device_plan, ladder_grid, ladder_rungs, lane_arrays,
+                       run_scheduled, select_rung, worst_case_steps)
 from .tiered import TieredIndex, build, plan_tiers, search, searcher  # noqa: F401
 from . import sharded  # noqa: F401

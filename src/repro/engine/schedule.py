@@ -8,18 +8,31 @@ touched — the batch-traversal idea of BS-tree (arXiv 2505.01180) and the
 FPGA level-wise batch paper (arXiv 2604.21117), landed on the TPU's
 scalar-prefetched DMA grid.
 
-The plan is computed host-side with vectorized numpy (O(Q log Q), no Python
-loop over queries) and padded to a **static grid ladder**: the grid size G
-is rounded up to the next power of two, so the downstream
-``page_search_bucketed`` Pallas call — and everything jitted around it —
-sees only O(log Q) distinct shapes per (n, batch-shape) and the jit cache
-stays warm under serving traffic with wobbling bucket counts.
+The plan exists in two equivalent forms:
+
+* ``bucket_plan`` — host-side vectorized numpy (O(Q log Q), no Python loop
+  over queries), grid padded to the next power of two so the downstream
+  ``page_search_bucketed`` Pallas call sees only O(log Q) distinct shapes
+  per (n, batch-shape). Retained for stats/debug (``plan="host"``).
+* ``device_plan`` — the jnp twin, traceable inside ``jax.jit``: the same
+  stable argsort / run-boundary / cumsum construction, scattered into plan
+  arrays sized at the **static worst-case grid** ``ladder_grid(Q, tile, P)``
+  so the whole tiered search is one dispatch with zero host syncs
+  (``plan="device"``, the default). Surplus steps carry ``valid=False`` and
+  page 0, keeping the ``PrefetchScalarGridSpec`` index map total; the
+  actually-executed grid is chosen *on device* from the same power-of-two
+  ladder (``ladder_rungs`` + ``select_rung``), so the kernel never runs more
+  steps than the host plan would have.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
+from typing import Callable, NamedTuple
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 
 @dataclass(frozen=True)
@@ -47,8 +60,126 @@ class BucketPlan:
         return float(self.valid.sum()) / max(self.valid.size, 1)
 
 
+class DevicePlan(NamedTuple):
+    """Traced twin of :class:`BucketPlan` at a static grid (a pytree).
+
+    Carried in *sorted form* — one entry per query in page-sorted order —
+    rather than BucketPlan's lane form, because the lane arrays would cost
+    two extra [grid*tile] scatters per batch on the hot path and every
+    consumer only needs the query<->lane correspondence:
+
+    order:      [Q] int32 — sorted position -> request-order query index
+                (the stable argsort by page id).
+    dest:       [Q] int32 — sorted position -> kernel lane, i.e.
+                step * tile + lane; strictly increasing, so dest doubles
+                as the valid-lane set (a lane is real iff it appears here).
+    step_pages: [grid] int32 — as BucketPlan (padded steps: page 0).
+    steps_used: [] int32 traced — un-padded grid size, used on device to
+                pick the executed ladder rung without a host round-trip.
+
+    ``lane_arrays`` converts to BucketPlan's (gather, valid) lane form for
+    stats and plan-equivalence tests.
+    """
+    order: jnp.ndarray           # [Q] int32
+    dest: jnp.ndarray            # [Q] int32, strictly increasing
+    step_pages: jnp.ndarray      # [grid] int32
+    steps_used: jnp.ndarray      # [] int32
+
+
+def lane_arrays(plan: DevicePlan, tile: int):
+    """Materialize a DevicePlan's (gather, valid) lane arrays — the
+    BucketPlan form. Test/stats helper; the fused pipeline never builds
+    these (it scatters queries straight into kernel lanes via ``dest``)."""
+    lanes = plan.step_pages.shape[0] * tile
+    gather = jnp.zeros((lanes,), jnp.int32).at[plan.dest].set(
+        plan.order, mode="drop", unique_indices=True)
+    valid = jnp.zeros((lanes,), bool).at[plan.dest].set(
+        True, mode="drop", unique_indices=True)
+    return gather, valid
+
+
 def _next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def worst_case_steps(q_n: int, tile: int, num_pages: int) -> int:
+    """Tight upper bound on the un-padded grid size G for any Q-query batch.
+
+    Every distinct page opens at most one run (R <= min(num_pages, Q) runs)
+    and each run wastes less than one tile: G <= floor((Q-R)/tile) + R.
+    Every un-padded step serves at least one query, so also G <= Q.
+    """
+    if q_n <= 0:
+        return 0
+    r = min(num_pages, q_n)
+    return min((q_n - r) // tile + r, q_n)
+
+
+def ladder_grid(q_n: int, tile: int, num_pages: int) -> int:
+    """Static worst-case grid for the device plan: ``worst_case_steps``
+    rounded onto the power-of-two grid ladder (minimum one step, so the
+    plan — and the page kernel behind it — stays total for Q == 0)."""
+    return _next_pow2(worst_case_steps(q_n, tile, num_pages))
+
+
+def ladder_rungs(q_n: int, tile: int, g_cap: int) -> list[int]:
+    """The power-of-two grids a Q-query batch can execute at: from the
+    smallest grid that can hold Q lanes up to the static cap ``g_cap``."""
+    g = _next_pow2(-(-q_n // tile)) if q_n else 1
+    rungs = [g]
+    while g < g_cap:
+        g *= 2
+        rungs.append(g)
+    return rungs
+
+
+def select_rung(steps_used, rungs: list[int]):
+    """Traced index of the smallest rung >= steps_used (rungs ascending;
+    the last rung is the worst-case cap, so the index is always valid)."""
+    return jnp.minimum(
+        jnp.sum(steps_used > jnp.asarray(rungs, jnp.int32)),
+        len(rungs) - 1).astype(jnp.int32)
+
+
+def run_scheduled(plan: DevicePlan, q_sorted: jnp.ndarray, q_n: int,
+                  tile: int, g_cap: int, body: Callable) -> jnp.ndarray:
+    """Run a per-(step, lane) ``body`` over a DevicePlan at the ladder rung
+    selected on device, returning request-order values.
+
+    ``body(qb [g, tile], step_pages [g], g) -> [g, tile]`` — the bottom-tier
+    compute (Pallas page kernel in the dense engine, jnp page compare in the
+    sharded engine). This helper owns the shared scaffolding: sorted queries
+    scatter straight into their kernel lanes (dest is unique/ascending;
+    surplus lanes keep query 0 and are never read back), the executed rung
+    is the smallest power of two holding the runtime step count
+    (``lax.switch``; every valid lane lives in steps < steps_used <= rung,
+    so each branch's prefix of the plan is complete), and each query reads
+    its lane's value back through the same (order, dest) pair — a
+    permutation scatter, no masking.
+    """
+    def run_rung(g: int):
+        qb = jnp.zeros((g * tile,), q_sorted.dtype).at[plan.dest].set(
+            q_sorted, mode="drop", unique_indices=True,
+            indices_are_sorted=True).reshape(g, tile)
+        vals = body(qb, plan.step_pages[:g], g)
+        return jnp.zeros((q_n,), vals.dtype).at[plan.order].set(
+            jnp.take(vals.reshape(-1), plan.dest), mode="drop",
+            unique_indices=True)
+
+    rungs = ladder_rungs(q_n, tile, g_cap)
+    if len(rungs) == 1:
+        return run_rung(rungs[0])
+    return jax.lax.switch(select_rung(plan.steps_used, rungs),
+                          [functools.partial(run_rung, g) for g in rungs])
+
+
+def _empty_plan(tile: int) -> BucketPlan:
+    # Q == 0: one fully-masked step on page 0 keeps every downstream shape
+    # non-degenerate (the page kernel still launches; all lanes drop).
+    return BucketPlan(gather=np.zeros(tile, np.int32),
+                      valid=np.zeros(tile, bool),
+                      step_pages=np.zeros(1, np.int32),
+                      grid=1, steps_used=0)
 
 
 def bucket_plan(page_of: np.ndarray, tile: int) -> BucketPlan:
@@ -57,11 +188,12 @@ def bucket_plan(page_of: np.ndarray, tile: int) -> BucketPlan:
     Queries in one step all live in step_pages[step]; a page with more than
     `tile` queries spans consecutive steps. Fully vectorized: argsort, run
     boundaries via neighbor comparison, per-run tile counts via cumsum.
+    An empty batch yields the trivial one-step all-masked plan.
     """
     page_of = np.asarray(page_of)
     q_n = page_of.size
     if q_n == 0:
-        raise ValueError("empty query batch")
+        return _empty_plan(tile)
     order = np.argsort(page_of, kind="stable")
     sp = page_of[order]                                  # sorted page ids
     new_run = np.empty(q_n, bool)
@@ -87,3 +219,52 @@ def bucket_plan(page_of: np.ndarray, tile: int) -> BucketPlan:
     step_pages[step] = sp                                # every step of a run
     return BucketPlan(gather=gather, valid=valid, step_pages=step_pages,
                       grid=G_pad, steps_used=G)
+
+
+def device_plan(page_of: jnp.ndarray, tile: int, grid: int,
+                num_pages: int | None = None) -> DevicePlan:
+    """jnp twin of :func:`bucket_plan`, traceable inside ``jax.jit``.
+
+    Same construction — stable argsort by page id, run boundaries via
+    neighbor compare, step assignment via a cumsum over tile starts — with
+    ``step_pages`` scattered at the **static** grid ``grid`` (use
+    :func:`ladder_grid`), so no shape depends on the data and the whole
+    schedule lives on device. An element opens a new grid step exactly when
+    its position within its run is a multiple of `tile`, so the step index
+    is the running count of tile starts — identical step numbering to the
+    host plan (runs in sorted-page order, deep runs spanning consecutive
+    steps).
+
+    When ``num_pages`` is given and ``num_pages * Q`` fits int32, the
+    stable argsort is one *single-key* value sort of ``page * Q + index``
+    (index < Q makes the packing order-isomorphic to stable-by-page) —
+    XLA's variadic key/value sort is several times slower than its value
+    sort, and the sort dominates the plan.
+
+    ``grid`` must be >= ``worst_case_steps(Q, tile, num_pages)``; the
+    scatters use mode='drop' purely as an out-of-contract guard.
+    """
+    q_n = page_of.shape[0]
+    idx = jnp.arange(q_n, dtype=jnp.int32)
+    if q_n and num_pages is not None and num_pages * q_n < 2**31:
+        packed = jnp.sort(page_of.astype(jnp.int32) * q_n + idx)
+        order = packed % q_n
+        sp = packed // q_n
+    else:
+        order = jnp.argsort(page_of, stable=True).astype(jnp.int32)
+        sp = jnp.take(page_of, order).astype(jnp.int32) if q_n else \
+            jnp.zeros((0,), jnp.int32)
+    if q_n:
+        new_run = jnp.concatenate(
+            [jnp.ones((1,), bool), sp[1:] != sp[:-1]])
+    else:
+        new_run = jnp.zeros((0,), bool)
+    run_start = jax.lax.cummax(jnp.where(new_run, idx, 0))
+    slot = idx - run_start                               # position within run
+    pos = slot % tile
+    step = jnp.cumsum((pos == 0).astype(jnp.int32)) - 1  # count of tile starts
+    dest = step * tile + pos
+    step_pages = jnp.zeros((grid,), jnp.int32).at[step].set(sp, mode="drop")
+    steps_used = step[-1] + 1 if q_n else jnp.zeros((), jnp.int32)
+    return DevicePlan(order=order, dest=dest, step_pages=step_pages,
+                      steps_used=steps_used)

@@ -8,10 +8,18 @@ searchsorted-left rank is a pure count of keys below q, the global rank is
 the psum of the local counts — the all-gather of ranks falls out of one
 scalar collective, with no query routing and no rank renumbering.
 
-The per-shard search is expressed in jnp (wide compares + one page gather)
-rather than Pallas so it shard_maps over any axis size, including the
-single-device CI mesh; the dense tiered engine (tiered.py) is the
-single-device fast path with the DMA-scheduled kernel bottom.
+The per-shard bottom runs the same device-resident sort-and-bucket schedule
+as the dense engine (engine/schedule.device_plan) whenever buckets are deep
+enough to pay for lane padding: queries are grouped by leaf page on device,
+one page row is gathered **per grid step** (instead of one [lw] row per
+query), and the executed grid is rung-selected from the power-of-two
+ladder; low-locality batches (worst-case lanes > 4x the batch) keep the
+per-query row gather — a static, shape-derived choice. It is expressed in
+jnp (wide compares) rather than Pallas so it shard_maps over any axis size,
+including the single-device CI mesh; the dense tiered engine (tiered.py) is
+the single-device fast path with the DMA-scheduled kernel bottom. Rung
+selection is per-device dataflow with no collectives inside the branches,
+so devices may legally pick different rungs for their shards.
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ except ImportError:                        # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from ..core.util import as_sorted_numpy, ceil_to as _ceil_to, sentinel_for
+from .schedule import device_plan, ladder_grid, run_scheduled
 
 
 @dataclass(frozen=True)
@@ -69,22 +78,52 @@ def build(keys, mesh, *, axis: str = "data",
                               shard_size=shard_size)
 
 
-def search(index: ShardedTieredIndex, queries) -> jnp.ndarray:
+def _scheduled_local_ranks(pages, q, page_c, *, tile: int):
+    """Scheduled per-shard bottom: sort-and-bucket `page_c` on device, fetch
+    one page row per grid step, count within the page, un-permute. Returns
+    the shard-local searchsorted rank for queries whose (clamped) page is
+    page_c; lanes are request-order."""
+    p_n, lw = pages.shape
+    q_n = q.shape[0]
+    g_cap = ladder_grid(q_n, tile, p_n)
+    plan = device_plan(page_c, tile, g_cap, p_n)
+    q_sorted = jnp.take(q, plan.order) if q_n else q
+
+    def body(qb, step_pages, g):
+        rows = jnp.take(pages, step_pages, axis=0)       # [g, lw]: per step,
+        in_page = jnp.sum(rows[:, None, :] < qb[:, :, None],  # not per query
+                          axis=-1).astype(jnp.int32)
+        return step_pages[:, None] * lw + in_page        # [g, tile]
+
+    return run_scheduled(plan, q_sorted, q_n, tile, g_cap, body)
+
+
+def search(index: ShardedTieredIndex, queries, *, tile: int = 128
+           ) -> jnp.ndarray:
     """Replicated ranks for a replicated query batch: per-shard two-tier
-    count, psum over the key-space axis."""
+    count, psum over the key-space axis. Deep-bucket batches (worst-case
+    scheduled lanes within 4x of Q — the serving regime) run the scheduled
+    bottom, fetching one page row per grid step; low-locality batches keep
+    the per-query row gather, whose [Q, lw] compare is cheaper than padded
+    lanes at near-zero occupancy. The choice is static per batch shape."""
     q = jnp.asarray(queries)
     axis = index.axis
     lw = index.leaf_width
 
     def local_count(pages, seps, q):
         pages, seps = pages[0], seps[0]          # [P, lw], [P]
+        p_n = seps.shape[0]
+        q_n = q.shape[0]
         page = jnp.sum(seps[None, :] < q[:, None], axis=-1).astype(jnp.int32)
-        page_c = jnp.minimum(page, seps.shape[0] - 1)
-        rows = jnp.take(pages, page_c, axis=0)   # [Q, lw]
-        in_page = jnp.sum(rows < q[:, None], axis=-1).astype(jnp.int32)
+        page_c = jnp.minimum(page, p_n - 1)
+        if ladder_grid(q_n, tile, p_n) * tile <= 4 * max(q_n, 1):
+            planned = _scheduled_local_ranks(pages, q, page_c, tile=tile)
+        else:
+            rows = jnp.take(pages, page_c, axis=0)       # [Q, lw] per query
+            planned = page_c * lw + jnp.sum(
+                rows < q[:, None], axis=-1).astype(jnp.int32)
         # pages fully below are full of real keys (padding is trailing-only)
-        local = jnp.where(page >= seps.shape[0],
-                          jnp.int32(pages.size), page_c * lw + in_page)
+        local = jnp.where(page >= p_n, jnp.int32(pages.size), planned)
         return jax.lax.psum(local[None, :], axis)
 
     f = _shard_map(local_count, mesh=index.mesh,

@@ -10,17 +10,19 @@ Composition per batch:
      Small tops compile to a NitroGen constant network (XLA literal pool —
      the "instruction cache" tier); larger tops run the k-ary VMEM kernel.
   2. **Schedule** — sort-and-bucket the batch by page id (engine/schedule.py,
-     DESIGN.md §2.1), padded to a power-of-two grid.
+     DESIGN.md §2.1). With ``plan="device"`` (default) the plan is computed
+     by the jnp twin *inside* the same jit as the kernels; ``plan="host"``
+     keeps the numpy plan (stats/debug) at the cost of one host sync.
   3. **Bottom tier** — ``page_search_bucketed`` streams exactly one leaf
      page HBM->VMEM per grid step via scalar-prefetched DMA.
   4. **Un-permute** — scatter ranks back to request order (valid-masked,
      out-of-bounds drop).
 
+With the device plan the whole composition is **one jitted dispatch**: top
+descent -> device plan (static worst-case grid, DESIGN.md §2.1) -> on-device
+rung selection -> page kernel -> un-permute, with the query buffer donated.
 Tier sizing is automatic: ``plan_tiers`` grows the leaf width until the top
-tier fits the VMEM budget check from ``kernels/ops.py``. The top descent and
-the finish (gather -> kernel -> scatter) are jit-cached per (n, batch-shape);
-the schedule's power-of-two grid ladder keeps the finish cache to O(log Q)
-entries per batch shape.
+tier fits the VMEM budget check from ``kernels/ops.py``.
 """
 from __future__ import annotations
 
@@ -38,12 +40,15 @@ from ..core.util import (as_sorted_numpy, ceil_to as _ceil_to, next_pow,
 from ..kernels import ops
 from ..kernels import kary_search as _kary
 from ..kernels import page_search as _page
-from .schedule import BucketPlan, bucket_plan
+from .schedule import (BucketPlan, bucket_plan, device_plan, ladder_grid,
+                       run_scheduled)
 
 # Tops at or below this page count compile to a NitroGen constant network;
 # larger tops use the k-ary VMEM kernel (trace cost of the constant network
 # grows with the page count; see DESIGN.md §3 for the crossover reasoning).
 NITROGEN_TOP_MAX_PAGES = 256
+
+PLAN_MODES = ("device", "host")
 
 
 def plan_tiers(n: int, *, tile: int = 128,
@@ -75,6 +80,8 @@ class TieredIndex:
     top_kind: str                # 'nitrogen' | 'kary' | 'trivial'
     top: Any                     # the inner index over `seps` (None if trivial)
     page_of: Callable            # jit-cached: q[batch] -> leaf-page id
+    search_fused: Callable       # jitted (q, pages) -> ranks, zero host syncs
+    plan: str = "device"         # default schedule placement
     interpret: bool = True
 
     @property
@@ -86,13 +93,14 @@ class TieredIndex:
         return 0
 
 
-def _make_page_of(top_kind: str, top, num_pages: int, *, lane: int,
-                  tile_rows: int, interpret: bool) -> Callable:
-    """Build the jitted top-tier descent: query batch -> clipped page id."""
+def _make_page_of_raw(top_kind: str, top, num_pages: int, *, lane: int,
+                      tile_rows: int, interpret: bool) -> Callable:
+    """Top-tier descent as a plain traceable fn: query batch -> page id.
+    (Jitted standalone for the host plan; inlined into the fused pipeline
+    for the device plan.)"""
     if top_kind == "trivial":
-        return jax.jit(lambda q: jnp.zeros(q.shape, jnp.int32))
+        return lambda q: jnp.zeros(q.shape, jnp.int32)
     if top_kind == "nitrogen":
-        @jax.jit
         def page_of(q):
             return jnp.minimum(nitrogen.search(top, q), num_pages - 1)
         return page_of
@@ -101,7 +109,6 @@ def _make_page_of(top_kind: str, top, num_pages: int, *, lane: int,
     fanout = top.fanout
     tq = tile_rows * lane
 
-    @jax.jit
     def page_of(q):
         n_q = q.shape[0]
         pad = _ceil_to(max(n_q, 1), tq) - n_q
@@ -114,12 +121,45 @@ def _make_page_of(top_kind: str, top, num_pages: int, *, lane: int,
     return page_of
 
 
+def _make_fused(page_of_raw: Callable, *, num_pages: int, leaf_width: int,
+                tile: int, n: int, interpret: bool,
+                donate: bool = True) -> Callable:
+    """The single-dispatch pipeline (DESIGN.md §4): top descent -> device
+    plan at the static worst-case grid -> rung-selected page kernel ->
+    un-permute, all inside one jit. The query buffer is donated when its
+    dtype lets the [Q] int32 rank output alias it (int32 keys); `pages` is
+    passed (not closed over) so the leaf storage is not baked into the
+    executable."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
+    def fused(q, pages):
+        q_n = q.shape[0]
+        pids = page_of_raw(q)
+        g_cap = ladder_grid(q_n, tile, num_pages)
+        plan = device_plan(pids, tile, g_cap, num_pages)
+        q_sorted = jnp.take(q, plan.order) if q_n else q
+
+        def body(qb, step_pages, g):
+            return _page.page_search_bucketed(
+                qb, step_pages, pages, leaf_width=leaf_width,
+                interpret=interpret)
+
+        out = run_scheduled(plan, q_sorted, q_n, tile, g_cap, body)
+        return jnp.minimum(out, n)
+
+    return fused
+
+
 def build(keys, *, leaf_width: int | None = None, tile: int = 128,
-          top: str = "auto", vmem_budget: int = ops.VMEM_BUDGET_BYTES,
+          top: str = "auto", plan: str = "device",
+          vmem_budget: int = ops.VMEM_BUDGET_BYTES,
           interpret: bool = True) -> TieredIndex:
     if top not in ("auto", "nitrogen", "kary"):
         raise ValueError(f"unknown top tier {top!r}; "
                          "want 'auto', 'nitrogen' or 'kary'")
+    if plan not in PLAN_MODES:
+        raise ValueError(f"unknown plan mode {plan!r}; "
+                         f"want one of {PLAN_MODES}")
     srt = as_sorted_numpy(keys)
     n = int(srt.size)
     auto_lw, _, auto_top = plan_tiers(n, tile=tile, vmem_budget=vmem_budget)
@@ -151,13 +191,18 @@ def build(keys, *, leaf_width: int | None = None, tile: int = 128,
     else:                                   # trivial: single-page index
         top_idx = None
 
-    page_of = _make_page_of(top_kind, top_idx, num_pages, lane=128,
-                            tile_rows=8, interpret=interpret)
+    page_of_raw = _make_page_of_raw(top_kind, top_idx, num_pages, lane=128,
+                                    tile_rows=8, interpret=interpret)
     return TieredIndex(
         pages=jnp.asarray(pages),
         seps=jnp.asarray(seps), n=n, leaf_width=lw, lw_pad=lw_pad,
         num_pages=num_pages, tile=int(tile), top_kind=top_kind, top=top_idx,
-        page_of=page_of, interpret=interpret)
+        page_of=jax.jit(page_of_raw),
+        search_fused=_make_fused(page_of_raw, num_pages=num_pages,
+                                 leaf_width=lw, tile=int(tile), n=n,
+                                 interpret=interpret,
+                                 donate=srt.dtype == np.int32),
+        plan=plan, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("leaf_width", "n", "interpret"))
@@ -166,12 +211,14 @@ def _finish(q, pages, gather, valid, step_pages, *, leaf_width: int, n: int,
     """Gather sorted tiles -> bucketed page kernel -> un-permute to request
     order. Static grid comes from `gather`'s (ladder-padded) shape."""
     tile = gather.shape[0] // step_pages.shape[0]
-    qb = jnp.take(q, gather, axis=0).reshape(step_pages.shape[0], tile)
+    q_n = q.shape[0]
+    q_src = q if q_n else jnp.zeros((1,), q.dtype)   # Q == 0: all lanes masked
+    qb = jnp.take(q_src, gather, axis=0,
+                  mode="clip").reshape(step_pages.shape[0], tile)
     ranks = _page.page_search_bucketed(qb, step_pages, pages,
                                        leaf_width=leaf_width,
                                        interpret=interpret)
     flat = ranks.reshape(-1)
-    q_n = q.shape[0]
     # padded lanes scatter out of bounds and are dropped
     out = jnp.zeros((q_n,), jnp.int32).at[
         jnp.where(valid, gather, q_n)].set(flat, mode="drop")
@@ -179,10 +226,10 @@ def _finish(q, pages, gather, valid, step_pages, *, leaf_width: int, n: int,
 
 
 def search_with_plan(index: TieredIndex, queries) -> tuple:
-    """Full tiered search; also returns the BucketPlan (for stats)."""
+    """Host-scheduled tiered search; also returns the BucketPlan (stats).
+    This is the ``plan="host"`` path: one host sync between the top descent
+    and the page kernel, in exchange for an inspectable plan."""
     q = jnp.asarray(queries)
-    if q.shape[0] == 0:                     # same contract as every kind
-        return jnp.zeros((0,), jnp.int32), None
     pids = np.asarray(index.page_of(q))
     plan = bucket_plan(pids, index.tile)
     ranks = _finish(q, index.pages, jnp.asarray(plan.gather),
@@ -192,15 +239,30 @@ def search_with_plan(index: TieredIndex, queries) -> tuple:
     return ranks, plan
 
 
-def search(index: TieredIndex, queries) -> jnp.ndarray:
-    ranks, _ = search_with_plan(index, queries)
-    return ranks
+def search(index: TieredIndex, queries, *, plan: str | None = None
+           ) -> jnp.ndarray:
+    """Tiered search. ``plan`` overrides the index default: "device" runs
+    the whole pipeline as one jitted dispatch (no host syncs); "host"
+    computes the bucket plan in numpy (stats/debug)."""
+    mode = plan or index.plan
+    if mode not in PLAN_MODES:
+        raise ValueError(f"unknown plan mode {mode!r}; "
+                         f"want one of {PLAN_MODES}")
+    if mode == "host":
+        ranks, _ = search_with_plan(index, queries)
+        return ranks
+    owned = not isinstance(queries, jax.Array)
+    q = jnp.asarray(queries)
+    if not owned:
+        # the fused pipeline donates its query buffer; never eat the caller's
+        q = jnp.copy(q)
+    return index.search_fused(q, index.pages)
 
 
 def searcher(index: TieredIndex) -> Callable:
-    """The engine's serving entry point: a closure whose device stages (top
-    descent, finish) are jit-cached per batch shape, with the host-side
-    bucket plan in between."""
+    """The engine's serving entry point: a closure over the index whose
+    fused pipeline (device plan) or device stages (host plan) are jit-cached
+    per batch shape."""
     def run(queries):
         return search(index, queries)
     return run

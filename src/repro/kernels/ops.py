@@ -75,22 +75,28 @@ def fast_page_search(index: FastTreeIndex, queries, *, tile: int = 128,
                      interpret: bool = True) -> jnp.ndarray:
     """Two-phase FAST search: directory descent (VMEM-resident), then the
     sorted-bucket page kernel streams exactly one leaf page per grid step."""
+    # lazy: kernels -> engine would otherwise cycle through engine/__init__
+    from ..engine.schedule import bucket_plan
     q = jnp.asarray(queries)
     page_of = np.asarray(leaf_page_of(index, q))
-    gather, valid, step_pages, G = _page.plan_buckets(page_of, tile)
+    plan = bucket_plan(page_of, tile)
     lw = index.leaf_width
     lw_pad = _ceil_to(lw, 128)
     num_pages = index.leaf_pad.size // lw
     pages = np.full((num_pages, lw_pad), sentinel_for(np.asarray(index.keys).dtype),
                     np.asarray(index.leaf_pad).dtype)
     pages[:, :lw] = np.asarray(index.leaf_pad).reshape(num_pages, lw)
-    qb = jnp.take(q, jnp.asarray(gather), axis=0).reshape(G, tile)
-    ranks = _page.page_search_bucketed(qb, jnp.asarray(step_pages),
+    # Q == 0 yields the trivial all-masked plan; gather from a dummy so the
+    # (never-read) lanes stay defined
+    q_src = q if q.shape[0] else jnp.zeros((1,), q.dtype)
+    qb = jnp.take(q_src, jnp.asarray(plan.gather),
+                  axis=0).reshape(plan.grid, tile)
+    ranks = _page.page_search_bucketed(qb, jnp.asarray(plan.step_pages),
                                        jnp.asarray(pages), leaf_width=lw,
                                        interpret=interpret)
     flat = np.asarray(ranks).reshape(-1)
     out = np.zeros(q.shape[0], np.int32)
-    out[gather[valid]] = flat[valid]
+    out[plan.gather[plan.valid]] = flat[plan.valid]
     return jnp.minimum(jnp.asarray(out), index.n)
 
 

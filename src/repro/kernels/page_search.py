@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import functools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -57,34 +56,5 @@ def page_search_bucketed(queries_bucketed: jnp.ndarray, page_ids: jnp.ndarray,
         interpret=interpret,
     )(page_ids, queries_bucketed, pages)
 
-
-def plan_buckets(page_of: np.ndarray, tile: int):
-    """Host-side DMA plan: group queries by leaf page into tiles of `tile`.
-
-    Returns (gather_idx [G*tile] indices into the original query array,
-    valid mask [G*tile], step_page_ids [G]). Queries in one step share one
-    page; pages with more than `tile` queries get multiple steps.
-    """
-    page_of = np.asarray(page_of)
-    order = np.argsort(page_of, kind="stable")
-    sorted_pages = page_of[order]
-    gather, valid, step_pages = [], [], []
-    i = 0
-    n = page_of.size
-    while i < n:
-        p = sorted_pages[i]
-        j = min(i + tile, n)
-        while j > i and sorted_pages[j - 1] != p:
-            j -= 1
-        # j = end of this tile's run within page p (at most `tile` long)
-        run = order[i:j]
-        pad = tile - run.size
-        gather.append(np.concatenate([run, np.zeros(pad, np.int64)]))
-        valid.append(np.concatenate([np.ones(run.size, bool), np.zeros(pad, bool)]))
-        step_pages.append(p)
-        i = j
-    G = len(step_pages)
-    return (np.concatenate(gather).astype(np.int32),
-            np.concatenate(valid),
-            np.asarray(step_pages, np.int32),
-            G)
+# The host-side bucketing plan lives in engine/schedule.py (bucket_plan, plus
+# its in-jit twin device_plan); this module is kernel-only.

@@ -45,9 +45,13 @@ class ServeEngine:
         self.pageable = cfg.family in ("dense", "moe")
         # default probe structure is the tiered engine (DESIGN.md §4): it
         # self-sizes from a one-page store up to VMEM-overflowing hash sets,
-        # so the store never needs re-configuring as traffic accumulates
+        # so the store never needs re-configuring as traffic accumulates.
+        # plan="device" keeps the probe a single dispatch with no host sync
+        # between the top descent and the page kernel (pass plan="host" in
+        # index_config to get inspectable BucketPlan stats instead)
         self.store = KV.PrefixPageStore(
-            page_size, index_config or IndexConfig(kind="tiered"))
+            page_size, index_config or IndexConfig(kind="tiered",
+                                                   plan="device"))
         self.stats = EngineStats()
         self._jit_decode = jax.jit(
             lambda p, t, c: T.decode_step(cfg, p, t, c, compute_dtype=compute_dtype))

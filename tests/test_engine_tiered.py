@@ -1,7 +1,8 @@
 """Tiered batch-search engine: oracle equality against np.searchsorted,
-sort-and-bucket schedule invariants, tier auto-sizing, and the key-space-
-sharded variant (subprocess, 8 forced host devices). Hypothesis-free so the
-suite collects on a bare CPU box."""
+sort-and-bucket schedule invariants (host plan and its device twin), tier
+auto-sizing, the single-dispatch device-plan contract (transfer guard), and
+the key-space-sharded variant (subprocess, 8 forced host devices).
+Hypothesis-free so the suite collects on a bare CPU box."""
 import json
 import os
 import subprocess
@@ -10,6 +11,9 @@ import textwrap
 
 import numpy as np
 import pytest
+
+import jax
+import jax.numpy as jnp
 
 from repro.core import IndexConfig, build_index
 from repro.engine import schedule, tiered
@@ -23,6 +27,7 @@ def oracle(keys, queries):
 
 
 # ------------------------------------------------------------- oracle tests
+@pytest.mark.parametrize("plan", ["device", "host"])
 @pytest.mark.parametrize("n,q_n,desc", [
     (1, 16, "single-element"),
     (7, 64, "tiny"),
@@ -30,14 +35,14 @@ def oracle(keys, queries):
     (9001, 8192, "non-pow2, batch >= 8192"),
     (16384, 8192, "pow2, full pages"),
 ])
-def test_tiered_rank_matches_oracle_int32(n, q_n, desc):
+def test_tiered_rank_matches_oracle_int32(n, q_n, desc, plan):
     rng = np.random.default_rng(n)
     keys = rng.integers(0, 2**31 - 2, n).astype(np.int32)       # dups allowed
     queries = np.concatenate([
         keys[rng.integers(0, n, q_n // 2)],                      # hits
         rng.integers(0, 2**31 - 2, q_n - q_n // 2).astype(np.int32),
     ])
-    idx = build_index(keys, config=IndexConfig(kind="tiered"))
+    idx = build_index(keys, config=IndexConfig(kind="tiered", plan=plan))
     np.testing.assert_array_equal(np.asarray(idx.search(queries)),
                                   oracle(keys, queries))
 
@@ -132,10 +137,111 @@ def test_bucket_plan_single_page_is_dense():
     assert plan.occupancy == 1.0
 
 
+def test_bucket_plan_empty_batch_is_trivial():
+    """Q == 0 yields the one-step all-masked plan instead of raising, so
+    the engine needs no empty special case."""
+    plan = schedule.bucket_plan(np.zeros(0, np.int32), tile=64)
+    assert plan.steps_used == 0 and plan.grid == 1
+    assert plan.occupancy == 0.0 and not plan.valid.any()
+
+
+@pytest.mark.parametrize("pattern", ["uniform", "zipf", "dups", "single"])
+def test_device_plan_matches_host_plan(pattern):
+    """The jnp twin is the *same* plan: same stable order, same lane
+    assignment, same per-step pages, same step count (DESIGN.md §2.1)."""
+    rng = np.random.default_rng(17)
+    q_n, num_pages, tile = 3000, 41, 64
+    page_of = {
+        "uniform": rng.integers(0, num_pages, q_n),
+        "zipf": np.minimum(rng.zipf(1.3, q_n) - 1, num_pages - 1),
+        "dups": rng.integers(0, 4, q_n),
+        "single": np.full(q_n, 7),
+    }[pattern].astype(np.int32)
+    host = schedule.bucket_plan(page_of, tile)
+    cap = schedule.ladder_grid(q_n, tile, num_pages)
+    dev = schedule.device_plan(jnp.asarray(page_of), tile, cap, num_pages)
+    gather, valid = (np.asarray(a) for a in schedule.lane_arrays(dev, tile))
+    L = host.grid * tile
+    assert int(dev.steps_used) == host.steps_used
+    np.testing.assert_array_equal(valid[:L], host.valid)
+    assert not valid[L:].any()
+    np.testing.assert_array_equal(gather[:L][host.valid],
+                                  host.gather[host.valid])
+    np.testing.assert_array_equal(
+        np.asarray(dev.step_pages)[:host.steps_used],
+        host.step_pages[:host.steps_used])
+
+
+def test_ladder_grid_bounds_every_actual_plan():
+    """The static worst-case grid dominates the host plan's padded grid,
+    so the device plan's occupancy is lower-bounded by Q/(cap*tile)."""
+    rng = np.random.default_rng(23)
+    for _ in range(20):
+        q_n = int(rng.integers(1, 5000))
+        num_pages = int(rng.integers(1, 300))
+        tile = int(rng.choice([8, 32, 128]))
+        page_of = rng.integers(0, num_pages, q_n).astype(np.int32)
+        plan = schedule.bucket_plan(page_of, tile)
+        cap = schedule.ladder_grid(q_n, tile, num_pages)
+        assert plan.steps_used <= schedule.worst_case_steps(
+            q_n, tile, num_pages)
+        assert plan.grid <= cap
+        assert plan.occupancy >= q_n / (cap * tile)
+
+
+def test_tiered_empty_batch_both_plans():
+    keys = np.arange(512, dtype=np.int32)
+    idx = build_index(keys, config=IndexConfig(kind="tiered"))
+    for mode in ("device", "host"):
+        out = tiered.search(idx.impl, np.zeros((0,), np.int32), plan=mode)
+        assert out.shape == (0,)
+    ranks, plan = tiered.search_with_plan(idx.impl, np.zeros((0,), np.int32))
+    assert ranks.shape == (0,) and plan.steps_used == 0
+
+
+def test_device_plan_is_single_dispatch_no_transfers():
+    """DESIGN.md §4: with plan='device' the post-warmup search runs as one
+    jitted dispatch — no host plan, no numpy materialization, no transfer
+    between the top descent and the page kernel."""
+    rng = np.random.default_rng(29)
+    keys = rng.integers(0, 2**31 - 2, 16384).astype(np.int32)
+    idx = build_index(keys, config=IndexConfig(kind="tiered", plan="device"))
+    qs = np.concatenate([keys[:512],
+                         rng.integers(0, 2**31 - 2, 512).astype(np.int32)])
+    q_dev = jnp.asarray(qs)
+    idx.search(q_dev).block_until_ready()                # warmup / compile
+    with jax.transfer_guard("disallow"):
+        got = idx.search(q_dev)
+        got.block_until_ready()
+    np.testing.assert_array_equal(np.asarray(got), oracle(keys, qs))
+
+
+def test_device_plan_does_not_eat_caller_buffer():
+    """The fused pipeline donates its query buffer; tiered.search must
+    defensively copy arrays it does not own."""
+    keys = np.arange(0, 4096, 2, dtype=np.int32)
+    idx = build_index(keys, config=IndexConfig(kind="tiered")).impl
+    q = jnp.asarray(np.arange(256, dtype=np.int32))
+    first = np.asarray(tiered.search(idx, q))
+    second = np.asarray(tiered.search(idx, q))          # q must still be live
+    np.testing.assert_array_equal(first, second)
+    np.testing.assert_array_equal(np.asarray(q), np.arange(256))
+
+
 def test_tiered_rejects_unknown_top():
     # must raise even when the key set is small enough for the trivial top
     with pytest.raises(ValueError, match="unknown top tier"):
         tiered.build(np.arange(10, dtype=np.int32), top="bogus")
+
+
+def test_tiered_rejects_unknown_plan():
+    with pytest.raises(ValueError, match="unknown plan mode"):
+        tiered.build(np.arange(10, dtype=np.int32), plan="bogus")
+    with pytest.raises(ValueError, match="unknown plan mode"):
+        IndexConfig(kind="tiered", plan="bogus")
+    idx = tiered.build(np.arange(10, dtype=np.int32))
+    with pytest.raises(ValueError, match="unknown plan mode"):
+        tiered.search(idx, np.zeros(4, np.int32), plan="bogus")
 
 
 # ------------------------------------------------------------- tier sizing
@@ -152,9 +258,10 @@ def test_plan_tiers_respects_vmem_budget():
 
 
 # ------------------------------------------------------------- serve probe
-def test_prefix_store_accepts_tiered_kind():
+@pytest.mark.parametrize("plan", ["device", "host"])
+def test_prefix_store_accepts_tiered_kind(plan):
     from repro.serve.kv_cache import PrefixPageStore
-    store = PrefixPageStore(8, IndexConfig(kind="tiered"))
+    store = PrefixPageStore(8, IndexConfig(kind="tiered", plan=plan))
     toks = np.arange(32, dtype=np.int32)
     store.insert(toks, [{"pay": i} for i in range(4)])
     n, payloads = store.lookup(toks)
@@ -177,10 +284,14 @@ def test_sharded_search_8_devices_matches_oracle():
                              rng.integers(0, 2**31 - 2, 1024).astype(np.int32)])
         mesh = make_host_mesh((8,), ("data",))
         idx = sharded.build(keys, mesh)
-        got = np.asarray(sharded.search(idx, qs))
         want = np.searchsorted(np.sort(keys), qs, side="left")
+        # 2048 queries over ~49 pages/shard: scheduled bottom. 64 queries:
+        # low-locality, falls back to the per-query row gather.
+        got = np.asarray(sharded.search(idx, qs))
+        got_small = np.asarray(sharded.search(idx, qs[:64]))
         print("RESULT:" + json.dumps({
             "equal": bool(np.array_equal(got, want)),
+            "equal_small": bool(np.array_equal(got_small, want[:64])),
             "shards": idx.num_shards}))
     """)
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
@@ -189,4 +300,4 @@ def test_sharded_search_8_devices_matches_oracle():
     assert out.returncode == 0, f"STDERR:\n{out.stderr[-3000:]}"
     line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][0]
     r = json.loads(line[len("RESULT:"):])
-    assert r["equal"] and r["shards"] == 8
+    assert r["equal"] and r["equal_small"] and r["shards"] == 8

@@ -64,6 +64,14 @@ def test_page_search_skewed_buckets():
     np.testing.assert_array_equal(got, ref.page_search_ref(qs, keys))
 
 
+def test_page_search_empty_batch():
+    """Q == 0 rides the schedule's trivial all-masked plan."""
+    keys = np.arange(0, 4096, dtype=np.int32)
+    idx = fast_tree.build(keys, node_width=7, page_depth=2)
+    got = np.asarray(ops.fast_page_search(idx, np.zeros((0,), np.int32)))
+    assert got.shape == (0,)
+
+
 @pytest.mark.parametrize("B,V", [(4, 100), (8, 512), (3, 1000), (16, 2048)])
 def test_cdf_search_matches_oracle(B, V):
     rng = np.random.default_rng(B * V)

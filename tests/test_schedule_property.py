@@ -1,0 +1,98 @@
+"""Hypothesis property tests for the sort-and-bucket schedule: the host
+``bucket_plan`` and its device twin ``device_plan`` must be the *same* plan
+for any page distribution (uniform, Zipf-skewed, duplicate-heavy,
+single-page), and the static worst-case grid must dominate every actual
+plan (the occupancy lower bound at the padded grid, DESIGN.md §2.1)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.engine import schedule
+
+
+@st.composite
+def page_batches(draw):
+    """A (page_of, num_pages, tile) case over the distributions that shape
+    serving traffic (DESIGN.md §2.1 / thesis §5.2.1)."""
+    pattern = draw(st.sampled_from(["uniform", "zipf", "dups", "single"]))
+    q_n = draw(st.integers(1, 700))
+    num_pages = draw(st.integers(1, 64))
+    tile = draw(st.sampled_from([8, 32, 128]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if pattern == "uniform":
+        page_of = rng.integers(0, num_pages, q_n)
+    elif pattern == "zipf":
+        page_of = np.minimum(rng.zipf(1.3, q_n) - 1, num_pages - 1)
+    elif pattern == "dups":
+        page_of = rng.integers(0, max(num_pages // 8, 1), q_n)
+    else:
+        page_of = np.full(q_n, draw(st.integers(0, num_pages - 1)))
+    return page_of.astype(np.int32), num_pages, tile
+
+
+def _unpermuted_pages(gather, valid, step_pages, tile, q_n):
+    """Emulated un-permute: route each lane's step page back to its query —
+    stands in for the page kernel's rank (rank is a pure function of the
+    (query, page) pair, so identical routing => identical ranks)."""
+    out = np.full(q_n, -1, np.int64)
+    lanes = np.flatnonzero(valid)
+    out[gather[lanes]] = step_pages[lanes // tile]
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(page_batches())
+def test_device_plan_equivalent_to_host_plan(case):
+    page_of, num_pages, tile = case
+    q_n = page_of.size
+    host = schedule.bucket_plan(page_of, tile)
+    cap = schedule.ladder_grid(q_n, tile, num_pages)
+    dev = schedule.device_plan(jnp.asarray(page_of), tile, cap, num_pages)
+    d_gather, d_valid = (np.asarray(a) for a in
+                         schedule.lane_arrays(dev, tile))
+    d_steps = np.asarray(dev.step_pages)
+
+    # same step count, and the device arrays are the host arrays (the
+    # padded tail beyond the host grid is fully masked)
+    assert int(dev.steps_used) == host.steps_used
+    L = host.grid * tile
+    np.testing.assert_array_equal(d_valid[:L], host.valid)
+    assert not d_valid[L:].any()
+    np.testing.assert_array_equal(d_gather[:L][host.valid],
+                                  host.gather[host.valid])
+    np.testing.assert_array_equal(d_steps[:host.steps_used],
+                                  host.step_pages[:host.steps_used])
+
+    # identical ranks after un-permute: every query is routed to a lane of
+    # a step serving exactly its page, on both plans
+    host_routed = _unpermuted_pages(host.gather, host.valid,
+                                    host.step_pages, tile, q_n)
+    dev_routed = _unpermuted_pages(d_gather, d_valid, d_steps, tile, q_n)
+    np.testing.assert_array_equal(host_routed, page_of)
+    np.testing.assert_array_equal(dev_routed, page_of)
+
+
+@settings(max_examples=60, deadline=None)
+@given(page_batches())
+def test_static_grid_dominates_and_bounds_occupancy(case):
+    page_of, num_pages, tile = case
+    q_n = page_of.size
+    host = schedule.bucket_plan(page_of, tile)
+    worst = schedule.worst_case_steps(q_n, tile, num_pages)
+    cap = schedule.ladder_grid(q_n, tile, num_pages)
+    assert host.steps_used <= worst <= cap
+    assert host.grid <= cap
+    # occupancy lower bound at the padded (worst-case) grid: all Q lanes
+    # are real, the grid never exceeds cap
+    assert host.occupancy >= q_n / (cap * tile)
+    # and the ladder rung the device pipeline would execute is exactly the
+    # host plan's padded grid
+    rungs = schedule.ladder_rungs(q_n, tile, cap)
+    sel = int(schedule.select_rung(jnp.asarray(host.steps_used), rungs))
+    assert rungs[sel] == host.grid
