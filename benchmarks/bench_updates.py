@@ -1,0 +1,250 @@
+"""Write-path benchmark (ours, DESIGN.md §6): read/write-mix sweep over the
+delta-merge store vs the wholesale-rebuild posture.
+
+Two postures over the same tiered index kind:
+
+* ``wholesale`` — the thesis' OLAP update model (and the old
+  ``PrefixPageStore``): inserts batch up and dirty the snapshot; the next
+  lookup pays a full ``build_index`` (sort + repack + top re-derivation +
+  re-jit). Maintenance work is O(n) per insert batch.
+* ``delta`` — ``IndexConfig(mutable=True)``: inserts land in the gapped
+  delta buffer; overflow folds page-locally into the tiered leaves
+  (engine/store.py). Maintenance work is O(delta_capacity + touched pages)
+  per merge, amortized over ``delta_capacity`` inserts.
+
+Each cell (store size × write mix) runs interleaved rounds of insert
+batches and lookup batches, tracks **index-maintenance time** (insert +
+merge for delta; rebuild for wholesale) separately from lookup latency, and
+cross-checks both postures against a dict reference. Emits CSV lines and
+``BENCH_updates.json`` with maintenance-per-insert, p99 lookup latency and
+the structural work counters (pages touched / rows rebuilt).
+
+``--smoke`` runs the small sweep and asserts the trend gate: at every cell
+with writes, the delta posture's total maintenance time must be strictly
+below wholesale (the CI ``updates-smoke`` job).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_updates [--full] [--out F]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.core import IndexConfig, build_index
+from ._timing import emit
+
+MIXES = (0.0, 0.1, 0.5)
+BATCH = 256                     # ops per round (inserts + lookups)
+DELTA_CAPACITY = 256
+
+
+class WholesaleStore:
+    """Rebuild-on-dirty reference posture (unique keys, upsert via dict)."""
+
+    def __init__(self, keys: np.ndarray, vals: np.ndarray,
+                 config: IndexConfig):
+        self.map = dict(zip(keys.tolist(), vals.tolist()))
+        self.config = config
+        self.idx = None
+        self.dirty = True
+        self.rebuilds = 0
+        self.rows_rebuilt = 0
+
+    def insert(self, keys: np.ndarray, vals: np.ndarray):
+        self.map.update(zip(keys.tolist(), vals.tolist()))
+        self.dirty = True
+
+    def _rebuild(self, warm_q: np.ndarray):
+        ks = np.fromiter(self.map, np.int32, len(self.map))
+        order = np.argsort(ks)
+        ks = ks[order]
+        vs = np.fromiter(self.map.values(), np.int32, len(self.map))[order]
+        self.idx = build_index(ks, vs, self.config)
+        # rebuild-to-servable includes the re-jit: every wholesale rebuild
+        # re-traces and re-compiles the fused pipeline (the thesis' NitroGen
+        # re-specialization cost) — warm it here, not in the lookup numbers
+        jax.block_until_ready(self.idx.lookup(warm_q).found)
+        self.dirty = False
+        self.rebuilds += 1
+        self.rows_rebuilt += self.idx.impl.num_pages
+
+    def maintain(self, warm_q: np.ndarray) -> float:
+        """Pay any pending rebuild (to a servable, compiled state); returns
+        seconds spent."""
+        if not self.dirty:
+            return 0.0
+        t0 = time.perf_counter()
+        self._rebuild(warm_q)
+        return time.perf_counter() - t0
+
+    def lookup(self, q: np.ndarray):
+        return self.idx.lookup(q)
+
+
+class DeltaStore:
+    """The mutable store posture; maintenance == insert + merge work, plus
+    the (rare, repack-only) pipeline re-jit — the symmetric accounting to
+    WholesaleStore's rebuild-to-servable."""
+
+    def __init__(self, keys: np.ndarray, vals: np.ndarray,
+                 config: IndexConfig):
+        self.idx = build_index(keys, vals, config)
+        self._derives = -1
+
+    def timed_insert(self, keys: np.ndarray, vals: np.ndarray,
+                     warm_q: np.ndarray) -> float:
+        t0 = time.perf_counter()
+        self.idx.insert(keys, vals)
+        base = self.idx.base
+        if base is not None and hasattr(base, "dev_keys"):
+            jax.block_until_ready((base.dev_keys, base.dev_vals))
+            if base.derives != self._derives:   # top re-derived: pay the jit
+                jax.block_until_ready(self.idx.lookup(warm_q).found)
+                self._derives = base.derives
+        return time.perf_counter() - t0
+
+    def lookup(self, q: np.ndarray):
+        return self.idx.lookup(q)
+
+
+def _verify(res, q: np.ndarray, ref: dict, tag: str):
+    found = np.asarray(res.found)
+    vals = np.asarray(res.values)
+    for i, k in enumerate(q.tolist()):
+        want = ref.get(k)
+        assert bool(found[i]) == (want is not None), \
+            f"{tag}: found mismatch at key {k}"
+        if want is not None:
+            assert int(vals[i]) == want, f"{tag}: value mismatch at key {k}"
+
+
+def run_cell(n: int, mix: float, rounds: int, seed: int) -> list:
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(0, 2**30, int(n * 1.2)).astype(np.int32))[:n]
+    vals = np.arange(keys.size, dtype=np.int32)
+    n_ins = int(BATCH * mix)
+    n_look = BATCH - n_ins
+    cfg = dict(kind="tiered", plan="device")
+    stores = {
+        "wholesale": WholesaleStore(keys, vals, IndexConfig(**cfg)),
+        "delta": DeltaStore(keys, vals, IndexConfig(
+            **cfg, mutable=True, delta_capacity=DELTA_CAPACITY)),
+    }
+    out = []
+    for posture, store in stores.items():
+        ref = dict(zip(keys.tolist(), vals.tolist()))
+        r = np.random.default_rng(seed + 1)
+        maint_s, look_s, inserts = 0.0, [], 0
+        # warmup lookup so the first timed round is not all compile
+        q0 = keys[r.integers(0, keys.size, n_look)]
+        if posture == "wholesale":
+            store.maintain(q0)                  # initial build: not timed
+        jax.block_until_ready(store.lookup(q0).found)
+        if posture == "delta":
+            base = store.idx.base
+            store._derives = base.derives if base is not None else -1
+        for _ in range(rounds):
+            if n_ins:
+                ik = r.integers(0, 2**30, n_ins).astype(np.int32)
+                iv = r.integers(0, 2**30, n_ins).astype(np.int32)
+                if posture == "wholesale":
+                    t0 = time.perf_counter()
+                    store.insert(ik, iv)
+                    maint_s += time.perf_counter() - t0
+                    maint_s += store.maintain(q0)
+                else:
+                    maint_s += store.timed_insert(ik, iv, q0)
+                ref.update(zip(ik.tolist(), iv.tolist()))
+                inserts += n_ins
+            hits = np.fromiter(ref, np.int32, len(ref))[
+                r.integers(0, len(ref), n_look // 2)]
+            misses = r.integers(0, 2**30, n_look - n_look // 2).astype(np.int32)
+            q = np.concatenate([hits, misses])
+            t0 = time.perf_counter()
+            res = store.lookup(q)
+            jax.block_until_ready((res.found, res.values))
+            look_s.append(time.perf_counter() - t0)
+            _verify(res, q, ref, f"{posture}/n{n}/mix{mix}")
+        rec = {
+            "posture": posture, "n": int(n), "mix": mix, "rounds": rounds,
+            "inserts": inserts,
+            "maintenance_s": round(maint_s, 5),
+            "maintenance_us_per_insert": (
+                round(maint_s * 1e6 / inserts, 2) if inserts else 0.0),
+            "p99_lookup_us": round(float(np.percentile(look_s, 99)) * 1e6, 1),
+            "mean_lookup_us": round(float(np.mean(look_s)) * 1e6, 1),
+        }
+        if posture == "wholesale":
+            rec["rebuilds"] = store.rebuilds
+            rec["rows_rebuilt"] = store.rows_rebuilt
+        else:
+            s = store.idx.stats
+            rec.update(merges=s["merges"], splits=s["splits"],
+                       pages_touched=s["pages_touched"],
+                       rows_rewritten=s["rows_rewritten"],
+                       top_derives=s["top_derives"],
+                       num_pages=store.idx.base.num_pages)
+        out.append(rec)
+        emit(f"updates/{posture}/n{n}/mix{mix}", rec["mean_lookup_us"],
+             f"maint={rec['maintenance_s']:.3f}s;"
+             f"per_ins={rec['maintenance_us_per_insert']}us;"
+             f"p99={rec['p99_lookup_us']}us")
+    return out
+
+
+def run(sizes, rounds: int, out: str, assert_trend: bool = False) -> dict:
+    results = []
+    for i, n in enumerate(sizes):
+        for mix in MIXES:
+            results.extend(run_cell(n, mix, rounds, seed=100 + i))
+    payload = {"backend": jax.default_backend(),
+               "interpret_kernels": jax.default_backend() == "cpu",
+               "batch": BATCH, "delta_capacity": DELTA_CAPACITY,
+               "results": results}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out} ({len(results)} rows)")
+    if assert_trend:
+        _assert_delta_trend(results)
+    return payload
+
+
+def _assert_delta_trend(results: list):
+    """CI gate: at every cell with writes, total index-maintenance time
+    under the delta store must be strictly below the wholesale rebuild."""
+    cells = {(r["n"], r["mix"], r["posture"]): r for r in results}
+    for (n, mix, posture) in list(cells):
+        if posture != "wholesale" or mix == 0.0:
+            continue
+        w = cells[(n, mix, "wholesale")]["maintenance_s"]
+        d = cells[(n, mix, "delta")]["maintenance_s"]
+        verdict = "ok" if d < w else "REGRESSION"
+        print(f"# trend n={n} mix={mix}: wholesale={w:.3f}s delta={d:.3f}s "
+              f"({verdict})")
+        assert d < w, (
+            f"delta maintenance not below wholesale at n={n}, mix={mix}: "
+            f"{d:.3f}s vs {w:.3f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="add the 65k store (slow under interpret mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep + delta<wholesale maintenance assert "
+                         "(the CI gate)")
+    ap.add_argument("--out", default="BENCH_updates.json")
+    args = ap.parse_args()
+    if args.smoke:
+        run(sizes=(2**12, 2**14), rounds=8, out=args.out, assert_trend=True)
+        return
+    sizes = (2**12, 2**14, 2**16) if args.full else (2**12, 2**14)
+    run(sizes=sizes, rounds=24, out=args.out, assert_trend=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,8 @@ class IndexConfig:
     top: str = "auto"            # tiered: top tier ('auto'|'nitrogen'|'kary')
     tile: int = 128              # tiered: queries per bucket / grid step
     plan: str = "device"         # tiered: schedule placement ('device'|'host')
+    mutable: bool = False        # delta-merge write path (engine/store.py)
+    delta_capacity: int = 1024   # mutable: delta buffer size (rounded to pow2)
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -40,6 +42,9 @@ class IndexConfig:
         if self.plan not in ("device", "host"):
             raise ValueError(
                 f"unknown plan mode {self.plan!r}; want 'device' or 'host'")
+        if self.mutable and self.delta_capacity <= 0:
+            raise ValueError(
+                f"delta_capacity must be positive, got {self.delta_capacity}")
 
 
 @dataclass(frozen=True)
@@ -116,6 +121,12 @@ def _module_for(kind: str):
 
 
 def build_index(keys, values=None, config: IndexConfig = IndexConfig()) -> Index:
+    if config.mutable:
+        # the delta-merge write path (DESIGN.md §6): returns a MutableIndex
+        # (lookup + insert; under a tiered base, lookup stays one dispatch).
+        # Unlike the frozen kinds it accepts an empty initial key set.
+        from ..engine.store import MutableIndex
+        return MutableIndex(config, keys, values)
     keys = np.asarray(keys)
     order = np.argsort(keys, kind="stable")
     srt = keys[order]

@@ -8,4 +8,6 @@ from .schedule import (BucketPlan, DevicePlan, bucket_plan,  # noqa: F401
                        device_plan, ladder_grid, ladder_rungs, lane_arrays,
                        run_scheduled, select_rung, worst_case_steps)
 from .tiered import TieredIndex, build, plan_tiers, search, searcher  # noqa: F401
+from .delta import DeltaBuffer  # noqa: F401
+from .store import MutableIndex  # noqa: F401
 from . import sharded  # noqa: F401

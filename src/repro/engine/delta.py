@@ -1,0 +1,188 @@
+"""Sorted delta buffer — the mutable side of the delta-merge write path
+(DESIGN.md §6).
+
+The thesis' compiled/read-optimized structures (CSS, NitroGen, our tiered
+engine) give up the CSB+-tree's selling point: incremental insert. This
+module brings it back *without* touching the read-optimized core: a small
+**gapped** sorted buffer of power-of-two capacity absorbs writes, and the
+merge policy in ``engine/store.py`` folds it into the tiered leaf pages when
+it overflows.
+
+Layout — a one-level CSB+ leaf group (thesis Alg 3.2, shrunk to a buffer):
+
+    h_keys   [nn, w]   node-structured slots; live keys in each node's
+                       sorted prefix, sentinel in the gaps
+    h_vals   [nn, w]   payload per slot (int32)
+    h_cnt    [nn]      live keys per node
+    node_max [nn]      max live key per node (sentinel when empty) — the
+                       buffer's one-level directory
+
+Invariant: concatenating the node prefixes in node order yields the live
+(key, value) pairs globally sorted by key; ``node_max`` is ascending with
+empty nodes (sentinel) only at the tail.
+
+Insert is CSB+-style incremental: descend the one-level directory
+(``searchsorted`` over ``node_max``), shift at most ``w`` slots inside one
+node. A full node triggers a *re-spread* — all live entries redistributed
+evenly so every node regains gap slots — which is O(capacity), amortized
+O(w) per insert. Inserting an existing key overwrites its value in place
+(upsert; recency-wins is resolved here, not at lookup).
+
+The device probe (:func:`probe`) is a tiny branch-free k-ary pass — one
+wide compare against ``node_max`` picks the node, one ``w``-wide compare
+resolves hit + value — built from the same jnp ops as the tiered pipeline,
+so ``engine/store.py`` fuses it into the single-dispatch lookup
+(``plan="device"``'s zero-host-sync contract extends to the delta side).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.util import sentinel_for
+from .schedule import _next_pow2
+
+DEFAULT_NODE_WIDTH = 16
+
+
+class DeltaBuffer:
+    """Gapped sorted (key -> value) buffer; host-mutable, device-probeable."""
+
+    def __init__(self, capacity: int, dtype=np.int32,
+                 node_width: int = DEFAULT_NODE_WIDTH):
+        if capacity <= 0:
+            raise ValueError(f"delta capacity must be positive, got {capacity}")
+        self.node_width = int(node_width)
+        self.capacity = max(_next_pow2(capacity), self.node_width)
+        self.dtype = np.dtype(dtype)
+        self.sentinel = sentinel_for(self.dtype)
+        self.nn = self.capacity // self.node_width
+        w = self.node_width
+        self.h_keys = np.full((self.nn, w), self.sentinel, self.dtype)
+        self.h_vals = np.zeros((self.nn, w), np.int32)
+        self.h_cnt = np.zeros(self.nn, np.int64)
+        self.node_max = np.full(self.nn, self.sentinel, self.dtype)
+        self.count = 0
+        self.respreads = 0
+        self._dev = None
+
+    @property
+    def full(self) -> bool:
+        return self.count >= self.capacity
+
+    # ---------------------------------------------------------------- write
+    def insert(self, key, value: int) -> bool:
+        """Upsert one (key, value). Returns True when a *new* key was added
+        (False: existing key, value overwritten). The caller must drain a
+        full buffer first (``engine/store.py`` merges on overflow)."""
+        key = self.dtype.type(key)
+        if key == self.sentinel:
+            raise ValueError("key equals the sentinel; out of key domain")
+        w = self.node_width
+        # a key above every node max appends into the last node (mirrors the
+        # device probe's clip; the node's max then grows to the key)
+        j = min(int(np.searchsorted(self.node_max, key, side="left")),
+                self.nn - 1)
+        cnt = int(self.h_cnt[j])
+        pos = int(np.searchsorted(self.h_keys[j, :cnt], key, side="left"))
+        if pos < cnt and self.h_keys[j, pos] == key:
+            self.h_vals[j, pos] = value
+            self._dev = None
+            return False
+        if self.full:
+            raise ValueError("delta buffer full; merge before inserting")
+        if cnt == w:
+            # node overflow: flatten, place the key, re-open gaps everywhere
+            keys, vals = self.live()
+            p = int(np.searchsorted(keys, key, side="left"))
+            self._respread(np.insert(keys, p, key),
+                           np.insert(vals, p, np.int32(value)))
+        else:
+            # shift the node tail one slot right (numpy buffers overlapping
+            # basic-slice assignment) and drop the key in — at most w moves
+            self.h_keys[j, pos + 1: cnt + 1] = self.h_keys[j, pos: cnt]
+            self.h_vals[j, pos + 1: cnt + 1] = self.h_vals[j, pos: cnt]
+            self.h_keys[j, pos] = key
+            self.h_vals[j, pos] = value
+            self.h_cnt[j] = cnt + 1
+            self.node_max[j] = self.h_keys[j, cnt]
+        self.count += 1
+        self._dev = None
+        return True
+
+    def _respread(self, keys: np.ndarray, vals: np.ndarray):
+        """Redistribute live entries evenly across nodes (empties at tail)."""
+        w, nn = self.node_width, self.nn
+        self.h_keys[:] = self.sentinel
+        self.h_vals[:] = 0
+        self.h_cnt[:] = 0
+        self.node_max[:] = self.sentinel
+        n = keys.size
+        base, extra = divmod(n, nn)
+        off = 0
+        for j in range(nn):
+            take = min(base + (1 if j < extra else 0), w)
+            if take == 0:
+                break
+            self.h_keys[j, :take] = keys[off: off + take]
+            self.h_vals[j, :take] = vals[off: off + take]
+            self.h_cnt[j] = take
+            self.node_max[j] = keys[off + take - 1]
+            off += take
+        assert off == n, "respread lost entries"
+        self.respreads += 1
+        self._dev = None
+
+    # ---------------------------------------------------------------- read
+    def live(self):
+        """Live (keys, vals) in globally sorted key order."""
+        if self.count == 0:
+            return (np.empty(0, self.dtype), np.empty(0, np.int32))
+        ks = [self.h_keys[j, : self.h_cnt[j]] for j in range(self.nn)
+              if self.h_cnt[j]]
+        vs = [self.h_vals[j, : self.h_cnt[j]] for j in range(self.nn)
+              if self.h_cnt[j]]
+        return np.concatenate(ks), np.concatenate(vs)
+
+    def drain(self):
+        """Live entries, then clear (the merge path's one-shot read)."""
+        keys, vals = self.live()
+        self.h_keys[:] = self.sentinel
+        self.h_vals[:] = 0
+        self.h_cnt[:] = 0
+        self.node_max[:] = self.sentinel
+        self.count = 0
+        self._dev = None
+        return keys, vals
+
+    def device_state(self):
+        """(d_keys [nn, w], d_vals [nn, w], d_seps [nn]) jnp mirrors, cached
+        until the next mutation — lookups after a warm call transfer
+        nothing (the mutable store's transfer-guard contract)."""
+        if self._dev is None:
+            self._dev = (jnp.asarray(self.h_keys), jnp.asarray(self.h_vals),
+                         jnp.asarray(self.node_max))
+        return self._dev
+
+
+def probe(q: jnp.ndarray, d_keys: jnp.ndarray, d_vals: jnp.ndarray,
+          d_seps: jnp.ndarray):
+    """Branch-free delta probe, traceable inside the fused lookup.
+
+    One-level k-ary descent: the node is the rank of q among ``node_max``
+    (wide compare + popcount — the same primitive as every searcher here),
+    then one ``w``-wide equality compare inside the node resolves the hit
+    and selects the value (keys are unique in the buffer, so at most one
+    slot matches). Empty slots hold the sentinel and can never equal a
+    user key. Returns (hit [Q] bool, value [Q] int32).
+    """
+    nn = d_seps.shape[0]
+    j = jnp.minimum(
+        jnp.sum(d_seps[None, :] < q[:, None], axis=-1), nn - 1
+    ).astype(jnp.int32)
+    row = jnp.take(d_keys, j, axis=0)                    # [Q, w]
+    eq = row == q[:, None]
+    hit = jnp.any(eq, axis=-1)
+    val = jnp.sum(jnp.where(eq, jnp.take(d_vals, j, axis=0), 0),
+                  axis=-1).astype(jnp.int32)
+    return hit, val

@@ -1,0 +1,380 @@
+"""MutableIndex — the delta-merge write path over the tiered engine
+(DESIGN.md §6).
+
+The thesis' read-optimized structures batch updates and rebuild wholesale;
+`PrefixPageStore` inherited that posture and paid an O(n) rebuild per insert
+batch. This subsystem bounds update cost without giving up compiled-index
+reads, the FB+-tree / BS-tree recipe (arXiv 2503.23397, 2505.01180):
+
+* **writes** land in a small gapped delta buffer (`engine/delta.py`,
+  CSB+-style incremental insert, power-of-two capacity);
+* **reads** probe both sides in ONE fused dispatch: the tiered pipeline
+  over gapped leaf pages plus the branch-free delta probe, delta hit wins
+  by recency — `plan="device"`'s zero-host-sync contract is preserved;
+* **merges** fold an overflowing buffer into the leaf pages *page-locally*:
+  only touched pages are rewritten (host row surgery + one donated device
+  row-scatter) and their `seps` entry updated; the compiled top tier keeps
+  routing correctly against its build-time separators (an insert can never
+  push a key above its page's separator — the page id IS the searchsorted
+  rank among separators) and is re-derived only when a page overflows
+  `leaf_width` and splits, i.e. when `num_pages` changes.
+
+Leaf pages here are **gapped**: packed at ``MERGE_FILL`` so most merges
+absorb locally. The page kernel is reused unchanged — gap slots hold the
+sentinel, which never compares below a user key, so the kernel's in-page
+popcount returns the *live-prefix slot* and the pipeline (stride =
+``lw_pad``) yields a flat storage address instead of a dense rank.
+
+Non-tiered bases (binary/css/kary/fast/nitrogen) are also accepted: they
+keep wholesale rebuild *at merge time*, which still amortizes the O(n)
+rebuild over ``delta_capacity`` inserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.util import ceil_to as _ceil_to, sentinel_for
+from . import delta as _delta
+from . import tiered
+from .schedule import _next_pow2
+
+# Target page fill after a pack or split: the remaining (1-fill)·leaf_width
+# gap slots are what lets a merge stay page-local instead of splitting.
+MERGE_FILL = 0.75
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_rows(keys_dev, vals_dev, idx, krows, vrows):
+    """In-place (donated) rewrite of the touched leaf rows on device — the
+    page-local merge's entire device-side cost: O(touched pages), not O(n).
+    ``idx`` is pow2-padded with repeats (idempotent: same row, same data)."""
+    return keys_dev.at[idx].set(krows), vals_dev.at[idx].set(vrows)
+
+
+def _dedup_last(keys: np.ndarray, values: np.ndarray):
+    """Sort by key, keep the LAST duplicate (upsert semantics: later wins)."""
+    order = np.argsort(keys, kind="stable")
+    ks, vs = keys[order], values[order]
+    if ks.size:
+        keep = np.append(ks[1:] != ks[:-1], True)
+        ks, vs = ks[keep], vs[keep]
+    return ks, vs
+
+
+class _PagedBase:
+    """Gapped-leaf tiered base: host (numpy) truth + device mirrors + the
+    traceable rank pipeline. All mutation goes through ``merge``."""
+
+    def __init__(self, keys_sorted: np.ndarray, vals_sorted: np.ndarray, *,
+                 leaf_width: Optional[int] = None, tile: int = 128,
+                 top: str = "auto", vmem_budget: Optional[int] = None,
+                 interpret: bool = True):
+        from ..kernels import ops
+        self.dtype = keys_sorted.dtype
+        self.sentinel = sentinel_for(self.dtype)
+        self.tile = int(tile)
+        self.top_cfg = top
+        self.vmem_budget = vmem_budget or ops.VMEM_BUDGET_BYTES
+        self.interpret = interpret
+        n = int(keys_sorted.size)
+        auto_lw, _, _ = tiered.plan_tiers(n, tile=tile,
+                                          vmem_budget=self.vmem_budget)
+        self.leaf_width = int(leaf_width) if leaf_width else auto_lw
+        self.lw_pad = _ceil_to(self.leaf_width, 128)
+        per = max(1, int(self.leaf_width * MERGE_FILL))
+        chunks = [keys_sorted[i: i + per] for i in range(0, n, per)] or \
+                 [keys_sorted]
+        self._alloc(len(chunks))
+        for p, ck in enumerate(chunks):
+            m = ck.size
+            self.keys[p, :m] = ck
+            self.vals[p, :m] = vals_sorted[p * per: p * per + m]
+            self.cnt[p] = m
+            self.seps[p] = ck[-1] if m else self.sentinel
+        self.derives = 0
+        self._derive()
+
+    def _alloc(self, num_pages: int):
+        self.keys = np.full((num_pages, self.lw_pad), self.sentinel,
+                            self.dtype)
+        self.vals = np.zeros((num_pages, self.lw_pad), np.int32)
+        self.cnt = np.zeros(num_pages, np.int64)
+        self.seps = np.full(num_pages, self.sentinel, self.dtype)
+
+    @property
+    def num_pages(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def n(self) -> int:
+        return int(self.cnt.sum())
+
+    def _derive(self):
+        """(Re-)derive the top tier + pipeline from the current pages.
+        Called at build and on split (num_pages change) — never on a
+        page-local merge."""
+        P = self.num_pages
+        self.top_kind, self.top = tiered.build_top(
+            self.seps, top=self.top_cfg, vmem_budget=self.vmem_budget)
+        page_of_raw = tiered._make_page_of_raw(
+            self.top_kind, self.top, P, lane=128, tile_rows=8,
+            interpret=self.interpret)
+        # stride = lw_pad: the pipeline returns flat slot addresses into the
+        # gapped [P, lw_pad] storage (clip keeps the address gatherable)
+        self.pipeline = tiered._make_pipeline(
+            page_of_raw, num_pages=P, stride=self.lw_pad, tile=self.tile,
+            clip=P * self.lw_pad - 1, interpret=self.interpret)
+        self.dev_keys = jnp.asarray(self.keys)
+        self.dev_vals = jnp.asarray(self.vals)
+        self.derives += 1
+
+    # ---------------------------------------------------------------- merge
+    def merge(self, dk: np.ndarray, dv: np.ndarray) -> dict:
+        """Fold sorted unique delta entries into the leaf pages. Page-local
+        when every touched page stays within leaf_width; otherwise the
+        overflowing pages split (num_pages changes, top re-derived)."""
+        P, lw = self.num_pages, self.leaf_width
+        pids = np.minimum(np.searchsorted(self.seps, dk, side="left"), P - 1)
+        merged = {}
+        overflow = False
+        for p in np.unique(pids):
+            sel = pids == p
+            ks, vs = dk[sel], dv[sel]
+            cnt = int(self.cnt[p])
+            pk = self.keys[p, :cnt]
+            pv = self.vals[p, :cnt]
+            pos = np.searchsorted(pk, ks, side="left")
+            if cnt:
+                isdup = (pos < cnt) & (pk[np.minimum(pos, cnt - 1)] == ks)
+                pv[pos[isdup]] = vs[isdup]          # upsert in place
+            else:
+                isdup = np.zeros(ks.shape, bool)
+            newk, newv = ks[~isdup], vs[~isdup]
+            if newk.size:
+                mk = np.concatenate([pk, newk])
+                mv = np.concatenate([pv, newv])
+                order = np.argsort(mk, kind="stable")
+                mk, mv = mk[order], mv[order]
+            else:
+                mk, mv = pk.copy(), pv.copy()
+            merged[int(p)] = (mk, mv)
+            overflow |= mk.size > lw
+        if not overflow:
+            self._write_rows(merged)
+            return {"touched": len(merged), "split": False,
+                    "rows_rewritten": len(merged)}
+        return self._repack(merged)
+
+    def _write_rows(self, merged: dict):
+        idx = np.fromiter(sorted(merged), np.int32, len(merged))
+        for p in idx:
+            mk, mv = merged[int(p)]
+            m = mk.size
+            self.keys[p, :] = self.sentinel
+            self.vals[p, :] = 0
+            self.keys[p, :m] = mk
+            self.vals[p, :m] = mv
+            self.cnt[p] = m
+            self.seps[p] = mk[-1]
+        # device: one donated row-scatter, pow2-padded so the executable
+        # cache stays O(log P) per shape family
+        pad = _next_pow2(idx.size)
+        idx_p = np.concatenate([idx, np.full(pad - idx.size, idx[-1],
+                                             np.int32)])
+        self.dev_keys, self.dev_vals = _scatter_rows(
+            self.dev_keys, self.dev_vals, jnp.asarray(idx_p),
+            jnp.asarray(self.keys[idx_p]), jnp.asarray(self.vals[idx_p]))
+
+    def _repack(self, merged: dict) -> dict:
+        """A page overflowed leaf_width: repack ALL live entries at
+        MERGE_FILL so every page regains gap headroom, and re-derive the
+        top tier (num_pages changed). O(n) row moves but NO re-sort (pages
+        concatenate in key order), and amortized over the
+        ~(1-MERGE_FILL)·n inserts it takes to overflow again — without
+        the global repack, full pages would split (and re-derive the
+        compiled top) on every subsequent merge."""
+        splits = sum(mk.size > self.leaf_width for mk, _ in merged.values())
+        parts_k, parts_v = [], []
+        for p in range(self.num_pages):
+            if p in merged:
+                mk, mv = merged[p]
+            else:
+                c = int(self.cnt[p])
+                mk, mv = self.keys[p, :c], self.vals[p, :c]
+            parts_k.append(mk)
+            parts_v.append(mv)
+        ks = np.concatenate(parts_k)
+        vs = np.concatenate(parts_v)
+        per = max(1, int(self.leaf_width * MERGE_FILL))
+        num_pages = max(1, -(-ks.size // per))
+        self._alloc(num_pages)
+        for p in range(num_pages):
+            ck = ks[p * per: (p + 1) * per]
+            m = ck.size
+            self.keys[p, :m] = ck
+            self.vals[p, :m] = vs[p * per: p * per + m]
+            self.cnt[p] = m
+            self.seps[p] = ck[-1] if m else self.sentinel
+        self._derive()
+        return {"touched": len(merged), "split": True, "splits": splits,
+                "rows_rewritten": num_pages, "num_pages": num_pages}
+
+
+class MutableIndex:
+    """Mutable point-lookup store: delta buffer over a read-optimized base.
+
+    Built through ``core.api.build_index(..., IndexConfig(mutable=True))``.
+    ``lookup`` returns the facade's LookupResult; under a tiered base,
+    ``rank`` is a flat *slot address* into the gapped leaf storage (pages
+    carry gap slots, so dense searchsorted ranks do not exist here) — the
+    found/values contract is unchanged. Keys are unique (inserting an
+    existing key overwrites its value — recency wins).
+    """
+
+    def __init__(self, config, keys=None, values=None):
+        self.config = config
+        if config.kind == "tiered" and config.plan != "device":
+            # the fused base+delta lookup exists only in device-plan form;
+            # silently ignoring plan="host" would mask a misconfiguration
+            raise ValueError(
+                "the mutable store runs the device plan only; "
+                "plan='host' (BucketPlan stats) requires mutable=False")
+        keys = np.asarray([] if keys is None else keys)
+        if keys.size and values is None:
+            values = np.arange(keys.size, dtype=np.int32)
+        self._key_dtype = keys.dtype if keys.size else np.dtype(np.int32)
+        self.delta = _delta.DeltaBuffer(config.delta_capacity,
+                                        dtype=self._key_dtype)
+        self.base: Any = None
+        self.stats = {"inserts": 0, "upserts": 0, "merges": 0, "splits": 0,
+                      "pages_touched": 0, "rows_rewritten": 0,
+                      "top_derives": 0, "base_rebuilds": 0}
+        if keys.size:
+            ks, vs = _dedup_last(keys, np.asarray(values, np.int32))
+            self._build_base(ks, vs)
+        self._fused = self._make_lookup()
+
+    # ---------------------------------------------------------------- build
+    def _build_base(self, ks: np.ndarray, vs: np.ndarray):
+        c = self.config
+        if c.kind == "tiered":
+            self.base = _PagedBase(ks, vs, leaf_width=c.leaf_width,
+                                   tile=c.tile, top=c.top)
+            self.stats["top_derives"] = self.base.derives
+        else:
+            from ..core.api import build_index
+            self.base = build_index(
+                ks, vs, dataclasses.replace(c, mutable=False))
+            self._flat = (ks, vs)
+            self.stats["base_rebuilds"] += 1
+
+    def _make_lookup(self):
+        probe = _delta.probe
+        if self.base is None:
+            def fused(q, dk, dv, ds):
+                hit, val = probe(q, dk, dv, ds)
+                return jnp.zeros(q.shape, jnp.int32), hit, val
+            return jax.jit(fused)
+        if isinstance(self.base, _PagedBase):
+            pipeline = self.base.pipeline
+            def fused(q, pages, vpages, dk, dv, ds):
+                addr = pipeline(q, pages)
+                bfound = jnp.take(pages.reshape(-1), addr, axis=0,
+                                  mode="clip") == q
+                bval = jnp.take(vpages.reshape(-1), addr, axis=0,
+                                mode="clip")
+                dhit, dval = probe(q, dk, dv, ds)
+                return addr, dhit | bfound, jnp.where(dhit, dval, bval)
+            return jax.jit(fused)
+        base = self.base                       # core Index: traceable facade
+        def fused(q, dk, dv, ds):
+            res = base.lookup(q)
+            dhit, dval = probe(q, dk, dv, ds)
+            return (res.rank, dhit | res.found,
+                    jnp.where(dhit, dval, res.values))
+        return jax.jit(fused)
+
+    # ---------------------------------------------------------------- write
+    def insert(self, keys, values):
+        """Upsert a batch. O(delta work) per key; an overflowing buffer is
+        merged into the base (page-local under a tiered base)."""
+        keys = np.atleast_1d(np.asarray(keys, self._key_dtype))
+        values = np.atleast_1d(np.asarray(values, np.int32))
+        if keys.shape != values.shape:
+            raise ValueError("keys/values must align")
+        for k, v in zip(keys, values):
+            if self.delta.full:
+                self._merge()
+            if self.delta.insert(k, v):
+                self.stats["inserts"] += 1
+            else:
+                self.stats["upserts"] += 1
+
+    def _merge(self):
+        dk, dv = self.delta.drain()
+        if dk.size == 0:
+            return
+        self.stats["merges"] += 1
+        if self.base is None:
+            self._build_base(dk, dv)
+        elif isinstance(self.base, _PagedBase):
+            info = self.base.merge(dk, dv)
+            self.stats["pages_touched"] += info["touched"]
+            self.stats["rows_rewritten"] += info["rows_rewritten"]
+            self.stats["top_derives"] = self.base.derives
+            if info["split"]:
+                self.stats["splits"] += info["splits"]
+            else:
+                # page-local merge: pipeline unchanged, keep the compiled
+                # fused lookup (rows flow in as arguments)
+                return
+        else:                                  # wholesale (non-tiered base)
+            bk, bv = self._flat
+            pos = np.searchsorted(bk, dk, side="left")
+            isdup = (pos < bk.size) & \
+                (bk[np.minimum(pos, max(bk.size - 1, 0))] == dk)
+            bv = bv.copy()
+            bv[pos[isdup]] = dv[isdup]
+            mk = np.concatenate([bk, dk[~isdup]])
+            mv = np.concatenate([bv, dv[~isdup]])
+            order = np.argsort(mk, kind="stable")
+            self._build_base(mk[order], mv[order])
+        self._fused = self._make_lookup()
+
+    def flush(self):
+        """Force-merge the delta into the base (tests/benchmarks)."""
+        self._merge()
+
+    # ---------------------------------------------------------------- read
+    def lookup(self, queries):
+        """Single-dispatch lookup over base + delta (delta wins). Returns
+        core.api.LookupResult."""
+        from ..core.api import LookupResult
+        q = jnp.asarray(queries)
+        dk, dv, ds = self.delta.device_state()
+        if isinstance(self.base, _PagedBase):
+            rank, found, vals = self._fused(q, self.base.dev_keys,
+                                            self.base.dev_vals, dk, dv, ds)
+        else:
+            rank, found, vals = self._fused(q, dk, dv, ds)
+        return LookupResult(rank=rank, found=found, values=vals)
+
+    @property
+    def n(self) -> int:
+        """Live key count: exact after a merge; between merges delta keys
+        not yet folded may double-count base upserts (upper bound)."""
+        base_n = self.base.n if self.base is not None else 0
+        return base_n + self.delta.count
+
+    @property
+    def tree_bytes(self) -> int:
+        if isinstance(self.base, _PagedBase) and self.base.top_kind == "kary":
+            return int(self.base.top.tree.size *
+                       self.base.top.tree.dtype.itemsize)
+        return 0

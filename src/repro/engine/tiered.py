@@ -80,7 +80,9 @@ class TieredIndex:
     top_kind: str                # 'nitrogen' | 'kary' | 'trivial'
     top: Any                     # the inner index over `seps` (None if trivial)
     page_of: Callable            # jit-cached: q[batch] -> leaf-page id
-    search_fused: Callable       # jitted (q, pages) -> ranks, zero host syncs
+    search_raw: Callable         # traceable (q, pages) -> ranks, for fusing
+    search_fused: Callable       # jitted search_raw, zero host syncs
+    donate: bool = True          # search_fused donates its query buffer
     plan: str = "device"         # default schedule placement
     interpret: bool = True
 
@@ -121,18 +123,20 @@ def _make_page_of_raw(top_kind: str, top, num_pages: int, *, lane: int,
     return page_of
 
 
-def _make_fused(page_of_raw: Callable, *, num_pages: int, leaf_width: int,
-                tile: int, n: int, interpret: bool,
-                donate: bool = True) -> Callable:
-    """The single-dispatch pipeline (DESIGN.md §4): top descent -> device
-    plan at the static worst-case grid -> rung-selected page kernel ->
-    un-permute, all inside one jit. The query buffer is donated when its
-    dtype lets the [Q] int32 rank output alias it (int32 keys); `pages` is
-    passed (not closed over) so the leaf storage is not baked into the
-    executable."""
+def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
+                   tile: int, clip: int, interpret: bool) -> Callable:
+    """The single-dispatch pipeline (DESIGN.md §4) as a plain traceable fn:
+    top descent -> device plan at the static worst-case grid -> rung-selected
+    page kernel -> un-permute. `pages` is passed (not closed over) so the
+    leaf storage is not baked into the executable.
 
-    @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
-    def fused(q, pages):
+    ``stride`` is the per-page rank base fed to the page kernel: the dense
+    engine uses ``leaf_width`` (ranks are global searchsorted positions);
+    the mutable store (engine/store.py) uses ``lw_pad`` so the returned
+    value is a flat *slot address* into the gapped [num_pages, lw_pad]
+    storage. Results are clipped to ``clip``."""
+
+    def pipeline(q, pages):
         q_n = q.shape[0]
         pids = page_of_raw(q)
         g_cap = ladder_grid(q_n, tile, num_pages)
@@ -141,40 +145,29 @@ def _make_fused(page_of_raw: Callable, *, num_pages: int, leaf_width: int,
 
         def body(qb, step_pages, g):
             return _page.page_search_bucketed(
-                qb, step_pages, pages, leaf_width=leaf_width,
+                qb, step_pages, pages, leaf_width=stride,
                 interpret=interpret)
 
         out = run_scheduled(plan, q_sorted, q_n, tile, g_cap, body)
-        return jnp.minimum(out, n)
+        return jnp.minimum(out, clip)
 
-    return fused
+    return pipeline
 
 
-def build(keys, *, leaf_width: int | None = None, tile: int = 128,
-          top: str = "auto", plan: str = "device",
-          vmem_budget: int = ops.VMEM_BUDGET_BYTES,
-          interpret: bool = True) -> TieredIndex:
+def build_top(seps: np.ndarray, *, top: str = "auto",
+              vmem_budget: int = ops.VMEM_BUDGET_BYTES):
+    """Top-tier index over the page-last-keys array: returns
+    (top_kind, top_idx). Shared by the dense build below and the mutable
+    store's merge path (engine/store.py), which re-derives the top only
+    when the page count changes."""
     if top not in ("auto", "nitrogen", "kary"):
         raise ValueError(f"unknown top tier {top!r}; "
                          "want 'auto', 'nitrogen' or 'kary'")
-    if plan not in PLAN_MODES:
-        raise ValueError(f"unknown plan mode {plan!r}; "
-                         f"want one of {PLAN_MODES}")
-    srt = as_sorted_numpy(keys)
-    n = int(srt.size)
-    auto_lw, _, auto_top = plan_tiers(n, tile=tile, vmem_budget=vmem_budget)
-    lw = int(leaf_width) if leaf_width else auto_lw
-    num_pages = -(-n // lw)
-    lw_pad = _ceil_to(lw, 128)
-    sent = sentinel_for(srt.dtype)
-    pages = np.full((num_pages, lw_pad), sent, srt.dtype)
-    pages[:, :lw] = pad_to(srt, num_pages * lw).reshape(num_pages, lw)
-    seps = pages[:, lw - 1].copy()          # ascending; sentinel on partial tail
-
+    num_pages = int(seps.size)
     top_kind = top
     if top == "auto":
-        top_kind = auto_top if leaf_width is None else (
-            "nitrogen" if num_pages <= NITROGEN_TOP_MAX_PAGES else "kary")
+        top_kind = "nitrogen" if num_pages <= NITROGEN_TOP_MAX_PAGES \
+            else "kary"
     if num_pages == 1:
         top_kind = "trivial"
     if top_kind == "nitrogen":
@@ -190,19 +183,42 @@ def build(keys, *, leaf_width: int | None = None, tile: int = 128,
                 "VMEM; increase leaf_width or lower vmem_budget pressure")
     else:                                   # trivial: single-page index
         top_idx = None
+    return top_kind, top_idx
 
+
+def build(keys, *, leaf_width: int | None = None, tile: int = 128,
+          top: str = "auto", plan: str = "device",
+          vmem_budget: int = ops.VMEM_BUDGET_BYTES,
+          interpret: bool = True) -> TieredIndex:
+    if plan not in PLAN_MODES:
+        raise ValueError(f"unknown plan mode {plan!r}; "
+                         f"want one of {PLAN_MODES}")
+    srt = as_sorted_numpy(keys)
+    n = int(srt.size)
+    auto_lw, _, _ = plan_tiers(n, tile=tile, vmem_budget=vmem_budget)
+    lw = int(leaf_width) if leaf_width else auto_lw
+    num_pages = -(-n // lw)
+    lw_pad = _ceil_to(lw, 128)
+    sent = sentinel_for(srt.dtype)
+    pages = np.full((num_pages, lw_pad), sent, srt.dtype)
+    pages[:, :lw] = pad_to(srt, num_pages * lw).reshape(num_pages, lw)
+    seps = pages[:, lw - 1].copy()          # ascending; sentinel on partial tail
+
+    top_kind, top_idx = build_top(seps, top=top, vmem_budget=vmem_budget)
     page_of_raw = _make_page_of_raw(top_kind, top_idx, num_pages, lane=128,
                                     tile_rows=8, interpret=interpret)
+    pipeline = _make_pipeline(page_of_raw, num_pages=num_pages, stride=lw,
+                              tile=int(tile), clip=n, interpret=interpret)
+    donate = srt.dtype == np.int32
     return TieredIndex(
         pages=jnp.asarray(pages),
         seps=jnp.asarray(seps), n=n, leaf_width=lw, lw_pad=lw_pad,
         num_pages=num_pages, tile=int(tile), top_kind=top_kind, top=top_idx,
         page_of=jax.jit(page_of_raw),
-        search_fused=_make_fused(page_of_raw, num_pages=num_pages,
-                                 leaf_width=lw, tile=int(tile), n=n,
-                                 interpret=interpret,
-                                 donate=srt.dtype == np.int32),
-        plan=plan, interpret=interpret)
+        search_raw=pipeline,
+        search_fused=functools.partial(
+            jax.jit, donate_argnums=(0,) if donate else ())(pipeline),
+        donate=donate, plan=plan, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("leaf_width", "n", "interpret"))
@@ -253,8 +269,9 @@ def search(index: TieredIndex, queries, *, plan: str | None = None
         return ranks
     owned = not isinstance(queries, jax.Array)
     q = jnp.asarray(queries)
-    if not owned:
+    if not owned and index.donate:
         # the fused pipeline donates its query buffer; never eat the caller's
+        # (no copy needed when the pipeline was built without donation)
         q = jnp.copy(q)
     return index.search_fused(q, index.pages)
 

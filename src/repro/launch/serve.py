@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--index", default="tiered",
                     choices=["binary", "css", "kary", "fast", "nitrogen",
                              "tiered"])
+    ap.add_argument("--wholesale", action="store_true",
+                    help="rebuild the prefix index per insert batch (the "
+                         "old snapshot posture) instead of the delta-merge "
+                         "write path (DESIGN.md §6)")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-p", type=float, default=0.9)
     args = ap.parse_args()
@@ -43,7 +47,8 @@ def main():
     eng = ServeEngine(
         cfg, params, max_len=args.max_len, page_size=args.page_size,
         index_config=IndexConfig(kind=args.index, levels=2,
-                                 compiled_node_width=3),
+                                 compiled_node_width=3,
+                                 mutable=not args.wholesale),
         sampler=SamplerConfig(temperature=args.temperature, top_p=args.top_p))
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
@@ -61,6 +66,8 @@ def main():
     print(f"decode: {s.decode_tokens} tokens in {s.decode_s:.2f}s "
           f"({s.decode_tokens/max(s.decode_s,1e-9):,.0f} tok/s)")
     print(f"prefix store: {eng.store.stats}")
+    if eng.store.index_config.mutable:
+        print(f"write path:   {eng.store.index_stats}")
 
 
 if __name__ == "__main__":

@@ -43,15 +43,17 @@ class ServeEngine:
         self.sampler = sampler
         self.dtype = compute_dtype
         self.pageable = cfg.family in ("dense", "moe")
-        # default probe structure is the tiered engine (DESIGN.md §4): it
-        # self-sizes from a one-page store up to VMEM-overflowing hash sets,
-        # so the store never needs re-configuring as traffic accumulates.
+        # default probe structure is the mutable tiered engine (DESIGN.md
+        # §4/§6): it self-sizes from a one-page store up to VMEM-overflowing
+        # hash sets, and new prefill pages insert through the delta buffer
+        # (page-local merges) instead of rebuilding the snapshot per insert.
         # plan="device" keeps the probe a single dispatch with no host sync
-        # between the top descent and the page kernel (pass plan="host" in
-        # index_config to get inspectable BucketPlan stats instead)
+        # between the top descent, delta probe and page kernel (pass
+        # plan="host" + mutable=False to get BucketPlan stats instead)
         self.store = KV.PrefixPageStore(
             page_size, index_config or IndexConfig(kind="tiered",
-                                                   plan="device"))
+                                                   plan="device",
+                                                   mutable=True))
         self.stats = EngineStats()
         self._jit_decode = jax.jit(
             lambda p, t, c: T.decode_step(cfg, p, t, c, compute_dtype=compute_dtype))

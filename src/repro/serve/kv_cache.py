@@ -5,10 +5,13 @@ RadixAttention-style prefix reuse, reorganized around the thesis' read-heavy
 OLAP regime: prompt tokens are split into pages of ``page_size`` tokens; each
 page's *chained* hash (h_i = mix(h_{i-1}, block_i)) identifies the whole
 prefix up to and including that page.  Cached (hash -> page payload) entries
-are kept in a **sorted snapshot index** probed with any of the paper's
-structures (binary / CSS / k-ary / FAST / NitroGen); inserts batch up and the
-index is rebuilt wholesale — exactly the CSS/NitroGen update model, and the
-reason an index-compiled structure is admissible here.
+are kept in a sorted index probed with any of the paper's structures
+(binary / CSS / k-ary / FAST / NitroGen / tiered). By default the index is
+**mutable** (DESIGN.md §6): inserts land in the delta buffer and merge
+page-locally into the tiered leaves, so update cost is bounded by
+O(delta_capacity + touched pages) instead of the old wholesale
+rebuild-per-insert-batch. Non-mutable configs keep the CSS/NitroGen
+snapshot-rebuild posture (``rebuild_index``).
 
 Hash collisions are tolerated: every hit is verified against the stored
 tokens before reuse (the index accelerates, correctness never depends on it).
@@ -25,30 +28,70 @@ import jax.numpy as jnp
 from ..core import IndexConfig, build_index
 
 _MASK31 = (1 << 31) - 1
+_SEED = 0x9E3779B1
+_MULT = 1_000_003
+_ADD = 0x7F4A7C15
 
 
-def chain_hashes(tokens: np.ndarray, page_size: int) -> np.ndarray:
-    """Chained per-page hashes of a token sequence (int32, 31-bit)."""
+def chain_hashes_ref(tokens: np.ndarray, page_size: int) -> np.ndarray:
+    """Scalar reference for :func:`chain_hashes` (per-token Python loop);
+    kept as the property-test oracle."""
     tokens = np.asarray(tokens, np.int64)
     n_pages = len(tokens) // page_size
-    hs, h = [], np.int64(0x9E3779B1)
+    hs, h = [], np.int64(_SEED)
     for i in range(n_pages):
         blk = tokens[i * page_size: (i + 1) * page_size]
         for t in blk:                                  # simple polynomial mix
-            h = (h * 1_000_003 + t + 0x7F4A7C15) & _MASK31
-        hs.append(int(h))
+            h = (h * _MULT + t + _ADD) & _MASK31
+        # emitted hashes stay strictly below the int32 sentinel (the index
+        # key-domain contract); 2^31-1 folds onto 2^31-2 — one more tolerated
+        # collision, caught by token verification like any other
+        hs.append(min(int(h), _MASK31 - 1))
     return np.asarray(hs, np.int32)
+
+
+def chain_hashes(tokens: np.ndarray, page_size: int) -> np.ndarray:
+    """Chained per-page hashes of a token sequence (int32, 31-bit).
+
+    Vectorized form of :func:`chain_hashes_ref`: a Horner pass over token
+    positions (``page_size`` steps, each vectorized across all pages)
+    computes every page's polynomial block value, then a scan over pages
+    chains them (h_i = h_{i-1}·M^s + b_i mod 2^31). Bit-identical to the
+    scalar loop: every op is +/× followed by the 31-bit mask, and int64
+    wraparound is harmless because x mod 2^64 determines x mod 2^31.
+    """
+    tokens = np.asarray(tokens, np.int64)
+    n_pages = len(tokens) // page_size
+    if n_pages == 0:
+        return np.empty(0, np.int32)
+    blk = tokens[: n_pages * page_size].reshape(n_pages, page_size)
+    b = np.zeros(n_pages, np.int64)
+    for j in range(page_size):                 # Horner, vectorized over pages
+        b = (b * _MULT + blk[:, j] + _ADD) & _MASK31
+    mult_page = pow(_MULT, page_size, 1 << 31)
+    hs = np.empty(n_pages, np.int64)
+    h = np.int64(_SEED)
+    for i in range(n_pages):                   # O(pages) chain, not O(tokens)
+        h = (h * mult_page + b[i]) & _MASK31
+        hs[i] = h
+    # clamp below the int32 sentinel (see chain_hashes_ref); the chain state
+    # itself stays unclamped in both forms
+    return np.minimum(hs, _MASK31 - 1).astype(np.int32)
 
 
 @dataclass
 class PrefixPageStore:
     page_size: int
-    index_config: IndexConfig = field(default_factory=lambda: IndexConfig(kind="nitrogen"))
+    # default probe: the mutable tiered store (DESIGN.md §6) — inserts go
+    # through the delta buffer, never a wholesale rebuild
+    index_config: IndexConfig = field(default_factory=lambda: IndexConfig(
+        kind="tiered", plan="device", mutable=True))
     hashes: list = field(default_factory=list)       # int32 chained hash per page
     tokens: list = field(default_factory=list)       # np [page_size] per page
     payloads: list = field(default_factory=list)     # opaque per-page payload (KV slices)
     _index: Any = None
     _dirty: bool = True
+    _known: set = field(default_factory=set)         # hashes, kept incrementally
     stats: dict = field(default_factory=lambda: {
         "lookups": 0, "hits": 0, "rebuilds": 0, "verify_rejects": 0})
 
@@ -57,20 +100,36 @@ class PrefixPageStore:
         """Store pages of a finished prefill. page_payloads[i] is the KV
         payload for page i (len == full pages in the prompt)."""
         hs = chain_hashes(prompt_tokens, self.page_size)
-        known = set(self.hashes)
+        new_keys, new_slots = [], []
         for i, h in enumerate(hs[: len(page_payloads)]):
-            if int(h) in known:
+            h = int(h)
+            if h in self._known:
                 continue
-            self.hashes.append(int(h))
+            slot = len(self.hashes)
+            self.hashes.append(h)
             self.tokens.append(np.asarray(
                 prompt_tokens[: (i + 1) * self.page_size], np.int32))
             self.payloads.append(page_payloads[i])
-            known.add(int(h))
-        self._dirty = True
+            self._known.add(h)
+            new_keys.append(h)
+            new_slots.append(slot)
+        if not new_keys:
+            return
+        if self.index_config.mutable:
+            # the delta path: O(delta work) per new page, page-local merges
+            if self._index is None:
+                self._index = build_index(np.empty(0, np.int32),
+                                          config=self.index_config)
+            self._index.insert(np.asarray(new_keys, np.int32),
+                               np.asarray(new_slots, np.int32))
+            self._dirty = False
+        else:
+            self._dirty = True                       # wholesale posture
 
     def rebuild_index(self):
         """Batch rebuild (the CSS/NitroGen posture: updates are batched and
-        the read-optimized structure is regenerated)."""
+        the read-optimized structure is regenerated). The mutable default
+        never calls this after the store's first insert."""
         if not self.hashes:
             self._index = None
         else:
@@ -81,11 +140,16 @@ class PrefixPageStore:
         self._dirty = False
         self.stats["rebuilds"] += 1
 
+    @property
+    def index_stats(self) -> dict:
+        """Write-path counters of the mutable index (empty when wholesale)."""
+        return dict(getattr(self._index, "stats", {}) or {})
+
     # ---------------------------------------------------------------- read
     def lookup(self, prompt_tokens: np.ndarray):
         """Longest reusable prefix. Returns (n_pages_hit, payloads[list])."""
         self.stats["lookups"] += 1
-        if self._dirty:
+        if self._dirty and not self.index_config.mutable:
             self.rebuild_index()
         if self._index is None:
             return 0, []

@@ -1,0 +1,72 @@
+"""Hypothesis property test for the delta-merge write path: for random
+interleaved insert/lookup traces, MutableIndex results (found/values,
+recency-wins) must match a rebuild-every-time reference index, including
+across merge and repack boundaries (DESIGN.md §6 acceptance oracle)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IndexConfig, build_index
+
+# small universe so traces hit duplicates (upserts) and collisions between
+# delta and base; small capacity/leaf so merges + repacks actually trigger
+UNIVERSE = 2_000
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n0=st.integers(0, 400),
+    capacity=st.sampled_from([16, 32, 64]),
+    trace=st.lists(
+        st.tuples(st.booleans(),              # True: insert batch, else probe
+                  st.integers(1, 30),         # batch size
+                  st.integers(0, 10_000)),    # batch seed
+        min_size=4, max_size=14),
+)
+def test_mutable_index_matches_rebuild_reference(seed, n0, capacity, trace):
+    rng = np.random.default_rng(seed)
+    init = np.unique(rng.integers(0, UNIVERSE, n0).astype(np.int32)) \
+        if n0 else np.empty(0, np.int32)
+    vals = np.arange(init.size, dtype=np.int32) * 5
+    idx = build_index(init, vals if init.size else None, IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=capacity, leaf_width=128))
+    ref = dict(zip(init.tolist(), vals.tolist()))
+    merges_seen = False
+    for is_insert, size, bseed in trace:
+        br = np.random.default_rng(bseed)
+        ks = br.integers(0, UNIVERSE, size).astype(np.int32)
+        if is_insert:
+            vs = br.integers(0, 10**6, size).astype(np.int32)
+            idx.insert(ks, vs)
+            ref.update(zip(ks.tolist(), vs.tolist()))
+            merges_seen |= idx.stats["merges"] > 0
+        else:
+            got = idx.lookup(ks)
+            g_found = np.asarray(got.found)
+            g_vals = np.asarray(got.values)
+            if ref:
+                rk = np.fromiter(ref, np.int32, len(ref))
+                order = np.argsort(rk)
+                rv = np.fromiter(ref.values(), np.int32, len(ref))[order]
+                want = build_index(rk[order], rv,
+                                   IndexConfig(kind="binary")).lookup(ks)
+                np.testing.assert_array_equal(g_found,
+                                              np.asarray(want.found))
+                hit = g_found
+                np.testing.assert_array_equal(
+                    g_vals[hit], np.asarray(want.values)[hit])
+            else:
+                assert not g_found.any()
+    # final state check (after any trailing merges)
+    probe = np.arange(0, UNIVERSE, 13, dtype=np.int32)
+    got = idx.lookup(probe)
+    g_found = np.asarray(got.found)
+    g_vals = np.asarray(got.values)
+    for i, k in enumerate(probe.tolist()):
+        assert bool(g_found[i]) == (k in ref)
+        if k in ref:
+            assert int(g_vals[i]) == ref[k]

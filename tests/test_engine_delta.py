@@ -1,0 +1,267 @@
+"""Delta-merge write path (DESIGN.md §6): DeltaBuffer invariants, the
+MutableIndex correctness oracle against a rebuild-every-time reference
+(including across merge/repack boundaries), recency-wins upserts, the
+single-dispatch transfer-guard contract extended to the delta probe, and
+page invariants of the gapped tiered base. Hypothesis-free (the property
+twin lives in test_delta_property.py)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from repro.engine import delta as delta_mod
+from repro.engine.delta import DeltaBuffer
+from repro.engine.store import MERGE_FILL, MutableIndex, _PagedBase
+
+
+def check_oracle(idx, ref: dict, qs: np.ndarray):
+    res = idx.lookup(qs)
+    found = np.asarray(res.found)
+    vals = np.asarray(res.values)
+    for i, q in enumerate(qs.tolist()):
+        want = ref.get(int(q) if not isinstance(q, float) else q)
+        assert bool(found[i]) == (want is not None), (q, want)
+        if want is not None:
+            assert int(vals[i]) == want, (q, int(vals[i]), want)
+
+
+# ---------------------------------------------------------------- DeltaBuffer
+def test_delta_buffer_sorted_and_gapped():
+    buf = DeltaBuffer(64, node_width=8)
+    rng = np.random.default_rng(0)
+    ref = {}
+    ks = rng.permutation(np.arange(0, 300, 5)).astype(np.int32)[:60]
+    for i, k in enumerate(ks.tolist()):
+        buf.insert(k, i)
+        ref[k] = i
+    live_k, live_v = buf.live()
+    assert live_k.size == len(ref) == buf.count
+    np.testing.assert_array_equal(live_k, np.sort(live_k))   # globally sorted
+    assert dict(zip(live_k.tolist(), live_v.tolist())) == ref
+    # node structure: live prefixes, sentinel gaps, ascending node_max
+    for j in range(buf.nn):
+        c = int(buf.h_cnt[j])
+        assert (buf.h_keys[j, c:] == buf.sentinel).all()
+        if c:
+            assert buf.node_max[j] == buf.h_keys[j, c - 1]
+
+
+def test_delta_buffer_upsert_and_full():
+    buf = DeltaBuffer(16, node_width=4)
+    for k in range(16):
+        assert buf.insert(k, k)
+    assert buf.full
+    assert not buf.insert(3, 999)            # upsert: no new key, no raise
+    with pytest.raises(ValueError, match="full"):
+        buf.insert(100, 1)
+    ks, vs = buf.drain()
+    assert buf.count == 0 and not buf.full
+    assert dict(zip(ks.tolist(), vs.tolist()))[3] == 999
+
+
+def test_delta_buffer_capacity_rounded_pow2():
+    assert DeltaBuffer(100).capacity == 128
+    with pytest.raises(ValueError, match="positive"):
+        DeltaBuffer(0)
+
+
+def test_delta_probe_matches_host():
+    buf = DeltaBuffer(64, node_width=8)
+    rng = np.random.default_rng(1)
+    ref = {}
+    for k in rng.integers(0, 500, 50).astype(np.int32).tolist():
+        buf.insert(k, k * 3)
+        ref[k] = k * 3
+    dk, dv, ds = buf.device_state()
+    qs = np.arange(-5, 510, 7, dtype=np.int32)
+    hit, val = delta_mod.probe(jnp.asarray(qs), dk, dv, ds)
+    hit, val = np.asarray(hit), np.asarray(val)
+    for i, q in enumerate(qs.tolist()):
+        assert bool(hit[i]) == (q in ref)
+        if q in ref:
+            assert val[i] == ref[q]
+
+
+# ---------------------------------------------------------------- MutableIndex
+def _reference(ref: dict):
+    ks = np.fromiter(ref, np.int32, len(ref))
+    order = np.argsort(ks)
+    vs = np.fromiter(ref.values(), np.int32, len(ref))[order]
+    return build_index(ks[order], vs, IndexConfig(kind="binary"))
+
+
+def test_mutable_index_oracle_across_merges():
+    """Interleaved insert/lookup trace: MutableIndex == rebuild-every-time
+    reference on found/values, including straight after merges/repacks."""
+    rng = np.random.default_rng(2)
+    keys = np.unique(rng.integers(0, 10**6, 1500).astype(np.int32))
+    vals = np.arange(keys.size, dtype=np.int32)
+    idx = build_index(keys, vals, IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=64, leaf_width=128))
+    ref = dict(zip(keys.tolist(), vals.tolist()))
+    for step in range(10):
+        nk = rng.integers(0, 10**6, 40).astype(np.int32)
+        nv = rng.integers(0, 10**6, 40).astype(np.int32)
+        idx.insert(nk, nv)
+        ref.update(zip(nk.tolist(), nv.tolist()))
+        qs = np.concatenate([nk[:10],
+                             rng.integers(0, 10**6, 22).astype(np.int32)])
+        check_oracle(idx, ref, qs)
+        rr = _reference(ref).lookup(qs)
+        res = idx.lookup(qs)
+        np.testing.assert_array_equal(np.asarray(res.found),
+                                      np.asarray(rr.found))
+    assert idx.stats["merges"] > 0
+
+
+def test_mutable_index_split_repack_and_invariants():
+    """Force page overflows; the gapped base must keep its invariants and
+    the top tier is re-derived only when num_pages changes."""
+    rng = np.random.default_rng(3)
+    keys = np.unique(rng.integers(0, 10**7, 1200).astype(np.int32))
+    idx = build_index(keys, config=IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=128, leaf_width=128))
+    ref = {int(k): i for i, k in enumerate(keys.tolist())}
+    derives0 = idx.stats["top_derives"]
+    for _ in range(20):
+        nk = rng.integers(0, 10**7, 100).astype(np.int32)
+        nv = rng.integers(0, 10**7, 100).astype(np.int32)
+        idx.insert(nk, nv)
+        ref.update(zip(nk.tolist(), nv.tolist()))
+    assert idx.stats["splits"] > 0
+    assert idx.stats["top_derives"] > derives0
+    # derives only happen on merges that split, never on page-local ones
+    assert idx.stats["top_derives"] - derives0 <= idx.stats["merges"]
+    base = idx.base
+    lw = base.leaf_width
+    live = []
+    for p in range(base.num_pages):
+        c = int(base.cnt[p])
+        assert 0 < c <= lw
+        row = base.keys[p, :c]
+        assert (base.keys[p, c:] == base.sentinel).all()      # gap slots
+        assert base.seps[p] == row[-1]                        # seps = max live
+        live.append(row)
+    flat = np.concatenate(live)
+    np.testing.assert_array_equal(flat, np.sort(flat))        # global order
+    assert np.unique(flat).size == flat.size                  # unique keys
+    qs = rng.integers(0, 10**7, 200).astype(np.int32)
+    check_oracle(idx, ref, qs)
+
+
+def test_mutable_index_recency_wins():
+    keys = np.arange(0, 1000, 10, dtype=np.int32)
+    idx = build_index(keys, config=IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=32, leaf_width=128))
+    # overwrite a base key's value: delta shadows the base payload
+    idx.insert(np.int32(500), np.int32(7777))
+    res = idx.lookup(np.array([500], np.int32))
+    assert bool(np.asarray(res.found)[0])
+    assert int(np.asarray(res.values)[0]) == 7777
+    # overwrite again inside the delta; then force the merge and re-check
+    idx.insert(np.int32(500), np.int32(8888))
+    idx.flush()
+    assert idx.delta.count == 0
+    res = idx.lookup(np.array([500], np.int32))
+    assert int(np.asarray(res.values)[0]) == 8888
+
+
+def test_mutable_index_empty_start():
+    idx = build_index(np.empty(0, np.int32), config=IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=16))
+    res = idx.lookup(np.array([1, 2, 3], np.int32))
+    assert not np.asarray(res.found).any()
+    ref = {}
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        nk = rng.integers(0, 400, 10).astype(np.int32)
+        nv = rng.integers(0, 400, 10).astype(np.int32)
+        idx.insert(nk, nv)
+        ref.update(zip(nk.tolist(), nv.tolist()))
+    assert idx.base is not None                # delta overflowed into a base
+    check_oracle(idx, ref, np.arange(0, 400, 3, dtype=np.int32))
+
+
+def test_mutable_lookup_single_dispatch_no_transfers():
+    """The acceptance contract: plan='device' lookups through MutableIndex
+    stay one jitted dispatch — the transfer-guard test extends to the delta
+    probe (delta non-empty, post-merge state)."""
+    rng = np.random.default_rng(5)
+    keys = np.unique(rng.integers(0, 2**30, 4096).astype(np.int32))
+    idx = build_index(keys, config=IndexConfig(
+        kind="tiered", plan="device", mutable=True, delta_capacity=128))
+    idx.insert(rng.integers(0, 2**30, 200).astype(np.int32),
+               rng.integers(0, 2**30, 200).astype(np.int32))
+    assert idx.delta.count > 0                 # probe must cover a live delta
+    qs = np.concatenate([keys[:256],
+                         rng.integers(0, 2**30, 256).astype(np.int32)])
+    q_dev = jnp.asarray(qs)
+    warm = idx.lookup(q_dev)
+    jax.block_until_ready((warm.found, warm.values))
+    with jax.transfer_guard("disallow"):
+        res = idx.lookup(q_dev)
+        jax.block_until_ready((res.found, res.values))
+    np.testing.assert_array_equal(np.asarray(res.found),
+                                  np.asarray(warm.found))
+
+
+@pytest.mark.parametrize("kind", ["nitrogen", "css", "binary"])
+def test_mutable_index_non_tiered_base(kind):
+    """Any read-optimized kind can sit under the delta buffer; merges fall
+    back to an amortized wholesale rebuild."""
+    keys = np.arange(0, 2000, 2, dtype=np.int32)
+    idx = build_index(keys, config=IndexConfig(
+        kind=kind, mutable=True, delta_capacity=16, levels=2, node_width=8))
+    ref = {int(k): i for i, k in enumerate(keys.tolist())}
+    rng = np.random.default_rng(6)
+    for _ in range(3):
+        nk = rng.integers(0, 3000, 20).astype(np.int32)
+        nv = rng.integers(0, 3000, 20).astype(np.int32)
+        idx.insert(nk, nv)
+        ref.update(zip(nk.tolist(), nv.tolist()))
+    assert idx.stats["base_rebuilds"] >= 1
+    check_oracle(idx, ref, np.arange(0, 3000, 7, dtype=np.int32))
+
+
+def test_mutable_index_float32():
+    rng = np.random.default_rng(7)
+    keys = np.unique(rng.normal(size=600).astype(np.float32))
+    idx = build_index(keys, config=IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=32, leaf_width=128))
+    idx.insert(np.float32(123.25), np.int32(9))
+    res = idx.lookup(np.array([keys[5], 123.25, -1e9], np.float32))
+    assert np.asarray(res.found).tolist() == [True, True, False]
+    assert int(np.asarray(res.values)[1]) == 9
+
+
+def test_mutable_index_initial_dup_keys_last_wins():
+    keys = np.array([5, 1, 5, 3, 1], np.int32)
+    vals = np.array([10, 11, 12, 13, 14], np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", mutable=True))
+    res = idx.lookup(np.array([1, 3, 5], np.int32))
+    assert np.asarray(res.found).all()
+    np.testing.assert_array_equal(np.asarray(res.values), [14, 13, 12])
+
+
+def test_mutable_config_validation():
+    with pytest.raises(ValueError, match="delta_capacity"):
+        IndexConfig(kind="tiered", mutable=True, delta_capacity=0)
+    with pytest.raises(ValueError, match="plan"):
+        IndexConfig(kind="tiered", mutable=True, plan="bogus")
+    # the fused base+delta lookup is device-plan only; host-plan stats
+    # require the non-mutable engine — accept-and-ignore would be worse
+    with pytest.raises(ValueError, match="device plan only"):
+        build_index(np.arange(10, dtype=np.int32),
+                    config=IndexConfig(kind="tiered", mutable=True,
+                                       plan="host"))
+
+
+def test_paged_base_fill_leaves_gap_slots():
+    keys = np.arange(1000, dtype=np.int32)
+    base = _PagedBase(keys, np.arange(1000, dtype=np.int32), leaf_width=128)
+    per = int(128 * MERGE_FILL)
+    assert base.num_pages == -(-1000 // per)
+    assert (base.cnt[:-1] == per).all()        # packed at the fill target
+    assert base.n == 1000

@@ -228,6 +228,24 @@ def test_device_plan_does_not_eat_caller_buffer():
     np.testing.assert_array_equal(np.asarray(q), np.arange(256))
 
 
+def test_donation_off_for_non_int32_keys_skips_copy():
+    """float32 keys build the fused pipeline without donation (the int32
+    rank output cannot alias a float buffer); tiered.search must then skip
+    the defensive copy and still leave the caller's buffer intact."""
+    keys = np.linspace(0.0, 1.0, 4096, dtype=np.float32)
+    idx = build_index(keys, config=IndexConfig(kind="tiered")).impl
+    assert idx.donate is False
+    int_idx = build_index(np.arange(64, dtype=np.int32),
+                          config=IndexConfig(kind="tiered")).impl
+    assert int_idx.donate is True
+    q = jnp.asarray(np.linspace(-0.1, 1.1, 256, dtype=np.float32))
+    first = np.asarray(tiered.search(idx, q))
+    second = np.asarray(tiered.search(idx, q))     # q must still be live
+    np.testing.assert_array_equal(first, second)
+    np.testing.assert_array_equal(np.asarray(q),
+                                  np.linspace(-0.1, 1.1, 256, dtype=np.float32))
+
+
 def test_tiered_rejects_unknown_top():
     # must raise even when the key set is small enough for the trivial top
     with pytest.raises(ValueError, match="unknown top tier"):

@@ -9,7 +9,8 @@ from repro.configs import get_config
 from repro.core import IndexConfig
 from repro.models import transformer as T
 from repro.serve import ServeEngine, SamplerConfig, sample
-from repro.serve.kv_cache import PrefixPageStore, chain_hashes
+from repro.serve.kv_cache import (PrefixPageStore, chain_hashes,
+                                  chain_hashes_ref)
 
 
 def _tiny_engine(arch="qwen3-0.6b", **kw):
@@ -24,6 +25,74 @@ def test_chain_hash_prefix_property():
     h1, h2 = chain_hashes(t1, 8), chain_hashes(t2, 8)
     np.testing.assert_array_equal(h1[:3], h2[:3])   # shared 24-token prefix
     assert h1[3] != h2[3]
+
+
+def test_chain_hash_vectorized_matches_scalar_reference():
+    """The page-scan form must be bit-identical to the per-token loop,
+    including empty, partial-page, negative and >32-bit tokens."""
+    rng = np.random.default_rng(0)
+    for page in (1, 4, 8, 16):
+        for n in (0, 1, 7, 33, 128):
+            toks = rng.integers(-2**40, 2**40, n)
+            np.testing.assert_array_equal(chain_hashes(toks, page),
+                                          chain_hashes_ref(toks, page))
+
+
+def test_prefix_store_forced_collision_truncates_at_verify():
+    """Two different token sequences with identical chained hashes: the
+    tokens differ by 2^31 in the first page, which the 31-bit polynomial
+    mix cannot see. lookup must reject via token verification and truncate
+    at the first mismatched page — even though later pages' hashes (chained
+    off the colliding state) all 'hit'."""
+    ps = 1
+    store = PrefixPageStore(ps, IndexConfig(kind="binary"))
+    stored = np.array([5, 6, 7], np.int64)
+    probe = np.array([5 + 2**31, 6, 7], np.int64)   # page-0 hash collides
+    np.testing.assert_array_equal(chain_hashes(stored, ps),
+                                  chain_hashes(probe, ps))
+    store.insert(stored, [{"pay": i} for i in range(3)])
+    n, payloads = store.lookup(probe)
+    # ...but verification rejects page 0 and truncation is total
+    assert n == 0 and payloads == []
+    assert store.stats["verify_rejects"] == 1
+    # the store still serves the genuine sequence in full
+    n2, p2 = store.lookup(stored)
+    assert n2 == 3 and [p["pay"] for p in p2] == [0, 1, 2]
+    assert store.stats["verify_rejects"] == 1
+
+
+def test_chain_hash_sentinel_domain_clamped():
+    """A page whose raw mix lands on 2^31-1 (the int32 index sentinel) must
+    clamp to 2^31-2 — hashes stay strictly inside the key domain, so the
+    mutable store's insert path cannot be crashed by unlucky tokens."""
+    from repro.serve.kv_cache import _ADD, _MASK31, _MULT, _SEED
+    t = (_MASK31 - (_SEED * _MULT + _ADD)) % (1 << 31)
+    assert (np.int64(_SEED) * _MULT + t + _ADD) & _MASK31 == _MASK31  # premise
+    toks = np.array([t], np.int64)
+    h = chain_hashes(toks, 1)
+    assert int(h[0]) == _MASK31 - 1
+    np.testing.assert_array_equal(h, chain_hashes_ref(toks, 1))
+    store = PrefixPageStore(1)                       # mutable default
+    store.insert(toks, [{"pay": 0}])
+    n, payloads = store.lookup(toks)
+    assert n == 1 and payloads[0]["pay"] == 0
+
+
+def test_prefix_store_mutable_default_no_wholesale_rebuilds():
+    """The default store takes the delta path: inserts never mark the
+    snapshot dirty and rebuild_index is never invoked."""
+    store = PrefixPageStore(8)
+    assert store.index_config.mutable
+    rng = np.random.default_rng(1)
+    for i in range(6):
+        toks = rng.integers(0, 1000, 32)
+        store.insert(toks, [{"i": (i, j)} for j in range(4)])
+        store.lookup(toks)
+    assert store.stats["rebuilds"] == 0
+    assert store.index_stats["inserts"] == len(store.hashes)
+    toks = rng.integers(0, 1000, 32)
+    n, _ = store.lookup(toks)
+    assert n == 0                                    # unknown prefix: miss
 
 
 def test_prefix_store_hit_and_verify():

@@ -7,7 +7,21 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
 from hypothesis import given, settings, strategies as st
 
 from repro.core import IndexConfig
-from repro.serve.kv_cache import PrefixPageStore, chain_hashes
+from repro.serve.kv_cache import (PrefixPageStore, chain_hashes,
+                                  chain_hashes_ref)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    tokens=st.lists(st.integers(-2**45, 2**45), min_size=0, max_size=80),
+    page=st.sampled_from([1, 3, 8, 16]),
+)
+def test_chain_hash_vectorized_matches_scalar(tokens, page):
+    """The numpy page-scan form of chain_hashes is bit-identical to the
+    scalar per-token reference for arbitrary int64 token streams."""
+    t = np.array(tokens, np.int64)
+    np.testing.assert_array_equal(chain_hashes(t, page),
+                                  chain_hashes_ref(t, page))
 
 
 @settings(max_examples=20, deadline=None)
