@@ -1,0 +1,343 @@
+"""Micro-batch scheduler benchmark (ours, DESIGN.md §7) + device-plan
+construction crossover (DESIGN.md §2.1).
+
+Two parts, both written into ``BENCH_queue.json``:
+
+**Part A — queued vs unqueued serving.** An open-loop arrival stream of
+point-lookup requests (8 probes each, the prefix-store shape) at offered
+concurrency c — requests arrive every ``unqueued_service / c`` seconds —
+is served two ways on a *virtual clock* (arrivals and deadlines advance
+simulated time; every dispatch is real and timed by wall clock, so the
+numbers are reproducible without thread races):
+
+* ``unqueued`` — the old posture: one fused dispatch per request, FIFO.
+* ``queued``  — the real ``engine.queue.MicroBatchQueue`` (injected clock,
+  timer off) under a flush policy: ``deadline`` (wait up to 4 service
+  times, then flush whatever arrived), ``capacity`` (flush at 32 pending
+  queries), or ``hybrid`` (both triggers + occupancy-adaptive threshold).
+
+Reported per cell: throughput, p50/p99 request latency, mean executed-plan
+occupancy (the queue's from its own feedback; the baseline's from the same
+device scalar after each dispatch) and mean flush depth. The aggregation
+tradeoff shows up exactly as DESIGN.md §7 predicts: occupancy and
+throughput rise with queueing, p50 pays the deadline at low load.
+
+**Part B — plan construction, sort vs histogram.** ``schedule.device_plan``
+is timed standalone (jitted, plan arrays materialized) for both
+constructions over Q x num_pages, with bit-identical outputs asserted on
+every cell and the static selection (``schedule.plan_method``) recorded.
+
+``--smoke`` runs the small sweep and asserts the CI gates (queue-smoke):
+(a) queued occupancy strictly above unqueued at offered concurrency <= 4
+with throughput no worse (and strictly better once the unqueued server
+saturates, c >= 2); (b) histogram construction no slower than the packed
+sort on every cell where it is selected, and strictly faster on at least
+one selected deep-batch cell.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_queue [--smoke] [--out F]``
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from repro.engine import schedule
+from repro.engine.queue import MicroBatchQueue, index_probe_fn
+from ._timing import emit, time_fn, zipf_queries
+
+REQ_QUERIES = 8                 # point lookups per request (prefix-probe shape)
+N_REQUESTS = 96                 # requests per simulated cell
+STORE_N = 2**14                 # 128-page mutable tiered store
+
+
+# --------------------------------------------------------------- workload
+def _make_store(n=STORE_N, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(0, 2**30, int(n * 1.2)
+                                  ).astype(np.int32))[:n]
+    vals = np.arange(keys.size, dtype=np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", mutable=True))
+    idx.flush()                   # fold into leaf pages: plan feedback exists
+    return keys, idx
+
+
+def _requests(keys, seed=1):
+    """Half Zipf-distributed hits (thesis §5.2.1 — skewed re-reference is
+    what makes cross-request buckets deepen), half uniform misses."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(N_REQUESTS):
+        hits = zipf_queries(keys, REQ_QUERIES // 2, seed=seed + i)
+        misses = rng.integers(0, 2**30, REQ_QUERIES - REQ_QUERIES // 2
+                              ).astype(np.int32)
+        out.append(np.concatenate([hits, misses]))
+    return out
+
+
+def _pop_occ(idx):
+    thunk = idx.pop_plan_feedback()
+    return float(thunk()) if thunk is not None else 0.0
+
+
+# ------------------------------------------------------------- simulation
+def _sim_unqueued(idx, reqs, inter_arrival):
+    """FIFO single server, one fused dispatch per request."""
+    t_busy, lat, occ = 0.0, [], []
+    for i, r in enumerate(reqs):
+        t_arr = i * inter_arrival
+        t0 = max(t_arr, t_busy)
+        w0 = time.perf_counter()
+        res = idx.lookup(r)
+        jax.block_until_ready((res.found, res.values))
+        wall = time.perf_counter() - w0
+        occ.append(_pop_occ(idx))
+        t_busy = t0 + wall
+        lat.append(t_busy - t_arr)
+    return lat, occ, t_busy, [1] * len(reqs)
+
+
+def _sim_queued(idx, reqs, inter_arrival, policy):
+    """The real MicroBatchQueue on a virtual clock: arrivals/deadlines are
+    simulated time, dispatches are real wall time."""
+    clock = {"t": 0.0}
+    walls = []
+
+    def probe(q):
+        w0 = time.perf_counter()
+        res, thunk = index_probe_fn(idx)(q)
+        jax.block_until_ready((res.found, res.values))
+        walls.append((time.perf_counter() - w0, int(q.shape[0])))
+        return res, thunk
+
+    s_u = inter_arrival          # deadline scale: the offered request gap
+    kw = dict(now_fn=lambda: clock["t"], timer=False, capacity=4096)
+    if policy == "deadline":
+        q = MicroBatchQueue(probe, deadline_s=4 * s_u, min_flush=4096,
+                            adapt=False, **kw)
+    elif policy == "capacity":
+        q = MicroBatchQueue(probe, deadline_s=1e9, min_flush=32,
+                            adapt=False, **kw)
+    else:                        # hybrid: both triggers + adaptation
+        q = MicroBatchQueue(probe, deadline_s=4 * s_u, min_flush=16,
+                            adapt=True, occupancy_target=0.25, **kw)
+
+    t_busy = 0.0
+    completions = []             # virtual completion time per request, in order
+    flushed_reqs = 0
+
+    def account_flushes(submitted):
+        # a flush always drains every pending submit, so the requests it
+        # served are exactly those submitted but not yet flushed
+        nonlocal t_busy, flushed_reqs
+        while walls:
+            wall, _batch_q = walls.pop(0)
+            n_req = submitted - flushed_reqs
+            start = max(clock["t"], t_busy)
+            t_busy = start + wall
+            completions.extend([t_busy] * n_req)
+            flushed_reqs += n_req
+
+    i = 0
+    while flushed_reqs < len(reqs):
+        t_next_arr = i * inter_arrival if i < len(reqs) else float("inf")
+        t_deadline = (q._oldest_t + q.deadline_s) if q._oldest_t is not None \
+            else float("inf")
+        if t_next_arr == float("inf"):
+            # stream over: blocked callers demand their results — the real
+            # queue's flush-on-result path, not a deadline wait
+            clock["t"] = max(clock["t"], t_busy)
+            q.flush(reason="demand")
+            account_flushes(i)
+            continue
+        if t_next_arr <= t_deadline:
+            clock["t"] = max(clock["t"], t_next_arr)
+            q.submit(reqs[i])    # may capacity-flush inline
+            i += 1
+        else:
+            clock["t"] = max(clock["t"], t_deadline)
+            q.poll()             # deadline flush under the virtual clock
+        account_flushes(i)
+    q.drain_feedback()
+    lat = [c - k * inter_arrival for k, c in enumerate(completions)]
+    st = q.stats
+    mean_depth = st.queries / st.flushes if st.flushes else 0.0
+    return lat, st.mean_occupancy, max(completions), st.flushes, mean_depth
+
+
+def run_serving(concurrencies, policies, out_rows):
+    keys, idx = _make_store()
+    reqs = _requests(keys)
+    # warm every pow2 flush shape the sim can produce (compile outside timing)
+    b = REQ_QUERIES
+    while b <= 1024:
+        jax.block_until_ready(idx.lookup(keys[:b]).found)
+        b *= 2
+    s_u = time_fn(lambda r: idx.lookup(r).found, reqs[0]) * 1e-6
+    trend = {}
+    for c in concurrencies:
+        inter = s_u / c
+        lat_u, occ_u, makespan_u, _ = _sim_unqueued(idx, reqs, inter)
+        row_u = {
+            "part": "serving", "policy": "unqueued", "concurrency": c,
+            "requests": len(reqs), "req_queries": REQ_QUERIES,
+            "throughput_rps": round(len(reqs) / makespan_u, 1),
+            "p50_ms": round(float(np.percentile(lat_u, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat_u, 99)) * 1e3, 3),
+            "mean_occupancy": round(float(np.mean(occ_u)), 4),
+            "mean_flush_depth_reqs": 1.0, "flushes": len(reqs),
+        }
+        out_rows.append(row_u)
+        emit(f"queue/serving/unqueued/c{c}", makespan_u * 1e6 / len(reqs),
+             f"rps={row_u['throughput_rps']};occ={row_u['mean_occupancy']}")
+        trend[(c, "unqueued")] = row_u
+        for policy in policies:
+            lat_q, occ_q, makespan_q, flushes, depth = _sim_queued(
+                idx, reqs, inter, policy)
+            row_q = {
+                "part": "serving", "policy": policy, "concurrency": c,
+                "requests": len(reqs), "req_queries": REQ_QUERIES,
+                "throughput_rps": round(len(reqs) / makespan_q, 1),
+                "p50_ms": round(float(np.percentile(lat_q, 50)) * 1e3, 3),
+                "p99_ms": round(float(np.percentile(lat_q, 99)) * 1e3, 3),
+                "mean_occupancy": round(float(occ_q), 4),
+                "mean_flush_depth_reqs": round(depth / REQ_QUERIES, 2),
+                "flushes": flushes,
+            }
+            out_rows.append(row_q)
+            emit(f"queue/serving/{policy}/c{c}",
+                 makespan_q * 1e6 / len(reqs),
+                 f"rps={row_q['throughput_rps']};occ={row_q['mean_occupancy']};"
+                 f"depth={row_q['mean_flush_depth_reqs']}")
+            trend[(c, policy)] = row_q
+    return trend
+
+
+# ------------------------------------------------------------ plan sweep
+def run_plans(q_sizes, page_counts, out_rows, tile=128):
+    trend = {}
+    rng = np.random.default_rng(7)
+    for q_n in q_sizes:
+        for P in page_counts:
+            page_of = jnp.asarray(rng.integers(0, P, q_n).astype(np.int32))
+            grid = schedule.ladder_grid(q_n, tile, P)
+            fns = {m: jax.jit(functools.partial(
+                       schedule.device_plan, tile=tile, grid=grid,
+                       num_pages=P, method=m))
+                   for m in schedule.PLAN_METHODS}
+            plans = {m: fn(page_of) for m, fn in fns.items()}
+            for f in schedule.DevicePlan._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(plans["sort"], f)),
+                    np.asarray(getattr(plans["histogram"], f)),
+                    err_msg=f"plan mismatch Q={q_n} P={P} field={f}")
+            us = {m: time_fn(fn, page_of) for m, fn in fns.items()}
+            selected = schedule.plan_method(q_n, P)
+            row = {
+                "part": "plan", "q": int(q_n), "num_pages": int(P),
+                "tile": tile, "sort_us": round(us["sort"], 1),
+                "histogram_us": round(us["histogram"], 1),
+                "speedup": round(us["sort"] / us["histogram"], 2),
+                "selected": selected,
+            }
+            out_rows.append(row)
+            emit(f"queue/plan/q{q_n}/p{P}", us[selected],
+                 f"sort={us['sort']:.0f}us;hist={us['histogram']:.0f}us;"
+                 f"sel={selected}")
+            trend[(q_n, P)] = row
+    return trend
+
+
+# ------------------------------------------------------------------ gates
+def _assert_serving_trend(trend, concurrencies, policy):
+    """CI gate (a): queued occupancy strictly above unqueued at c <= 4 with
+    throughput no worse; strictly better throughput once the unqueued
+    server is saturated (c >= 2)."""
+    for c in concurrencies:
+        u, q = trend[(c, "unqueued")], trend[(c, policy)]
+        occ_ok = q["mean_occupancy"] > u["mean_occupancy"]
+        tp_ok = q["throughput_rps"] >= u["throughput_rps"] * 0.95
+        strict = q["throughput_rps"] > u["throughput_rps"]
+        verdict = "ok" if (occ_ok and tp_ok and (c < 2 or strict)) \
+            else "REGRESSION"
+        print(f"# trend serving c={c} [{policy}]: "
+              f"occ {u['mean_occupancy']} -> {q['mean_occupancy']}, "
+              f"rps {u['throughput_rps']} -> {q['throughput_rps']} "
+              f"({verdict})")
+        if c <= 4:
+            assert occ_ok, (
+                f"queued occupancy not above unqueued at c={c}: "
+                f"{q['mean_occupancy']} vs {u['mean_occupancy']}")
+        assert tp_ok, (
+            f"queued throughput worse than unqueued at c={c}: "
+            f"{q['throughput_rps']} vs {u['throughput_rps']}")
+        if c >= 2:
+            assert strict, (
+                f"queued throughput does not beat saturated unqueued at "
+                f"c={c}: {q['throughput_rps']} vs {u['throughput_rps']}")
+
+
+def _assert_plan_trend(trend):
+    """CI gate (b): histogram no slower than the packed sort wherever the
+    static selection picks it (5% noise floor), and strictly faster on at
+    least one selected cell."""
+    any_strict = False
+    for (q_n, P), row in trend.items():
+        if row["selected"] != "histogram":
+            continue
+        ok = row["histogram_us"] <= row["sort_us"] * 1.05
+        any_strict |= row["histogram_us"] < row["sort_us"]
+        print(f"# trend plan q={q_n} p={P}: sort={row['sort_us']}us "
+              f"hist={row['histogram_us']}us "
+              f"({'ok' if ok else 'REGRESSION'})")
+        assert ok, (
+            f"histogram plan slower than sort where selected "
+            f"(Q={q_n}, P={P}): {row['histogram_us']}us vs "
+            f"{row['sort_us']}us")
+    assert any_strict, "histogram never strictly beat the sort where selected"
+
+
+def run(concurrencies, policies, q_sizes, page_counts, out,
+        assert_trend=False):
+    rows = []
+    serving_trend = run_serving(concurrencies, policies, rows)
+    plan_trend = run_plans(q_sizes, page_counts, rows)
+    payload = {"backend": jax.default_backend(),
+               "interpret_kernels": jax.default_backend() == "cpu",
+               "store_n": STORE_N, "req_queries": REQ_QUERIES,
+               "results": rows}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out} ({len(rows)} rows)")
+    if assert_trend:
+        _assert_serving_trend(serving_trend, concurrencies,
+                              policy=policies[0])
+        _assert_plan_trend(plan_trend)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep + the queue-smoke CI gates")
+    ap.add_argument("--out", default="BENCH_queue.json")
+    args = ap.parse_args()
+    if args.smoke:
+        run(concurrencies=(1, 2, 4), policies=("deadline", "hybrid"),
+            q_sizes=(8192,), page_counts=(4, 16, 32, 128),
+            out=args.out, assert_trend=True)
+        return
+    run(concurrencies=(1, 2, 4, 8, 16),
+        policies=("deadline", "capacity", "hybrid"),
+        q_sizes=(1024, 4096, 8192), page_counts=(4, 16, 32, 64, 128),
+        out=args.out, assert_trend=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import sorted_array, css_tree, kary, fast_tree, nitrogen
@@ -35,6 +36,12 @@ class IndexConfig:
     plan: str = "device"         # tiered: schedule placement ('device'|'host')
     mutable: bool = False        # delta-merge write path (engine/store.py)
     delta_capacity: int = 1024   # mutable: delta buffer size (rounded to pow2)
+    # micro-batch queue knobs (engine/queue.py, DESIGN.md §7) — consumed by
+    # queue clients such as serve.kv_cache.PrefixPageStore.probe_queue
+    queue_capacity: int = 4096   # hard flush trigger (pending queries)
+    queue_deadline_s: float = 0.002  # max time a submit may wait in-queue
+    queue_min_flush: int = 64    # floor of the adaptive flush threshold
+    queue_adapt: bool = True     # occupancy feedback steers the threshold
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -45,6 +52,12 @@ class IndexConfig:
         if self.mutable and self.delta_capacity <= 0:
             raise ValueError(
                 f"delta_capacity must be positive, got {self.delta_capacity}")
+        if self.queue_capacity <= 0:
+            raise ValueError(
+                f"queue_capacity must be positive, got {self.queue_capacity}")
+        if self.queue_deadline_s < 0:
+            raise ValueError(
+                f"queue_deadline_s must be >= 0, got {self.queue_deadline_s}")
 
 
 @dataclass(frozen=True)
@@ -52,6 +65,14 @@ class LookupResult:
     rank: jnp.ndarray            # searchsorted-left rank, [Q]
     found: jnp.ndarray           # bool [Q]
     values: Optional[jnp.ndarray]  # payload for hits (arbitrary for misses)
+
+
+# a pytree, so results flow through jit boundaries and the micro-batch
+# queue's per-caller slicing (engine/queue.py) without special-casing
+jax.tree_util.register_pytree_node(
+    LookupResult,
+    lambda r: ((r.rank, r.found, r.values), None),
+    lambda _, leaves: LookupResult(*leaves))
 
 
 @dataclass(frozen=True)

@@ -5,9 +5,11 @@
 # (bucket_plan, numpy) and a device-resident twin (device_plan, jnp) that
 # keeps the whole search a single jitted dispatch.
 from .schedule import (BucketPlan, DevicePlan, bucket_plan,  # noqa: F401
-                       device_plan, ladder_grid, ladder_rungs, lane_arrays,
-                       run_scheduled, select_rung, worst_case_steps)
+                       device_plan, executed_occupancy, ladder_grid,
+                       ladder_rungs, lane_arrays, plan_method, run_scheduled,
+                       select_rung, worst_case_steps)
 from .tiered import TieredIndex, build, plan_tiers, search, searcher  # noqa: F401
 from .delta import DeltaBuffer  # noqa: F401
 from .store import MutableIndex  # noqa: F401
+from .queue import MicroBatchQueue, QueueFuture, QueueStats, index_probe_fn  # noqa: F401
 from . import sharded  # noqa: F401

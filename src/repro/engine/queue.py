@@ -1,0 +1,340 @@
+"""Cross-request micro-batch scheduler (DESIGN.md §7).
+
+The batch-oriented structures in this repo only pay off when batches are
+deep: the sort-and-bucket schedule's occupancy (DESIGN.md §2.1) collapses
+at low per-request concurrency — a single request's handful of point
+lookups launches a near-empty grid step. This module is the scale lever in
+front of the tiered engine: an **aggregation queue** that accumulates point
+lookups across serving requests and feeds them to the zero-host-sync fused
+dispatch as one deep batch — the batch-aggregation move of BS-tree
+(arXiv 2505.01180) and the FPGA level-wise batch paper (arXiv 2604.21117),
+applied across requests instead of within one.
+
+Mechanics:
+
+* ``submit(queries)`` enqueues one caller's point lookups and returns a
+  :class:`QueueFuture`; callers never see each other — each future resolves
+  to exactly its own results, in its own submitted order (the fused
+  pipeline un-permutes internally, so slicing the concatenated result by
+  arrival offsets restores per-caller request order).
+* A flush — ONE fused dispatch for everything pending — triggers on
+  **capacity** (pending queries reach the adaptive ``flush_at`` threshold,
+  or the hard ``capacity``), on **deadline** (the oldest pending submit has
+  waited ``deadline_s``; a daemon timer guards callers that never block),
+  or on **demand** (a caller blocks on ``result()`` — single-threaded
+  clients flush immediately instead of eating the deadline).
+* **Occupancy feedback**: the executed plan's step count rides back out of
+  the fused dispatch (``engine/store.py``) as a lazily-resolved thunk.
+  Thunks resolve (one device-scalar read each) at the start of the *next*
+  flush — when the prior dispatch has retired, or sits ahead of ours on
+  the device stream anyway — never in ``submit``, so enqueueing a request
+  cannot stall on device execution. Low executed occupancy means buckets
+  were shallow — the queue raises ``flush_at`` (wait for deeper batches);
+  occupancy at or above target halves it back toward ``min_flush`` (don't
+  add latency the schedule can't use).
+
+The queue holds *queries*, not result copies: results stay device-resident
+pytree slices, and a flush adds no host↔device sync beyond what the
+wrapped ``search_fn`` itself does (transfer-guard tested).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .schedule import _next_pow2
+
+
+@dataclass
+class QueueStats:
+    """Counters + executed-plan occupancy aggregate (mean over flushes that
+    reported feedback). ``flush_at`` mirrors the current adaptive
+    threshold so callers can watch the steering."""
+    submits: int = 0
+    queries: int = 0
+    flushes: int = 0
+    capacity_flushes: int = 0
+    deadline_flushes: int = 0
+    demand_flushes: int = 0
+    manual_flushes: int = 0
+    max_batch: int = 0
+    occ_sum: float = 0.0
+    occ_n: int = 0
+    flush_at: int = 0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occ_sum / self.occ_n if self.occ_n else 0.0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.queries / self.flushes if self.flushes else 0.0
+
+
+class QueueFuture:
+    """Result handle for one ``submit``. ``result()`` flushes the queue on
+    demand if the batch has not gone out yet (so a lone synchronous caller
+    pays one dispatch, not one deadline).
+
+    Resolution stores the *shared* flush result plus this caller's slice
+    bounds; the per-caller slice is taken lazily on first ``result()`` —
+    slicing a device array stages a device op, and doing it at consumption
+    time keeps the flush itself free of anything but the fused dispatch
+    (the transfer-guard contract)."""
+
+    def __init__(self, queue: "MicroBatchQueue"):
+        self._queue = queue
+        self._event = threading.Event()
+        self._raw: Any = None
+        self._bounds: Optional[tuple] = None
+        self._value: Any = None
+        self._sliced = False
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def _resolve(self, shared_result: Any, lo: int, hi: int):
+        self._raw = shared_result
+        self._bounds = (lo, hi)
+        self._event.set()
+
+    def _reject(self, err: BaseException):
+        self._error = err
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.is_set():
+            self._queue.flush(reason="demand")
+        if not self._event.wait(timeout):
+            raise TimeoutError("micro-batch result not ready")
+        if self._error is not None:
+            raise self._error
+        if not self._sliced:
+            lo, hi = self._bounds
+            self._value = jax.tree.map(lambda leaf: leaf[lo:hi], self._raw)
+            self._raw = None                  # drop the shared batch ref
+            self._sliced = True
+        return self._value
+
+
+class MicroBatchQueue:
+    """Deadline/capacity micro-batcher over a batched ``search_fn``.
+
+    ``search_fn(queries) -> (result, occupancy_thunk)`` — one fused
+    dispatch over the whole batch; ``result`` is any pytree whose leaves
+    have the batch as their leading axis (ranks, a LookupResult, ...);
+    ``occupancy_thunk`` is a zero-arg callable yielding the executed plan's
+    lane occupancy (or None when the engine has no feedback to give).
+    ``MutableIndex.lookup`` + ``pop_plan_feedback`` is the canonical
+    pairing — see :func:`index_probe_fn`.
+
+    ``flush_at`` (the adaptive capacity trigger) starts at ``min_flush``
+    and is steered within [min_flush, capacity] by occupancy feedback;
+    ``capacity`` is the hard trigger. A single submit larger than capacity
+    is legal — it flushes immediately as one deep batch (aggregation never
+    splits a caller). ``now_fn``/``timer`` exist for deterministic tests
+    and the virtual-clock benchmark (``benchmarks/bench_queue.py``).
+
+    Flushed batches are padded to the next power of two (``pad_pow2``) with
+    zero-queries whose lanes no caller slice ever reads: flush sizes are
+    data-dependent, and without the ladder every distinct size would
+    re-trace the fused dispatch — the same O(log Q) shape-family argument
+    as the schedule's grid ladder (DESIGN.md §2.1).
+    """
+
+    def __init__(self, search_fn: Callable, *, capacity: int = 4096,
+                 deadline_s: float = 0.002, min_flush: int = 64,
+                 adapt: bool = True, occupancy_target: float = 0.5,
+                 pad_pow2: bool = True,
+                 now_fn: Callable[[], float] = time.monotonic,
+                 timer: bool = True):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        if deadline_s < 0:
+            raise ValueError(f"deadline must be >= 0, got {deadline_s}")
+        self._search_fn = search_fn
+        self.capacity = int(capacity)
+        self.pad_pow2 = bool(pad_pow2)
+        self.deadline_s = float(deadline_s)
+        self.min_flush = max(1, min(int(min_flush), self.capacity))
+        self.adapt = bool(adapt)
+        self.occupancy_target = float(occupancy_target)
+        self.flush_at = self.min_flush
+        self._now = now_fn
+        self._use_timer = bool(timer)
+        self._lock = threading.RLock()
+        self._pending: list = []          # (queries, q_n, future) arrival order
+        self._pending_queries = 0
+        self._oldest_t: Optional[float] = None
+        self._timer: Optional[threading.Timer] = None
+        self._feedback: list = []         # unresolved occupancy thunks
+        self._dtype = np.dtype(np.int32)  # for the all-empty flush
+        self.stats = QueueStats(flush_at=self.flush_at)
+
+    # ------------------------------------------------------------- enqueue
+    def submit(self, queries) -> QueueFuture:
+        """Enqueue one caller's point lookups; returns a future for exactly
+        those results in the caller's order. May flush inline (capacity).
+        Never blocks on the device: feedback resolution happens at the next
+        flush (whose dispatch waits on the device anyway), not here."""
+        if not isinstance(queries, jax.Array):
+            queries = np.asarray(queries)
+        q_n = int(queries.shape[0])
+        fut = QueueFuture(self)
+        with self._lock:
+            if q_n:
+                self._dtype = np.dtype(queries.dtype)
+            self._pending.append((queries, q_n, fut))
+            self._pending_queries += q_n
+            if self._oldest_t is None:
+                self._oldest_t = self._now()
+            self.stats.submits += 1
+            self.stats.queries += q_n
+            if self._pending_queries >= min(self.flush_at, self.capacity):
+                self._flush_locked("capacity")
+            elif self._use_timer and self._timer is None:
+                self._arm_timer()
+        return fut
+
+    # -------------------------------------------------------------- flush
+    def flush(self, reason: str = "manual") -> int:
+        """Dispatch everything pending as ONE fused batch; returns the
+        number of queries dispatched (0 when nothing was pending)."""
+        with self._lock:
+            return self._flush_locked(reason)
+
+    def _flush_locked(self, reason: str) -> int:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        if not self._pending:
+            return 0
+        # resolve the previous flush's occupancy feedback now: its dispatch
+        # has retired (or is about to, ahead of ours on the device stream),
+        # so this never stalls an enqueueing caller the way draining in
+        # submit() would
+        self.drain_feedback()
+        batch, self._pending = self._pending, []
+        total, self._pending_queries = self._pending_queries, 0
+        self._oldest_t = None
+        self.stats.flushes += 1
+        self.stats.max_batch = max(self.stats.max_batch, total)
+        counter = f"{reason}_flushes"
+        if not hasattr(self.stats, counter):   # free-text reason: file under
+            counter = "manual_flushes"         # manual instead of raising
+        setattr(self.stats, counter, getattr(self.stats, counter) + 1)
+        try:
+            parts = [q for q, n, _ in batch if n]
+            pad = (_next_pow2(total) - total) if (self.pad_pow2 and total) \
+                else 0
+            if parts and any(isinstance(p, jax.Array) for p in parts):
+                if pad:                       # device-side pad: no transfer
+                    parts = parts + [jnp.zeros((pad,), parts[0].dtype)]
+                q = parts[0] if len(parts) == 1 else \
+                    jnp.concatenate([jnp.asarray(p) for p in parts])
+            elif parts:
+                if pad:
+                    parts = parts + [np.zeros((pad,), parts[0].dtype)]
+                q = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            else:                             # all-empty flush stays total
+                q = np.zeros((0,), self._dtype)
+            result, occ_thunk = self._search_fn(q)
+            if occ_thunk is not None:
+                # the engine saw the padded batch; scale its occupancy back
+                # to real queries so pad lanes never flatter the steering
+                self._feedback.append((occ_thunk, total, total + pad))
+            lo = 0
+            for _, n, fut in batch:
+                hi = lo + n
+                fut._resolve(result, lo, hi)
+                lo = hi
+        except BaseException as e:            # noqa: BLE001 — futures must not hang
+            for _, _, fut in batch:
+                fut._reject(e)
+            raise
+        return total
+
+    # ----------------------------------------------------------- deadline
+    def _arm_timer(self, delay: Optional[float] = None):
+        timer_box = []
+        timer = threading.Timer(max(delay or self.deadline_s, 1e-4),
+                                lambda: self._on_deadline(timer_box[0]))
+        timer_box.append(timer)
+        timer.daemon = True
+        self._timer = timer
+        timer.start()
+
+    def _on_deadline(self, me: threading.Timer):
+        with self._lock:
+            if self._timer is not me:
+                return                        # cancelled and superseded: a
+            self._timer = None                # newer timer owns the batch
+            if not self._pending:
+                return
+            age = self._now() - (self._oldest_t or 0.0)
+            if age + 1e-6 >= self.deadline_s:
+                self._flush_locked("deadline")
+            else:                             # raced a fresh batch: re-arm
+                self._arm_timer(self.deadline_s - age)
+
+    def poll(self) -> int:
+        """Timer-free deadline check (virtual-clock benchmarks / manual
+        drivers): flush iff the oldest pending submit has aged out."""
+        with self._lock:
+            if self._pending and \
+                    self._now() - self._oldest_t >= self.deadline_s:
+                return self._flush_locked("deadline")
+        return 0
+
+    # ----------------------------------------------------------- feedback
+    def drain_feedback(self):
+        """Resolve executed-plan occupancy thunks (one device-scalar read
+        each — called at the next flush, from stats readers, or explicitly;
+        never from submit, which must not block on the device) and steer
+        ``flush_at``: shallow buckets -> wait deeper; target met -> decay
+        back toward min_flush. Occupancy is scaled to *real* queries so the
+        pow2 pad lanes never flatter the signal."""
+        with self._lock:
+            pending, self._feedback = self._feedback, []
+        for thunk, real, dispatched in pending:
+            occ = float(thunk()) * (real / dispatched if dispatched else 0.0)
+            self.stats.occ_sum += occ
+            self.stats.occ_n += 1
+            if not self.adapt:
+                continue
+            if occ < self.occupancy_target:
+                self.flush_at = min(self.flush_at * 2, self.capacity)
+            else:
+                self.flush_at = max(self.flush_at // 2, self.min_flush)
+        self.stats.flush_at = self.flush_at
+
+    # -------------------------------------------------------------- admin
+    def close(self):
+        """Flush leftovers and cancel the deadline timer."""
+        self.flush(reason="manual")
+        with self._lock:
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
+        self.drain_feedback()
+
+
+def index_probe_fn(index) -> Callable:
+    """Adapt an index into the queue's ``search_fn`` contract: one fused
+    ``lookup`` dispatch returning (LookupResult, occupancy_thunk). Works
+    with ``engine.store.MutableIndex`` (full feedback via
+    ``pop_plan_feedback``) and any ``core.api.Index`` (no feedback)."""
+    pop = getattr(index, "pop_plan_feedback", None)
+
+    def probe(q):
+        res = index.lookup(q)
+        return res, (pop() if pop is not None else None)
+
+    return probe

@@ -15,14 +15,28 @@ The plan exists in two equivalent forms:
   ``page_search_bucketed`` Pallas call sees only O(log Q) distinct shapes
   per (n, batch-shape). Retained for stats/debug (``plan="host"``).
 * ``device_plan`` — the jnp twin, traceable inside ``jax.jit``: the same
-  stable argsort / run-boundary / cumsum construction, scattered into plan
-  arrays sized at the **static worst-case grid** ``ladder_grid(Q, tile, P)``
-  so the whole tiered search is one dispatch with zero host syncs
-  (``plan="device"``, the default). Surplus steps carry ``valid=False`` and
-  page 0, keeping the ``PrefetchScalarGridSpec`` index map total; the
-  actually-executed grid is chosen *on device* from the same power-of-two
-  ladder (``ladder_rungs`` + ``select_rung``), so the kernel never runs more
-  steps than the host plan would have.
+  grouping, scattered into plan arrays sized at the **static worst-case
+  grid** ``ladder_grid(Q, tile, P)`` so the whole tiered search is one
+  dispatch with zero host syncs (``plan="device"``, the default). Surplus
+  steps carry ``valid=False`` and page 0, keeping the
+  ``PrefetchScalarGridSpec`` index map total; the actually-executed grid is
+  chosen *on device* from the same power-of-two ladder (``ladder_rungs`` +
+  ``select_rung``), so the kernel never runs more steps than the host plan
+  would have.
+
+The device plan itself has two constructions producing bit-identical
+plans, chosen statically per (Q, num_pages) by :func:`plan_method`
+(DESIGN.md §2.1):
+
+* ``method="sort"`` — stable argsort by page id as one packed single-key
+  value sort (O(Q log Q); XLA's variadic key/value sort is several times
+  slower than its value sort, and the sort dominates the plan);
+* ``method="histogram"`` — a counting-sort plan: per-page histogram +
+  exclusive cumsum + lane scatter, O(Q + P) data movement realized as a
+  lane-parallel one-hot prefix scan. Selected when ``num_pages`` is small
+  relative to Q — exactly the deep micro-batched serving regime
+  (engine/queue.py) — where it beats the packed sort because no inverse
+  permutation and no comparison sort are needed at all.
 """
 from __future__ import annotations
 
@@ -63,16 +77,18 @@ class BucketPlan:
 class DevicePlan(NamedTuple):
     """Traced twin of :class:`BucketPlan` at a static grid (a pytree).
 
-    Carried in *sorted form* — one entry per query in page-sorted order —
-    rather than BucketPlan's lane form, because the lane arrays would cost
-    two extra [grid*tile] scatters per batch on the hot path and every
-    consumer only needs the query<->lane correspondence:
+    Carried in *request-order form* — one lane per query, indexed by the
+    request-order query index — rather than BucketPlan's lane form or the
+    sorted (order, dest) pair an argsort naturally yields. The lane arrays
+    would cost two extra [grid*tile] scatters per batch; the sorted pair
+    would cost the histogram construction an inverse-permutation scatter
+    (the single most expensive op it would have) and the executor an extra
+    gather + scatter. In request-order form every consumer needs exactly
+    one scatter in and one gather out:
 
-    order:      [Q] int32 — sorted position -> request-order query index
-                (the stable argsort by page id).
-    dest:       [Q] int32 — sorted position -> kernel lane, i.e.
-                step * tile + lane; strictly increasing, so dest doubles
-                as the valid-lane set (a lane is real iff it appears here).
+    dest:       [Q] int32 — request-order query index -> kernel lane, i.e.
+                step * tile + lane; a permutation into the valid-lane set
+                (all-distinct, so a lane is real iff it appears here).
     step_pages: [grid] int32 — as BucketPlan (padded steps: page 0).
     steps_used: [] int32 traced — un-padded grid size, used on device to
                 pick the executed ladder rung without a host round-trip.
@@ -80,8 +96,7 @@ class DevicePlan(NamedTuple):
     ``lane_arrays`` converts to BucketPlan's (gather, valid) lane form for
     stats and plan-equivalence tests.
     """
-    order: jnp.ndarray           # [Q] int32
-    dest: jnp.ndarray            # [Q] int32, strictly increasing
+    dest: jnp.ndarray            # [Q] int32, all-distinct lane per query
     step_pages: jnp.ndarray      # [grid] int32
     steps_used: jnp.ndarray      # [] int32
 
@@ -91,8 +106,9 @@ def lane_arrays(plan: DevicePlan, tile: int):
     BucketPlan form. Test/stats helper; the fused pipeline never builds
     these (it scatters queries straight into kernel lanes via ``dest``)."""
     lanes = plan.step_pages.shape[0] * tile
+    q_n = plan.dest.shape[0]
     gather = jnp.zeros((lanes,), jnp.int32).at[plan.dest].set(
-        plan.order, mode="drop", unique_indices=True)
+        jnp.arange(q_n, dtype=jnp.int32), mode="drop", unique_indices=True)
     valid = jnp.zeros((lanes,), bool).at[plan.dest].set(
         True, mode="drop", unique_indices=True)
     return gather, valid
@@ -141,30 +157,42 @@ def select_rung(steps_used, rungs: list[int]):
         len(rungs) - 1).astype(jnp.int32)
 
 
-def run_scheduled(plan: DevicePlan, q_sorted: jnp.ndarray, q_n: int,
+def executed_occupancy(q_n: int, steps_used: int, tile: int,
+                       num_pages: int) -> float:
+    """Lane occupancy of the rung the fused dispatch actually executed for
+    a Q-query batch whose plan used ``steps_used`` grid steps — the host
+    twin of ``select_rung`` over ``ladder_rungs``. This is the executed-plan
+    feedback signal the micro-batch queue (engine/queue.py) steers its
+    flush threshold with: Q real lanes out of rung * tile launched."""
+    if q_n <= 0:
+        return 0.0
+    g_cap = ladder_grid(q_n, tile, num_pages)
+    rungs = ladder_rungs(q_n, tile, g_cap)
+    rung = next((g for g in rungs if g >= steps_used), rungs[-1])
+    return q_n / float(rung * tile)
+
+
+def run_scheduled(plan: DevicePlan, q: jnp.ndarray, q_n: int,
                   tile: int, g_cap: int, body: Callable) -> jnp.ndarray:
     """Run a per-(step, lane) ``body`` over a DevicePlan at the ladder rung
     selected on device, returning request-order values.
 
     ``body(qb [g, tile], step_pages [g], g) -> [g, tile]`` — the bottom-tier
     compute (Pallas page kernel in the dense engine, jnp page compare in the
-    sharded engine). This helper owns the shared scaffolding: sorted queries
-    scatter straight into their kernel lanes (dest is unique/ascending;
+    sharded engine). This helper owns the shared scaffolding: request-order
+    queries scatter straight into their kernel lanes (dest is all-distinct;
     surplus lanes keep query 0 and are never read back), the executed rung
     is the smallest power of two holding the runtime step count
     (``lax.switch``; every valid lane lives in steps < steps_used <= rung,
     so each branch's prefix of the plan is complete), and each query reads
-    its lane's value back through the same (order, dest) pair — a
-    permutation scatter, no masking.
+    its lane's value back with one gather through the same ``dest`` — one
+    permutation scatter in, one gather out, no masking.
     """
     def run_rung(g: int):
-        qb = jnp.zeros((g * tile,), q_sorted.dtype).at[plan.dest].set(
-            q_sorted, mode="drop", unique_indices=True,
-            indices_are_sorted=True).reshape(g, tile)
+        qb = jnp.zeros((g * tile,), q.dtype).at[plan.dest].set(
+            q, mode="drop", unique_indices=True).reshape(g, tile)
         vals = body(qb, plan.step_pages[:g], g)
-        return jnp.zeros((q_n,), vals.dtype).at[plan.order].set(
-            jnp.take(vals.reshape(-1), plan.dest), mode="drop",
-            unique_indices=True)
+        return jnp.take(vals.reshape(-1), plan.dest, mode="clip")
 
     rungs = ladder_rungs(q_n, tile, g_cap)
     if len(rungs) == 1:
@@ -221,28 +249,52 @@ def bucket_plan(page_of: np.ndarray, tile: int) -> BucketPlan:
                       grid=G_pad, steps_used=G)
 
 
-def device_plan(page_of: jnp.ndarray, tile: int, grid: int,
-                num_pages: int | None = None) -> DevicePlan:
-    """jnp twin of :func:`bucket_plan`, traceable inside ``jax.jit``.
+# Static selection between the two device-plan constructions. The one-hot
+# prefix scan behind the histogram plan does Q*P lane-parallel adds, the
+# packed sort ~Q log Q comparisons with a far larger constant; measured on
+# the CPU backend (benchmarks/bench_queue.py sweeps it) the histogram wins
+# 1.2-1.9x once the batch is deep enough to amortize the scan (Q >= 4096)
+# and the page count small enough that Q*P stays near-linear. Thresholds
+# are deliberately conservative: every selected cell must beat the sort
+# (the queue-smoke CI gate), so borderline (Q, P) cells keep the sort. On
+# TPU the crossover should move sharply in the histogram's favor (XLA TPU
+# sorts are O(Q log^2 Q) wide passes) — re-measure on silicon (ROADMAP).
+HISTOGRAM_MAX_PAGES = 32          # never above this page count
+HISTOGRAM_MIN_QUERIES = 4096      # never below this batch depth
+HISTOGRAM_MIN_DEPTH = 128         # and require Q >= P * this
 
-    Same construction — stable argsort by page id, run boundaries via
-    neighbor compare, step assignment via a cumsum over tile starts — with
-    ``step_pages`` scattered at the **static** grid ``grid`` (use
-    :func:`ladder_grid`), so no shape depends on the data and the whole
-    schedule lives on device. An element opens a new grid step exactly when
-    its position within its run is a multiple of `tile`, so the step index
-    is the running count of tile starts — identical step numbering to the
-    host plan (runs in sorted-page order, deep runs spanning consecutive
-    steps).
+PLAN_METHODS = ("sort", "histogram")
+
+
+def plan_method(q_n: int, num_pages: int | None) -> str:
+    """Static (shape-derived) choice of device-plan construction for a
+    Q-query batch over ``num_pages`` pages: "histogram" when the page count
+    is small relative to a deep Q (the O(Q+P) counting-sort plan wins),
+    "sort" otherwise (including Q == 0 and unknown page counts)."""
+    if not q_n or num_pages is None:
+        return "sort"
+    if num_pages <= HISTOGRAM_MAX_PAGES and \
+            q_n >= HISTOGRAM_MIN_QUERIES and \
+            q_n >= num_pages * HISTOGRAM_MIN_DEPTH:
+        return "histogram"
+    return "sort"
+
+
+def _plan_sort(page_of: jnp.ndarray, tile: int, grid: int,
+               num_pages: int | None) -> DevicePlan:
+    """Packed-sort construction: stable argsort by page id, run boundaries
+    via neighbor compare, step assignment via a cumsum over tile starts.
+    An element opens a new grid step exactly when its position within its
+    run is a multiple of `tile`, so the step index is the running count of
+    tile starts — identical step numbering to the host plan (runs in
+    sorted-page order, deep runs spanning consecutive steps).
 
     When ``num_pages`` is given and ``num_pages * Q`` fits int32, the
     stable argsort is one *single-key* value sort of ``page * Q + index``
     (index < Q makes the packing order-isomorphic to stable-by-page) —
     XLA's variadic key/value sort is several times slower than its value
-    sort, and the sort dominates the plan.
-
-    ``grid`` must be >= ``worst_case_steps(Q, tile, num_pages)``; the
-    scatters use mode='drop' purely as an out-of-contract guard.
+    sort, and the sort dominates the plan. The request-order ``dest`` costs
+    one inverse-permutation scatter at the end.
     """
     q_n = page_of.shape[0]
     idx = jnp.arange(q_n, dtype=jnp.int32)
@@ -263,8 +315,72 @@ def device_plan(page_of: jnp.ndarray, tile: int, grid: int,
     slot = idx - run_start                               # position within run
     pos = slot % tile
     step = jnp.cumsum((pos == 0).astype(jnp.int32)) - 1  # count of tile starts
-    dest = step * tile + pos
+    dest = jnp.zeros((q_n,), jnp.int32).at[order].set(
+        step * tile + pos, mode="drop", unique_indices=True)
     step_pages = jnp.zeros((grid,), jnp.int32).at[step].set(sp, mode="drop")
     steps_used = step[-1] + 1 if q_n else jnp.zeros((), jnp.int32)
-    return DevicePlan(order=order, dest=dest, step_pages=step_pages,
-                      steps_used=steps_used)
+    return DevicePlan(dest=dest, step_pages=step_pages, steps_used=steps_used)
+
+
+def _plan_histogram(page_of: jnp.ndarray, tile: int, grid: int,
+                    num_pages: int) -> DevicePlan:
+    """Counting-sort construction, O(Q + P) data movement and no sort:
+    per-page histogram + exclusive cumsums + one lane scatter.
+
+    The within-page stable rank (position of query i among earlier queries
+    of the same page) comes from a prefix scan over the [Q, P] one-hot of
+    page ids — lane-parallel adds, the whole reason this beats the packed
+    sort at small P. Every plan quantity is then pure arithmetic in request
+    order: a page's lanes start at the cumsum of earlier pages' tile counts
+    (identical step numbering to the host plan — empty pages contribute
+    zero tiles, so counting pages equals counting runs), and each query's
+    lane is its within-page rank offset into them. No inverse permutation
+    exists anywhere — the request-order DevicePlan is the natural output.
+    """
+    q_n = page_of.shape[0]
+    p = page_of.astype(jnp.int32)
+    onehot = (p[:, None] == jnp.arange(num_pages, dtype=jnp.int32)[None, :]
+              ).astype(jnp.int32)
+    prefix = jax.lax.associative_scan(jnp.add, onehot, axis=0)   # [Q, P]
+    within = jnp.take_along_axis(prefix, p[:, None], axis=1)[:, 0] - 1
+    counts = prefix[-1]                                          # histogram
+    tiles_per_page = (counts + tile - 1) // tile
+    tile_off = jnp.cumsum(tiles_per_page) - tiles_per_page       # exclusive
+    step = jnp.take(tile_off, p) + within // tile
+    dest = step * tile + within % tile
+    step_pages = jnp.zeros((grid,), jnp.int32).at[step].set(p, mode="drop")
+    steps_used = jnp.sum(tiles_per_page).astype(jnp.int32)
+    return DevicePlan(dest=dest, step_pages=step_pages, steps_used=steps_used)
+
+
+def device_plan(page_of: jnp.ndarray, tile: int, grid: int,
+                num_pages: int | None = None,
+                method: str | None = None) -> DevicePlan:
+    """jnp twin of :func:`bucket_plan`, traceable inside ``jax.jit``.
+
+    Two constructions produce bit-identical plans: the packed stable sort
+    (``method="sort"``) and the O(Q+P) counting-sort histogram
+    (``method="histogram"``, requires ``num_pages``). ``method=None``
+    selects statically per (Q, num_pages) via :func:`plan_method` — the
+    histogram wins exactly where micro-batched point-lookup traffic lands
+    (deep batches over few pages); both are property-tested equal to the
+    host plan.
+
+    ``step_pages`` is scattered at the **static** grid ``grid`` (use
+    :func:`ladder_grid`), so no shape depends on the data and the whole
+    schedule lives on device. ``grid`` must be >=
+    ``worst_case_steps(Q, tile, num_pages)``; the scatters use mode='drop'
+    purely as an out-of-contract guard.
+    """
+    if method is not None and method not in PLAN_METHODS:
+        raise ValueError(f"unknown plan method {method!r}; "
+                         f"want one of {PLAN_METHODS}")
+    q_n = page_of.shape[0]
+    if method is None:
+        method = plan_method(q_n, num_pages)
+    if method == "histogram":
+        if num_pages is None:
+            raise ValueError("histogram plan needs num_pages")
+        if q_n:
+            return _plan_histogram(page_of, tile, grid, num_pages)
+    return _plan_sort(page_of, tile, grid, num_pages)

@@ -82,12 +82,13 @@ def _scheduled_local_ranks(pages, q, page_c, *, tile: int):
     """Scheduled per-shard bottom: sort-and-bucket `page_c` on device, fetch
     one page row per grid step, count within the page, un-permute. Returns
     the shard-local searchsorted rank for queries whose (clamped) page is
-    page_c; lanes are request-order."""
+    page_c; lanes are request-order. The plan construction self-selects per
+    (Q, pages-per-shard) — small shards under deep replicated batches get
+    the O(Q+P) histogram plan (DESIGN.md §2.1)."""
     p_n, lw = pages.shape
     q_n = q.shape[0]
     g_cap = ladder_grid(q_n, tile, p_n)
     plan = device_plan(page_c, tile, g_cap, p_n)
-    q_sorted = jnp.take(q, plan.order) if q_n else q
 
     def body(qb, step_pages, g):
         rows = jnp.take(pages, step_pages, axis=0)       # [g, lw]: per step,
@@ -95,7 +96,7 @@ def _scheduled_local_ranks(pages, q, page_c, *, tile: int):
                           axis=-1).astype(jnp.int32)
         return step_pages[:, None] * lw + in_page        # [g, tile]
 
-    return run_scheduled(plan, q_sorted, q_n, tile, g_cap, body)
+    return run_scheduled(plan, q, q_n, tile, g_cap, body)
 
 
 def search(index: ShardedTieredIndex, queries, *, tile: int = 128

@@ -126,10 +126,13 @@ class _PagedBase:
             self.top_kind, self.top, P, lane=128, tile_rows=8,
             interpret=self.interpret)
         # stride = lw_pad: the pipeline returns flat slot addresses into the
-        # gapped [P, lw_pad] storage (clip keeps the address gatherable)
-        self.pipeline = tiered._make_pipeline(
+        # gapped [P, lw_pad] storage (clip keeps the address gatherable).
+        # with_stats: the fused lookup also yields the plan's step count —
+        # the occupancy feedback the micro-batch queue steers on.
+        self.pipeline_stats = tiered._make_pipeline(
             page_of_raw, num_pages=P, stride=self.lw_pad, tile=self.tile,
-            clip=P * self.lw_pad - 1, interpret=self.interpret)
+            clip=P * self.lw_pad - 1, interpret=self.interpret,
+            with_stats=True)
         self.dev_keys = jnp.asarray(self.keys)
         self.dev_vals = jnp.asarray(self.vals)
         self.derives += 1
@@ -255,6 +258,7 @@ class MutableIndex:
         self.stats = {"inserts": 0, "upserts": 0, "merges": 0, "splits": 0,
                       "pages_touched": 0, "rows_rewritten": 0,
                       "top_derives": 0, "base_rebuilds": 0}
+        self._last_plan = None        # (q_n, steps, tile, P) of last lookup
         if keys.size:
             ks, vs = _dedup_last(keys, np.asarray(values, np.int32))
             self._build_base(ks, vs)
@@ -275,29 +279,33 @@ class MutableIndex:
             self.stats["base_rebuilds"] += 1
 
     def _make_lookup(self):
+        """Fused lookup: (rank, found, values, plan_steps) in ONE dispatch.
+        ``plan_steps`` is the executed device plan's traced step count under
+        a paged base (the queue's occupancy feedback signal) and None
+        otherwise — an empty pytree leaf, so non-paged bases pay nothing."""
         probe = _delta.probe
         if self.base is None:
             def fused(q, dk, dv, ds):
                 hit, val = probe(q, dk, dv, ds)
-                return jnp.zeros(q.shape, jnp.int32), hit, val
+                return jnp.zeros(q.shape, jnp.int32), hit, val, None
             return jax.jit(fused)
         if isinstance(self.base, _PagedBase):
-            pipeline = self.base.pipeline
+            pipeline = self.base.pipeline_stats
             def fused(q, pages, vpages, dk, dv, ds):
-                addr = pipeline(q, pages)
+                addr, steps = pipeline(q, pages)
                 bfound = jnp.take(pages.reshape(-1), addr, axis=0,
                                   mode="clip") == q
                 bval = jnp.take(vpages.reshape(-1), addr, axis=0,
                                 mode="clip")
                 dhit, dval = probe(q, dk, dv, ds)
-                return addr, dhit | bfound, jnp.where(dhit, dval, bval)
+                return addr, dhit | bfound, jnp.where(dhit, dval, bval), steps
             return jax.jit(fused)
         base = self.base                       # core Index: traceable facade
         def fused(q, dk, dv, ds):
             res = base.lookup(q)
             dhit, dval = probe(q, dk, dv, ds)
             return (res.rank, dhit | res.found,
-                    jnp.where(dhit, dval, res.values))
+                    jnp.where(dhit, dval, res.values), None)
         return jax.jit(fused)
 
     # ---------------------------------------------------------------- write
@@ -354,16 +362,33 @@ class MutableIndex:
     # ---------------------------------------------------------------- read
     def lookup(self, queries):
         """Single-dispatch lookup over base + delta (delta wins). Returns
-        core.api.LookupResult."""
+        core.api.LookupResult. Under a paged base, the executed plan's step
+        count (a device scalar — no sync here) is retained for
+        :meth:`pop_plan_feedback`."""
         from ..core.api import LookupResult
         q = jnp.asarray(queries)
         dk, dv, ds = self.delta.device_state()
         if isinstance(self.base, _PagedBase):
-            rank, found, vals = self._fused(q, self.base.dev_keys,
-                                            self.base.dev_vals, dk, dv, ds)
+            rank, found, vals, steps = self._fused(
+                q, self.base.dev_keys, self.base.dev_vals, dk, dv, ds)
+            self._last_plan = (int(q.shape[0]), steps, self.base.tile,
+                               self.base.num_pages)
         else:
-            rank, found, vals = self._fused(q, dk, dv, ds)
+            rank, found, vals, _ = self._fused(q, dk, dv, ds)
+            self._last_plan = None
         return LookupResult(rank=rank, found=found, values=vals)
+
+    def pop_plan_feedback(self):
+        """Executed-plan occupancy of the most recent lookup, as a lazy
+        thunk (or None when the base is not paged / nothing ran). Resolving
+        the thunk reads one device scalar — callers (the micro-batch queue)
+        defer that outside the dispatch path, keeping lookups sync-free."""
+        fb, self._last_plan = getattr(self, "_last_plan", None), None
+        if fb is None:
+            return None
+        q_n, steps, tile, num_pages = fb
+        from .schedule import executed_occupancy
+        return lambda: executed_occupancy(q_n, int(steps), tile, num_pages)
 
     @property
     def n(self) -> int:

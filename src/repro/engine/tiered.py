@@ -124,7 +124,9 @@ def _make_page_of_raw(top_kind: str, top, num_pages: int, *, lane: int,
 
 
 def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
-                   tile: int, clip: int, interpret: bool) -> Callable:
+                   tile: int, clip: int, interpret: bool,
+                   plan_method: str | None = None,
+                   with_stats: bool = False) -> Callable:
     """The single-dispatch pipeline (DESIGN.md §4) as a plain traceable fn:
     top descent -> device plan at the static worst-case grid -> rung-selected
     page kernel -> un-permute. `pages` is passed (not closed over) so the
@@ -134,22 +136,29 @@ def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
     engine uses ``leaf_width`` (ranks are global searchsorted positions);
     the mutable store (engine/store.py) uses ``lw_pad`` so the returned
     value is a flat *slot address* into the gapped [num_pages, lw_pad]
-    storage. Results are clipped to ``clip``."""
+    storage. Results are clipped to ``clip``.
+
+    ``plan_method`` picks the device-plan construction (None = static
+    per-(Q, num_pages) selection, DESIGN.md §2.1 — deep batches over few
+    pages get the O(Q+P) histogram plan, everything else the packed sort).
+    ``with_stats=True`` additionally returns the plan's traced step count,
+    the executed-occupancy feedback the micro-batch queue consumes — still
+    one dispatch, no extra sync."""
 
     def pipeline(q, pages):
         q_n = q.shape[0]
         pids = page_of_raw(q)
         g_cap = ladder_grid(q_n, tile, num_pages)
-        plan = device_plan(pids, tile, g_cap, num_pages)
-        q_sorted = jnp.take(q, plan.order) if q_n else q
+        plan = device_plan(pids, tile, g_cap, num_pages, method=plan_method)
 
         def body(qb, step_pages, g):
             return _page.page_search_bucketed(
-                qb, step_pages, pages, leaf_width=stride,
+                qb, step_pages, pages, stride=stride,
                 interpret=interpret)
 
-        out = run_scheduled(plan, q_sorted, q_n, tile, g_cap, body)
-        return jnp.minimum(out, clip)
+        out = run_scheduled(plan, q, q_n, tile, g_cap, body)
+        out = jnp.minimum(out, clip)
+        return (out, plan.steps_used) if with_stats else out
 
     return pipeline
 
@@ -232,7 +241,7 @@ def _finish(q, pages, gather, valid, step_pages, *, leaf_width: int, n: int,
     qb = jnp.take(q_src, gather, axis=0,
                   mode="clip").reshape(step_pages.shape[0], tile)
     ranks = _page.page_search_bucketed(qb, step_pages, pages,
-                                       leaf_width=leaf_width,
+                                       stride=leaf_width,
                                        interpret=interpret)
     flat = ranks.reshape(-1)
     # padded lanes scatter out of bounds and are dropped

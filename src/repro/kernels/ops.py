@@ -92,7 +92,7 @@ def fast_page_search(index: FastTreeIndex, queries, *, tile: int = 128,
     qb = jnp.take(q_src, jnp.asarray(plan.gather),
                   axis=0).reshape(plan.grid, tile)
     ranks = _page.page_search_bucketed(qb, jnp.asarray(plan.step_pages),
-                                       jnp.asarray(pages), leaf_width=lw,
+                                       jnp.asarray(pages), stride=lw,
                                        interpret=interpret)
     flat = np.asarray(ranks).reshape(-1)
     out = np.zeros(q.shape[0], np.int32)

@@ -22,21 +22,28 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(page_ids_ref, q_ref, pages_ref, o_ref, *, leaf_width: int):
+def _kernel(page_ids_ref, q_ref, pages_ref, o_ref, *, stride: int):
     g = pl.program_id(0)
     page = pages_ref[...]                            # [1, lw_pad]
     q = q_ref[...]                                   # [1, TQ]
     local = jnp.sum(page[0, :][None, :] < q[0, :][:, None], axis=-1)
-    base = page_ids_ref[g] * leaf_width
-    o_ref[...] = (base + jnp.minimum(local, leaf_width)).astype(jnp.int32)[None, :]
+    base = page_ids_ref[g] * stride
+    o_ref[...] = (base + jnp.minimum(local, stride)).astype(jnp.int32)[None, :]
 
 
 def page_search_bucketed(queries_bucketed: jnp.ndarray, page_ids: jnp.ndarray,
-                         pages: jnp.ndarray, *, leaf_width: int,
+                         pages: jnp.ndarray, *, stride: int,
                          interpret: bool = True) -> jnp.ndarray:
     """queries_bucketed: [G, TQ] — step g's queries all live in page
     page_ids[g]; pages: [num_pages, lw_pad] leaf storage (sentinel padded).
-    Returns ranks [G, TQ]."""
+    Returns ``page_ids[g] * stride + in-page count`` per lane, [G, TQ].
+
+    ``stride`` is the per-page base the in-page count is offset by — the
+    dense engine passes ``leaf_width`` (results are global searchsorted
+    ranks); the mutable store passes the padded row width ``lw_pad``
+    (results are flat *slot addresses* into its gapped leaf storage), which
+    is why this kwarg is not named ``leaf_width``.
+    """
     G, TQ = queries_bucketed.shape
     num_pages, lw_pad = pages.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -48,7 +55,7 @@ def page_search_bucketed(queries_bucketed: jnp.ndarray, page_ids: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, TQ), lambda g, pids: (g, 0)),
     )
-    kern = functools.partial(_kernel, leaf_width=leaf_width)
+    kern = functools.partial(_kernel, stride=stride)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,

@@ -18,6 +18,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--shared-prefix", type=int, default=32)
     ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="generate waves over the same prompts; rounds >= 2 "
+                         "hit a warm store, so the fused micro-batch probe "
+                         "path (DESIGN.md §7) shows up in the stats")
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--index", default="tiered",
@@ -27,6 +31,14 @@ def main():
                     help="rebuild the prefix index per insert batch (the "
                          "old snapshot posture) instead of the delta-merge "
                          "write path (DESIGN.md §6)")
+    ap.add_argument("--queue-capacity", type=int, default=4096,
+                    help="micro-batch probe queue: hard flush trigger "
+                         "(pending point lookups, DESIGN.md §7)")
+    ap.add_argument("--queue-deadline-us", type=int, default=2000,
+                    help="micro-batch probe queue: max in-queue wait")
+    ap.add_argument("--no-queue-adapt", action="store_true",
+                    help="freeze the queue's flush threshold instead of "
+                         "steering it by executed-plan occupancy")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-p", type=float, default=0.9)
     args = ap.parse_args()
@@ -48,7 +60,10 @@ def main():
         cfg, params, max_len=args.max_len, page_size=args.page_size,
         index_config=IndexConfig(kind=args.index, levels=2,
                                  compiled_node_width=3,
-                                 mutable=not args.wholesale),
+                                 mutable=not args.wholesale,
+                                 queue_capacity=args.queue_capacity,
+                                 queue_deadline_s=args.queue_deadline_us * 1e-6,
+                                 queue_adapt=not args.no_queue_adapt),
         sampler=SamplerConfig(temperature=args.temperature, top_p=args.top_p))
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
@@ -59,13 +74,17 @@ def main():
     if cfg.family in ("vlm", "audio"):
         mem = jax.random.normal(jax.random.PRNGKey(5),
                                 (1, cfg.encoder_seq, cfg.d_model))
-    out = eng.generate(prompts, steps=args.steps, memory=mem)
+    for _ in range(max(args.rounds, 1)):
+        out = eng.generate(prompts, steps=args.steps, memory=mem)
     s = eng.stats
     print(f"tokens out: {out.shape}")
     print(f"prefill computed/reused: {s.prefill_tokens}/{s.reused_tokens}")
     print(f"decode: {s.decode_tokens} tokens in {s.decode_s:.2f}s "
           f"({s.decode_tokens/max(s.decode_s,1e-9):,.0f} tok/s)")
     print(f"prefix store: {eng.store.stats}")
+    print(f"probe queue:  {s.probe_batches} fused batches in "
+          f"{s.probe_s:.3f}s, mean executed-plan occupancy "
+          f"{s.probe_occupancy:.3f}")
     if eng.store.index_config.mutable:
         print(f"write path:   {eng.store.index_stats}")
 

@@ -31,6 +31,10 @@ class EngineStats:
     decode_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # store-probe path (the micro-batch queue client, DESIGN.md §7):
+    probe_s: float = 0.0          # wall time in batched store probes
+    probe_batches: int = 0        # fused probe dispatches (queue flushes)
+    probe_occupancy: float = 0.0  # mean executed-plan lane occupancy
 
 
 class ServeEngine:
@@ -59,14 +63,19 @@ class ServeEngine:
             lambda p, t, c: T.decode_step(cfg, p, t, c, compute_dtype=compute_dtype))
 
     # ------------------------------------------------------------- prefill
-    def prefill_one(self, tokens: np.ndarray, memory=None):
+    def prefill_one(self, tokens: np.ndarray, memory=None, probe=None):
         """Returns (last_logits [1,V], cache). Uses prefix reuse when the
-        arch is pageable."""
+        arch is pageable. ``probe`` carries a precomputed (n_hit, payloads)
+        from a batched store probe (:meth:`_probe_batch`); without it the
+        store is probed inline, one request at a time."""
         t0 = time.perf_counter()
         tokens = np.asarray(tokens, np.int32)[None]        # B=1
         S = tokens.shape[1]
-        n_hit, payloads = (self.store.lookup(tokens[0]) if self.pageable
-                           else (0, []))
+        if probe is not None:
+            n_hit, payloads = probe
+        else:
+            n_hit, payloads = (self.store.lookup(tokens[0]) if self.pageable
+                               else (0, []))
         # keep at least one tail token so the last logits are computed fresh
         n_hit = min(n_hit, (S - 1) // self.page_size)
         payloads = payloads[:n_hit]
@@ -91,14 +100,45 @@ class ServeEngine:
         self.stats.prefill_s += time.perf_counter() - t0
         return logits, cache
 
+    # ------------------------------------------------------------- probes
+    def _probe_batch(self, prompts: list):
+        """One fused store probe for the whole prompt batch, routed through
+        the store's micro-batch queue (DESIGN.md §7): B prompts submit
+        their hash chains, the queue flushes them as ONE index dispatch.
+        Probes share the pre-batch store snapshot (see
+        PrefixPageStore.lookup_batch). Returns per-prompt (n_hit, payloads)
+        and folds the queue's executed-plan stats into EngineStats."""
+        if not self.pageable:
+            return [None] * len(prompts)
+        t0 = time.perf_counter()
+        probes = self.store.lookup_batch(
+            [np.asarray(p, np.int32) for p in prompts])
+        self.stats.probe_s += time.perf_counter() - t0
+        queue = self.store.probe_queue()
+        queue.drain_feedback()
+        self.stats.probe_batches = queue.stats.flushes
+        self.stats.probe_occupancy = queue.stats.mean_occupancy
+        return probes
+
     # ------------------------------------------------------------- decode
     def generate(self, prompts: list, steps: int, rng=None, memory=None):
         """Prefill each prompt (with reuse), then decode `steps` tokens for
-        the whole batch. Returns [B, steps] token ids."""
+        the whole batch. Store probes for all B prompts go out as one fused
+        micro-batch before the prefill loop. Returns [B, steps] token ids."""
         rng = rng if rng is not None else jax.random.PRNGKey(0)
+        probes = self._probe_batch(prompts)
+        revision = self.store.revision
         logits_list, caches = [], []
-        for p in prompts:
-            lg, c = self.prefill_one(p, memory=memory)
+        for p, probe in zip(prompts, probes):
+            # batched probes share the pre-batch snapshot; if earlier
+            # prefills of THIS batch grew the store and this probe was not
+            # already a full hit, re-probe inline so intra-batch prefix
+            # sharing still reuses (steady-state warm batches skip this)
+            if probe is not None and self.store.revision != revision:
+                full = probe[0] >= (len(p) - 1) // self.page_size
+                if not full:
+                    probe = None
+            lg, c = self.prefill_one(p, memory=memory, probe=probe)
             logits_list.append(lg)
             caches.append(c)
         # stack along batch: lengths on axis 0, layer leaves [R, B, ...] on 1

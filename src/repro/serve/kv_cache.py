@@ -92,6 +92,8 @@ class PrefixPageStore:
     _index: Any = None
     _dirty: bool = True
     _known: set = field(default_factory=set)         # hashes, kept incrementally
+    _queue: Any = None                               # lazy MicroBatchQueue
+    revision: int = 0                                # bumps when pages land
     stats: dict = field(default_factory=lambda: {
         "lookups": 0, "hits": 0, "rebuilds": 0, "verify_rejects": 0})
 
@@ -115,6 +117,7 @@ class PrefixPageStore:
             new_slots.append(slot)
         if not new_keys:
             return
+        self.revision += 1          # batched probes can tell their snapshot aged
         if self.index_config.mutable:
             # the delta path: O(delta work) per new page, page-local merges
             if self._index is None:
@@ -146,19 +149,10 @@ class PrefixPageStore:
         return dict(getattr(self._index, "stats", {}) or {})
 
     # ---------------------------------------------------------------- read
-    def lookup(self, prompt_tokens: np.ndarray):
-        """Longest reusable prefix. Returns (n_pages_hit, payloads[list])."""
-        self.stats["lookups"] += 1
-        if self._dirty and not self.index_config.mutable:
-            self.rebuild_index()
-        if self._index is None:
-            return 0, []
-        hs = chain_hashes(prompt_tokens, self.page_size)
-        if hs.size == 0:
-            return 0, []
-        res = self._index.lookup(jnp.asarray(hs))
-        found = np.asarray(res.found)
-        slot = np.asarray(res.values)
+    def _verify(self, prompt_tokens: np.ndarray, hs: np.ndarray,
+                found: np.ndarray, slot: np.ndarray):
+        """Turn an index probe over a prompt's chained hashes into the
+        longest *verified* payload chain (hash collisions truncate)."""
         out = []
         for i, h in enumerate(hs):
             if not found[i]:
@@ -173,6 +167,65 @@ class PrefixPageStore:
         if out:
             self.stats["hits"] += 1
         return len(out), out
+
+    def lookup(self, prompt_tokens: np.ndarray):
+        """Longest reusable prefix. Returns (n_pages_hit, payloads[list])."""
+        self.stats["lookups"] += 1
+        if self._dirty and not self.index_config.mutable:
+            self.rebuild_index()
+        if self._index is None:
+            return 0, []
+        hs = chain_hashes(prompt_tokens, self.page_size)
+        if hs.size == 0:
+            return 0, []
+        res = self._index.lookup(jnp.asarray(hs))
+        return self._verify(prompt_tokens, hs, np.asarray(res.found),
+                            np.asarray(res.values))
+
+    def probe_queue(self):
+        """The store's cross-request micro-batch queue (DESIGN.md §7),
+        lazily built from the IndexConfig queue knobs. All batched probes
+        (:meth:`lookup_batch`) aggregate through it, so concurrent callers
+        share one fused index dispatch per flush."""
+        if self._queue is None:
+            from ..engine.queue import MicroBatchQueue, index_probe_fn
+            c = self.index_config
+            self._queue = MicroBatchQueue(
+                # late-bound: rebuild_index / the mutable store may swap
+                # self._index between flushes
+                lambda q: index_probe_fn(self._index)(q),
+                capacity=c.queue_capacity, deadline_s=c.queue_deadline_s,
+                min_flush=c.queue_min_flush, adapt=c.queue_adapt)
+        return self._queue
+
+    def lookup_batch(self, prompts: list):
+        """Longest reusable prefix for MANY prompts with ONE fused index
+        probe: every prompt's hash chain is submitted to the micro-batch
+        queue, the first blocking result demand-flushes the lot as a single
+        deep dispatch, and each prompt verifies its own slice. Returns
+        ``[(n_pages_hit, payloads), ...]`` in prompt order.
+
+        Probes in one batch see the same store snapshot: a prompt cannot
+        reuse pages another prompt of the *same* batch is about to insert
+        (cross-batch reuse is unaffected) — that is the price of issuing
+        one dispatch instead of B."""
+        self.stats["lookups"] += len(prompts)
+        if self._dirty and not self.index_config.mutable:
+            self.rebuild_index()
+        if self._index is None:
+            return [(0, [])] * len(prompts)
+        hs_list = [chain_hashes(p, self.page_size) for p in prompts]
+        queue = self.probe_queue()
+        futs = [queue.submit(hs) if hs.size else None for hs in hs_list]
+        out = []
+        for prompt, hs, fut in zip(prompts, hs_list, futs):
+            if fut is None:
+                out.append((0, []))
+                continue
+            res = fut.result()
+            out.append(self._verify(prompt, hs, np.asarray(res.found),
+                                    np.asarray(res.values)))
+        return out
 
 
 # --------------------------------------------------------------- KV slicing

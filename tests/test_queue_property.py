@@ -1,0 +1,298 @@
+"""Micro-batch scheduler + histogram device plan (DESIGN.md §2.1/§7).
+
+Two property families:
+
+* **plan equivalence** — the histogram (counting-sort) device plan, the
+  packed-sort device plan, and the host ``bucket_plan`` must be the *same*
+  plan (lane arrays, step pages, step count) for any page distribution;
+  the two device constructions must be bit-identical pytrees.
+* **queue invariants** — capacity/deadline/demand flushing, per-caller
+  request-order restoration equal to the unqueued search, the
+  single-dispatch transfer-guard contract per flush, empty and oversized
+  submissions, and occupancy-feedback steering of the flush threshold.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                # property subset skips, invariants run
+    HAVE_HYPOTHESIS = False
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from repro.engine import schedule
+from repro.engine.queue import MicroBatchQueue, index_probe_fn
+
+
+# ------------------------------------------------------------ plan equality
+def _random_case(rng):
+    """(page_of, num_pages, tile) over serving-shaped distributions, biased
+    toward the small-page regime where the histogram plan is selected."""
+    pattern = rng.choice(["uniform", "zipf", "dups", "single"])
+    q_n = int(rng.integers(1, 700))
+    num_pages = int(rng.integers(1, 48))
+    tile = int(rng.choice([8, 32, 128]))
+    if pattern == "uniform":
+        page_of = rng.integers(0, num_pages, q_n)
+    elif pattern == "zipf":
+        page_of = np.minimum(rng.zipf(1.3, q_n) - 1, num_pages - 1)
+    elif pattern == "dups":
+        page_of = rng.integers(0, max(num_pages // 8, 1), q_n)
+    else:
+        page_of = np.full(q_n, rng.integers(0, num_pages))
+    return page_of.astype(np.int32), num_pages, tile
+
+
+def _assert_plans_equivalent(page_of, num_pages, tile):
+    q_n = page_of.size
+    host = schedule.bucket_plan(page_of, tile)
+    cap = schedule.ladder_grid(q_n, tile, num_pages)
+    p_dev = jnp.asarray(page_of)
+    srt = schedule.device_plan(p_dev, tile, cap, num_pages, method="sort")
+    his = schedule.device_plan(p_dev, tile, cap, num_pages,
+                               method="histogram")
+    auto = schedule.device_plan(p_dev, tile, cap, num_pages)
+
+    # all three device constructions are bit-identical pytrees
+    for other in (his, auto):
+        for name, a, b in zip(srt._fields, srt, other):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"field {name}")
+
+    # and they equal the host plan's lane arrays
+    for dev in (srt, his):
+        gather, valid = (np.asarray(a)
+                         for a in schedule.lane_arrays(dev, tile))
+        steps = np.asarray(dev.step_pages)
+        assert int(dev.steps_used) == host.steps_used
+        L = host.grid * tile
+        np.testing.assert_array_equal(valid[:L], host.valid)
+        assert not valid[L:].any()
+        np.testing.assert_array_equal(gather[:L][host.valid],
+                                      host.gather[host.valid])
+        np.testing.assert_array_equal(steps[:host.steps_used],
+                                      host.step_pages[:host.steps_used])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_histogram_plan_equals_sort_plan_equals_host_plan_seeded(seed):
+    """Deterministic subset of the hypothesis property below — runs on
+    boxes without hypothesis so the plan-equivalence contract is always
+    exercised."""
+    rng = np.random.default_rng(1000 + seed)
+    for _ in range(4):
+        _assert_plans_equivalent(*_random_case(rng))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def page_batches(draw):
+        seed = draw(st.integers(0, 2**31 - 1))
+        return _random_case(np.random.default_rng(seed))
+
+    @settings(max_examples=60, deadline=None)
+    @given(page_batches())
+    def test_histogram_plan_equals_sort_plan_equals_host_plan(case):
+        _assert_plans_equivalent(*case)
+
+
+def test_plan_method_static_selection():
+    deep = schedule.HISTOGRAM_MIN_QUERIES
+    assert schedule.plan_method(0, 8) == "sort"            # empty batch
+    assert schedule.plan_method(512, None) == "sort"       # unknown pages
+    assert schedule.plan_method(deep, 8) == "histogram"    # deep, few pages
+    assert schedule.plan_method(deep - 1, 8) == "sort"     # not deep enough
+    assert schedule.plan_method(
+        schedule.HISTOGRAM_MAX_PAGES * schedule.HISTOGRAM_MIN_DEPTH,
+        schedule.HISTOGRAM_MAX_PAGES) == "histogram"       # boundary cell
+    assert schedule.plan_method(10**6, schedule.HISTOGRAM_MAX_PAGES + 1) \
+        == "sort"                                          # too many pages
+    with pytest.raises(ValueError, match="unknown plan method"):
+        schedule.device_plan(jnp.zeros(4, jnp.int32), 8, 1, 2, method="bogus")
+    with pytest.raises(ValueError, match="needs num_pages"):
+        schedule.device_plan(jnp.zeros(4, jnp.int32), 8, 1, None,
+                             method="histogram")
+
+
+def test_histogram_selected_plan_matches_oracle_end_to_end():
+    """A tiered search in the histogram-selected regime (few pages, deep
+    batch) must still match np.searchsorted exactly."""
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 2**31 - 2, 1000).astype(np.int32)    # 8 pages
+    idx = build_index(keys, config=IndexConfig(kind="tiered", leaf_width=128))
+    assert schedule.plan_method(4096, idx.impl.num_pages) == "histogram"
+    qs = np.concatenate([keys[rng.integers(0, keys.size, 2048)],
+                         rng.integers(0, 2**31 - 2, 2048).astype(np.int32)])
+    want = np.searchsorted(np.sort(keys), qs, side="left")
+    np.testing.assert_array_equal(np.asarray(idx.search(qs)), want)
+
+
+# --------------------------------------------------------- queue invariants
+_STORES: dict = {}
+
+
+def _store(n=4096, seed=0):
+    """Shared read-only mutable-tiered store per (n, seed) — the queue
+    tests only look up, so sharing the index (and its jit cache) keeps the
+    suite's compile time flat."""
+    if (n, seed) not in _STORES:
+        rng = np.random.default_rng(seed)
+        keys = np.unique(rng.integers(0, 2**30, int(n * 1.2)
+                                      ).astype(np.int32))[:n]
+        vals = np.arange(keys.size, dtype=np.int32) * 3
+        idx = build_index(keys, vals, IndexConfig(kind="tiered",
+                                                  mutable=True))
+        idx.flush()      # fold the build into leaf pages: paged base exists
+        _STORES[(n, seed)] = (keys, vals, idx)
+    return _STORES[(n, seed)]
+
+
+def test_queue_results_equal_unqueued_search_in_request_order():
+    keys, vals, idx = _store()
+    rng = np.random.default_rng(1)
+    reqs = [np.concatenate([keys[rng.integers(0, keys.size, 5)],
+                            rng.integers(0, 2**30, 3).astype(np.int32)])
+            for _ in range(7)]
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=1024, min_flush=1024,
+                        timer=False)
+    futs = [q.submit(r) for r in reqs]
+    assert q.stats.flushes == 0                       # nothing triggered yet
+    futs[0].result()                                  # demand-flush the lot
+    assert q.stats.flushes == 1 and all(f.done() for f in futs)
+    for r, f in zip(reqs, futs):
+        got = f.result()
+        want = idx.lookup(r)                          # unqueued reference
+        np.testing.assert_array_equal(np.asarray(got.found),
+                                      np.asarray(want.found))
+        np.testing.assert_array_equal(np.asarray(got.values),
+                                      np.asarray(want.values))
+    assert q.stats.flushes == 1                       # no per-caller dispatch
+
+
+def test_queue_capacity_flush_trigger():
+    keys, _, idx = _store()
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=64, min_flush=16,
+                        adapt=False, timer=False)
+    f1 = q.submit(keys[:10])
+    assert not f1.done() and q.stats.flushes == 0
+    f2 = q.submit(keys[10:26])                        # 26 >= 16: flush
+    assert f1.done() and f2.done()
+    assert q.stats.capacity_flushes == 1
+
+
+def test_queue_deadline_flush_trigger_manual_clock():
+    keys, _, idx = _store()
+    t = {"now": 0.0}
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=1024, min_flush=1024,
+                        deadline_s=0.5, now_fn=lambda: t["now"], timer=False)
+    f = q.submit(keys[:4])
+    assert q.poll() == 0 and not f.done()             # too fresh
+    t["now"] = 0.499
+    assert q.poll() == 0 and not f.done()
+    t["now"] = 0.5
+    assert q.poll() == 4 and f.done()                 # aged out: flushed
+    assert q.stats.deadline_flushes == 1
+
+
+def test_queue_deadline_timer_thread():
+    import time
+    keys, vals, idx = _store()
+    jax.block_until_ready(idx.lookup(keys[:4]).found)   # warm the (4,) shape
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=1024, min_flush=1024,
+                        deadline_s=0.05)
+    f = q.submit(keys[:4])
+    deadline = time.monotonic() + 30.0
+    while not f.done() and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert f.done(), "deadline timer never flushed"
+    assert q.stats.deadline_flushes == 1
+    np.testing.assert_array_equal(np.asarray(f.result().values), vals[:4])
+    q.close()
+
+
+def test_queue_empty_and_oversized_submissions():
+    keys, vals, idx = _store()
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=32, min_flush=32,
+                        timer=False)
+    f_empty = q.submit(np.zeros(0, np.int32))
+    f_big = q.submit(keys[:300])                      # 300 > capacity
+    assert f_big.done() and f_empty.done()            # one deep flush, unsplit
+    assert q.stats.flushes == 1 and q.stats.max_batch == 300
+    np.testing.assert_array_equal(np.asarray(f_big.result().values),
+                                  vals[:300])
+    assert np.asarray(f_empty.result().found).shape == (0,)
+    # a flush of only empty submissions is total, not an error; so is a
+    # free-text reason (filed under manual instead of raising mid-flush)
+    f2 = q.submit(np.zeros(0, np.int32))
+    assert q.flush(reason="shutdown") == 0 or f2.done()
+    f2.result()
+    assert not hasattr(q.stats, "shutdown_flushes")
+
+
+def test_queue_flush_is_single_dispatch_no_transfers():
+    """DESIGN.md §7: a flush of device-resident submissions adds no
+    host<->device transfer — the fused dispatch contract survives the
+    queue. (Submissions are staged as device arrays, as the serving path's
+    pre-hashed probes are.)"""
+    keys, vals, idx = _store(n=16384)
+    reqs = [jnp.asarray(keys[i * 8:(i + 1) * 8]) for i in range(4)]
+    warm = MicroBatchQueue(index_probe_fn(idx), capacity=32, min_flush=32,
+                           timer=False)
+    for r in reqs:
+        warm.submit(r)
+    warm.flush()                                      # compile the fused shape
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=32, min_flush=32,
+                        timer=False)
+    with jax.transfer_guard("disallow"):
+        futs = [q.submit(r) for r in reqs]
+        q.flush()
+    assert q.stats.flushes == 1
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(f.result().values),
+                                      vals[i * 8:(i + 1) * 8])
+
+
+def test_queue_occupancy_feedback_steers_flush_threshold():
+    """Shallow executed occupancy must raise flush_at (wait for deeper
+    batches); meeting the target must decay it back toward min_flush."""
+    keys, _, idx = _store(n=16384)                    # 128-page base
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=4096, min_flush=16,
+                        occupancy_target=0.5, timer=False)
+    assert q.flush_at == 16
+    q.submit(keys[:16])                               # capacity flush @ 16
+    assert q.stats.flushes == 1
+    q.drain_feedback()                                # 16/(128*tile): shallow
+    assert q.flush_at == 32
+    q.submit(keys[:32])
+    q.drain_feedback()
+    assert q.flush_at == 64                           # still shallow: doubled
+    # fake a deep-occupancy report: threshold decays
+    q._feedback.append((lambda: 0.9, 64, 64))
+    q.drain_feedback()
+    assert q.flush_at == 32
+    assert q.stats.occ_n == 3 and q.stats.mean_occupancy > 0
+
+
+def test_queue_feedback_comes_from_executed_plan():
+    """The occupancy the queue sees equals schedule.executed_occupancy of
+    the host plan for the same batch — the device scalar is the real
+    executed step count, not an estimate."""
+    keys, _, idx = _store(n=16384)
+    rng = np.random.default_rng(3)
+    qs = keys[rng.integers(0, keys.size, 256)]
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=256, min_flush=256,
+                        timer=False)
+    q.submit(qs)
+    q.drain_feedback()
+    base = idx.base
+    pids = np.minimum(np.searchsorted(base.seps, qs, side="left"),
+                      base.num_pages - 1)
+    host = schedule.bucket_plan(pids, base.tile)
+    want = schedule.executed_occupancy(qs.size, host.steps_used, base.tile,
+                                       base.num_pages)
+    assert q.stats.occ_n == 1
+    assert q.stats.mean_occupancy == pytest.approx(want)
