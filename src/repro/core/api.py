@@ -89,24 +89,74 @@ class Index:
         return mod.search(self.impl, q)
 
     def search_range(self, lo, hi) -> tuple:
-        """Range query (thesis §1.1: 'simple to extend'): for each pair
-        lo[i] <= hi[i], the half-open rank interval [rank_lo, rank_hi) of
-        keys with lo <= key <= hi, plus the match count."""
+        """Range query (thesis §1.1: 'simple to extend'): for each pair,
+        the half-open rank interval [r_lo, r_hi_excl) of keys with
+        lo <= key <= hi, plus the match count. Exact under duplicate keys
+        at either endpoint; ``lo > hi`` normalizes to the empty interval
+        at r_lo. ``kind='tiered'`` routes through the range-scan subsystem
+        (engine/scan.py, DESIGN.md §8): both endpoints descend the
+        compiled top in ONE fused dispatch."""
         lo = jnp.asarray(lo)
         hi = jnp.asarray(hi)
+        if self.config.kind == "tiered":
+            from ..engine import scan as _scan
+            # the rank-only scanner: count-mode never streams values, so
+            # don't pay the value-page build for a rank query
+            return _scan.scanner_for(self.impl).search_range(lo, hi)
         r_lo = self.search(lo)
         if jnp.issubdtype(hi.dtype, jnp.integer):
             # searchsorted-right(hi) == searchsorted-left(hi + 1); hi < the
             # sentinel by the key-domain contract, so hi+1 never overflows
             r_hi_excl = self.search(hi + 1)
         else:
-            # floats: extend past the first hit (duplicate float keys at hi
-            # are counted once — documented)
-            r_hi = self.search(hi)
-            safe = jnp.minimum(r_hi, self.n - 1)
-            hit = (r_hi < self.n) & (jnp.take(self.keys_sorted, safe, axis=0) == hi)
-            r_hi_excl = r_hi + hit.astype(r_hi.dtype)
+            # searchsorted-right(hi) == searchsorted-left(nextafter(hi)) —
+            # the float twin of hi+1: duplicate float keys equal to hi all
+            # count, exactly
+            r_hi_excl = self.search(jnp.nextafter(hi, jnp.inf))
+        r_hi_excl = jnp.where(lo > hi, r_lo, r_hi_excl)
         return r_lo, r_hi_excl, jnp.maximum(r_hi_excl - r_lo, 0)
+
+    def scan_range(self, lo, hi, *, aggs=None,
+                   materialize: Optional[int] = None):
+        """Batched range scan with aggregation pushdown (DESIGN.md §8):
+        per query the match count, rank interval, and — when the index
+        carries int32/float32 values — their sum / min / max, computed
+        without materializing matches. ``aggs`` (e.g. ``("count", "sum")``)
+        caps the pushdown depth: the tiered kernel then streams and
+        computes strictly less. ``materialize=K`` additionally compacts
+        the first K matching ranks (and values) per query with an overflow
+        flag. ``kind='tiered'`` runs the fused span-scan dispatch
+        (boundary-page kernel + interior page aggregates); other kinds
+        fall back to rank intervals + O(1) prefix/sparse-table lookups.
+        Returns ``engine.scan.ScanResult``."""
+        from ..engine import scan as _scan
+        if self.config.kind == "tiered":
+            return _scan.scanner_for(self.impl, self.values_sorted) \
+                .scan_range(lo, hi, aggs=aggs, materialize=materialize)
+        mode = _scan.mode_for_aggs(aggs)     # validates the names, caps
+        r_lo, r_hi_excl, cnt = self.search_range(lo, hi)
+        r_lo = r_lo.astype(jnp.int32)
+        r_hi_excl = r_hi_excl.astype(jnp.int32)
+        cnt = cnt.astype(jnp.int32)
+        vsum = vmin = vmax = None
+        if mode != "count" and self.values_sorted is not None:
+            fa = getattr(self, "_flat_aggregator", None)
+            if fa is None:
+                fa = _scan.FlatAggregator(np.asarray(self.values_sorted))
+                object.__setattr__(self, "_flat_aggregator", fa)
+            if fa.ok:
+                vsum, vmin, vmax = fa(r_lo, r_hi_excl)
+                if mode == "sum":
+                    vmin = vmax = None
+        if materialize is None:
+            return _scan.ScanResult(count=cnt, r_lo=r_lo,
+                                    r_hi_excl=r_hi_excl, vsum=vsum,
+                                    vmin=vmin, vmax=vmax)
+        ranks, vals, over = _scan.materialize_interval(
+            r_lo, cnt, self.values_sorted, K=int(materialize))
+        return _scan.ScanResult(count=cnt, r_lo=r_lo, r_hi_excl=r_hi_excl,
+                                vsum=vsum, vmin=vmin, vmax=vmax,
+                                ranks=ranks, values=vals, overflow=over)
 
     def lookup(self, queries) -> LookupResult:
         q = jnp.asarray(queries)

@@ -7,8 +7,12 @@
 from .schedule import (BucketPlan, DevicePlan, bucket_plan,  # noqa: F401
                        device_plan, executed_occupancy, ladder_grid,
                        ladder_rungs, lane_arrays, plan_method, run_scheduled,
-                       select_rung, worst_case_steps)
-from .tiered import TieredIndex, build, plan_tiers, search, searcher  # noqa: F401
+                       run_scheduled_multi, select_rung, span_scan_plan,
+                       worst_case_steps)
+from .tiered import (TieredIndex, build, plan_tiers, search,  # noqa: F401
+                     search_range, searcher)
+from .scan import (FlatAggregator, ScanResult, TieredScanner,  # noqa: F401
+                   scanner_for)
 from .delta import DeltaBuffer  # noqa: F401
 from .store import MutableIndex  # noqa: F401
 from .queue import MicroBatchQueue, QueueFuture, QueueStats, index_probe_fn  # noqa: F401

@@ -60,20 +60,26 @@ class DeltaBuffer:
         w = self.node_width
         self.h_keys = np.full((self.nn, w), self.sentinel, self.dtype)
         self.h_vals = np.zeros((self.nn, w), np.int32)
+        # slot shadows a base key (same key lives in the backing store):
+        # the range-scan dup correction (engine/scan.py, DESIGN.md §8.2)
+        self.h_shadow = np.zeros((self.nn, w), bool)
         self.h_cnt = np.zeros(self.nn, np.int64)
         self.node_max = np.full(self.nn, self.sentinel, self.dtype)
         self.count = 0
         self.respreads = 0
         self._dev = None
+        self._dev_shadow = None
 
     @property
     def full(self) -> bool:
         return self.count >= self.capacity
 
     # ---------------------------------------------------------------- write
-    def insert(self, key, value: int) -> bool:
+    def insert(self, key, value: int, shadows: bool = False) -> bool:
         """Upsert one (key, value). Returns True when a *new* key was added
-        (False: existing key, value overwritten). The caller must drain a
+        (False: existing key, value overwritten). ``shadows`` marks the key
+        as also live in the backing store (tracked for the range-scan dup
+        correction; recomputed truth on upsert). The caller must drain a
         full buffer first (``engine/store.py`` merges on overflow)."""
         key = self.dtype.type(key)
         if key == self.sentinel:
@@ -87,34 +93,42 @@ class DeltaBuffer:
         pos = int(np.searchsorted(self.h_keys[j, :cnt], key, side="left"))
         if pos < cnt and self.h_keys[j, pos] == key:
             self.h_vals[j, pos] = value
+            self.h_shadow[j, pos] = shadows
             self._dev = None
+            self._dev_shadow = None
             return False
         if self.full:
             raise ValueError("delta buffer full; merge before inserting")
         if cnt == w:
             # node overflow: flatten, place the key, re-open gaps everywhere
-            keys, vals = self.live()
+            keys, vals, sh = self._live_full()
             p = int(np.searchsorted(keys, key, side="left"))
             self._respread(np.insert(keys, p, key),
-                           np.insert(vals, p, np.int32(value)))
+                           np.insert(vals, p, np.int32(value)),
+                           np.insert(sh, p, bool(shadows)))
         else:
             # shift the node tail one slot right (numpy buffers overlapping
             # basic-slice assignment) and drop the key in — at most w moves
             self.h_keys[j, pos + 1: cnt + 1] = self.h_keys[j, pos: cnt]
             self.h_vals[j, pos + 1: cnt + 1] = self.h_vals[j, pos: cnt]
+            self.h_shadow[j, pos + 1: cnt + 1] = self.h_shadow[j, pos: cnt]
             self.h_keys[j, pos] = key
             self.h_vals[j, pos] = value
+            self.h_shadow[j, pos] = shadows
             self.h_cnt[j] = cnt + 1
             self.node_max[j] = self.h_keys[j, cnt]
         self.count += 1
         self._dev = None
+        self._dev_shadow = None
         return True
 
-    def _respread(self, keys: np.ndarray, vals: np.ndarray):
+    def _respread(self, keys: np.ndarray, vals: np.ndarray,
+                  shadows: np.ndarray):
         """Redistribute live entries evenly across nodes (empties at tail)."""
         w, nn = self.node_width, self.nn
         self.h_keys[:] = self.sentinel
         self.h_vals[:] = 0
+        self.h_shadow[:] = False
         self.h_cnt[:] = 0
         self.node_max[:] = self.sentinel
         n = keys.size
@@ -126,12 +140,14 @@ class DeltaBuffer:
                 break
             self.h_keys[j, :take] = keys[off: off + take]
             self.h_vals[j, :take] = vals[off: off + take]
+            self.h_shadow[j, :take] = shadows[off: off + take]
             self.h_cnt[j] = take
             self.node_max[j] = keys[off + take - 1]
             off += take
         assert off == n, "respread lost entries"
         self.respreads += 1
         self._dev = None
+        self._dev_shadow = None
 
     # ---------------------------------------------------------------- read
     def live(self):
@@ -144,15 +160,26 @@ class DeltaBuffer:
               if self.h_cnt[j]]
         return np.concatenate(ks), np.concatenate(vs)
 
+    def _live_full(self):
+        """(keys, vals, shadow flags) in globally sorted key order."""
+        keys, vals = self.live()
+        if self.count == 0:
+            return keys, vals, np.empty(0, bool)
+        sh = [self.h_shadow[j, : self.h_cnt[j]] for j in range(self.nn)
+              if self.h_cnt[j]]
+        return keys, vals, np.concatenate(sh)
+
     def drain(self):
         """Live entries, then clear (the merge path's one-shot read)."""
         keys, vals = self.live()
         self.h_keys[:] = self.sentinel
         self.h_vals[:] = 0
+        self.h_shadow[:] = False
         self.h_cnt[:] = 0
         self.node_max[:] = self.sentinel
         self.count = 0
         self._dev = None
+        self._dev_shadow = None
         return keys, vals
 
     def device_state(self):
@@ -163,6 +190,13 @@ class DeltaBuffer:
             self._dev = (jnp.asarray(self.h_keys), jnp.asarray(self.h_vals),
                          jnp.asarray(self.node_max))
         return self._dev
+
+    def device_shadow(self):
+        """[nn, w] bool jnp mirror of the shadow bits, cached like
+        ``device_state`` (the range scan's dup-correction operand)."""
+        if self._dev_shadow is None:
+            self._dev_shadow = jnp.asarray(self.h_shadow)
+        return self._dev_shadow
 
 
 def probe(q: jnp.ndarray, d_keys: jnp.ndarray, d_vals: jnp.ndarray,

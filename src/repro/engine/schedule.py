@@ -172,33 +172,69 @@ def executed_occupancy(q_n: int, steps_used: int, tile: int,
     return q_n / float(rung * tile)
 
 
-def run_scheduled(plan: DevicePlan, q: jnp.ndarray, q_n: int,
-                  tile: int, g_cap: int, body: Callable) -> jnp.ndarray:
+def run_scheduled_multi(plan: DevicePlan, qs: tuple, q_n: int,
+                        tile: int, g_cap: int, body: Callable) -> tuple:
     """Run a per-(step, lane) ``body`` over a DevicePlan at the ladder rung
-    selected on device, returning request-order values.
+    selected on device — the multi-operand, multi-output generalization of
+    :func:`run_scheduled`.
 
-    ``body(qb [g, tile], step_pages [g], g) -> [g, tile]`` — the bottom-tier
-    compute (Pallas page kernel in the dense engine, jnp page compare in the
-    sharded engine). This helper owns the shared scaffolding: request-order
-    queries scatter straight into their kernel lanes (dest is all-distinct;
-    surplus lanes keep query 0 and are never read back), the executed rung
-    is the smallest power of two holding the runtime step count
-    (``lax.switch``; every valid lane lives in steps < steps_used <= rung,
-    so each branch's prefix of the plan is complete), and each query reads
-    its lane's value back with one gather through the same ``dest`` — one
-    permutation scatter in, one gather out, no masking.
+    Every array in ``qs`` (each [Q]) is scattered into kernel lanes through
+    the same ``dest`` permutation; ``body(qbs, step_pages [g], g)`` receives
+    the tuple of [g, tile] lane arrays and returns a tuple of [g, tile]
+    outputs, each of which is gathered back to request order. The shared
+    scaffolding is unchanged: dest is all-distinct (surplus lanes keep
+    element 0 and are never read back), the executed rung is the smallest
+    power of two holding the runtime step count (``lax.switch``; every
+    valid lane lives in steps < steps_used <= rung, so each branch's prefix
+    of the plan is complete) — one permutation scatter in per operand, one
+    gather out per output, no masking. The range-scan subsystem
+    (engine/scan.py) drives this with (lo, hi) bound pairs per lane and
+    five aggregate outputs per step.
     """
     def run_rung(g: int):
-        qb = jnp.zeros((g * tile,), q.dtype).at[plan.dest].set(
-            q, mode="drop", unique_indices=True).reshape(g, tile)
-        vals = body(qb, plan.step_pages[:g], g)
-        return jnp.take(vals.reshape(-1), plan.dest, mode="clip")
+        qbs = tuple(
+            jnp.zeros((g * tile,), q.dtype).at[plan.dest].set(
+                q, mode="drop", unique_indices=True).reshape(g, tile)
+            for q in qs)
+        outs = body(qbs, plan.step_pages[:g], g)
+        return tuple(jnp.take(o.reshape(-1), plan.dest, mode="clip")
+                     for o in outs)
 
     rungs = ladder_rungs(q_n, tile, g_cap)
     if len(rungs) == 1:
         return run_rung(rungs[0])
     return jax.lax.switch(select_rung(plan.steps_used, rungs),
                           [functools.partial(run_rung, g) for g in rungs])
+
+
+def run_scheduled(plan: DevicePlan, q: jnp.ndarray, q_n: int,
+                  tile: int, g_cap: int, body: Callable) -> jnp.ndarray:
+    """Single-operand form of :func:`run_scheduled_multi`:
+    ``body(qb [g, tile], step_pages [g], g) -> [g, tile]`` — the bottom-tier
+    compute (Pallas page kernel in the dense engine, jnp page compare in the
+    sharded engine); returns request-order values.
+    """
+    (out,) = run_scheduled_multi(
+        plan, (q,), q_n, tile, g_cap,
+        lambda qbs, step_pages, g: (body(qbs[0], step_pages, g),))
+    return out
+
+
+def span_scan_plan(page_lo: jnp.ndarray, page_hi: jnp.ndarray, tile: int,
+                   grid: int, num_pages: int | None = None,
+                   method: str | None = None):
+    """Span expansion + scan-step plan (DESIGN.md §8): bucket Q inclusive
+    page spans ``[page_lo, page_hi]`` through the point-lookup device-plan
+    machinery. A span contributes exactly its two *boundary* scan items —
+    item i is query i's lower-boundary page, item Q+i its upper-boundary
+    page — so a span is just a pair of page buckets and the existing plan
+    constructions (packed sort or histogram, selected statically per
+    (2Q, num_pages)) apply unchanged; interior pages are aggregated from
+    per-page summaries, never scanned, which is what keeps the grid bound
+    static. Returns (item_pages [2Q], DevicePlan over the 2Q items) at the
+    static grid ``grid`` (use ``ladder_grid(2Q, tile, num_pages)``)."""
+    pages = jnp.concatenate([page_lo, page_hi]).astype(jnp.int32)
+    return pages, device_plan(pages, tile, grid, num_pages, method=method)
 
 
 def _empty_plan(tile: int) -> BucketPlan:

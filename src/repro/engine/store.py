@@ -115,6 +115,18 @@ class _PagedBase:
     def n(self) -> int:
         return int(self.cnt.sum())
 
+    def find_slot(self, key):
+        """(page, pos) of a live key in the gapped leaves, or None — the
+        host twin of the device probe, used by the insert path's
+        shadowed-key tracking (DESIGN.md §8.2)."""
+        p = min(int(np.searchsorted(self.seps, key, side="left")),
+                self.num_pages - 1)
+        cnt = int(self.cnt[p])
+        pos = int(np.searchsorted(self.keys[p, :cnt], key, side="left"))
+        if pos < cnt and self.keys[p, pos] == key:
+            return p, pos
+        return None
+
     def _derive(self):
         """(Re-)derive the top tier + pipeline from the current pages.
         Called at build and on split (num_pages change) — never on a
@@ -125,6 +137,7 @@ class _PagedBase:
         page_of_raw = tiered._make_page_of_raw(
             self.top_kind, self.top, P, lane=128, tile_rows=8,
             interpret=self.interpret)
+        self.page_of_raw = page_of_raw   # the range scan fuses over it
         # stride = lw_pad: the pipeline returns flat slot addresses into the
         # gapped [P, lw_pad] storage (clip keeps the address gatherable).
         # with_stats: the fused lookup also yields the plan's step count —
@@ -257,8 +270,12 @@ class MutableIndex:
         self.base: Any = None
         self.stats = {"inserts": 0, "upserts": 0, "merges": 0, "splits": 0,
                       "pages_touched": 0, "rows_rewritten": 0,
-                      "top_derives": 0, "base_rebuilds": 0}
+                      "top_derives": 0, "base_rebuilds": 0, "shadowed": 0}
         self._last_plan = None        # (q_n, steps, tile, P) of last lookup
+        self._rev = 0                 # mutation revision (scan-state cache)
+        self._dirty_rows = set()      # pages with host-synced shadow values
+        self._scan_jit = None         # jitted scan fns per base structure
+        self._scan_aux = None         # (rev, ScanAux) device aggregates
         if keys.size:
             ks, vs = _dedup_last(keys, np.asarray(values, np.int32))
             self._build_base(ks, vs)
@@ -311,7 +328,15 @@ class MutableIndex:
     # ---------------------------------------------------------------- write
     def insert(self, keys, values):
         """Upsert a batch. O(delta work) per key; an overflowing buffer is
-        merged into the base (page-local under a tiered base)."""
+        merged into the base (page-local under a tiered base).
+
+        Under a paged base each key is host-probed for a live base twin
+        (O(log) numpy): a hit marks the delta slot *shadowed* and syncs the
+        base value host-side (pushed to device lazily by the next scan).
+        Lookups never read the stale base value (delta wins by recency),
+        and the sync makes base ∪ delta a duplicate multiset — min/max
+        range aggregates need no correction at all, count/sum subtract the
+        shadowed terms exactly (DESIGN.md §8.2)."""
         keys = np.atleast_1d(np.asarray(keys, self._key_dtype))
         values = np.atleast_1d(np.asarray(values, np.int32))
         if keys.shape != values.shape:
@@ -319,24 +344,41 @@ class MutableIndex:
         for k, v in zip(keys, values):
             if self.delta.full:
                 self._merge()
-            if self.delta.insert(k, v):
+            shadows = False
+            base = self.base
+            if isinstance(base, _PagedBase):
+                slot = base.find_slot(k)
+                if slot is not None:
+                    shadows = True
+                    p, pos = slot
+                    if base.vals[p, pos] != v:
+                        base.vals[p, pos] = v
+                        self._dirty_rows.add(int(p))
+            if self.delta.insert(k, v, shadows=shadows):
                 self.stats["inserts"] += 1
+                if shadows:
+                    self.stats["shadowed"] += 1
             else:
                 self.stats["upserts"] += 1
+        self._rev += 1
 
     def _merge(self):
         dk, dv = self.delta.drain()
         if dk.size == 0:
             return
         self.stats["merges"] += 1
+        self._rev += 1
         if self.base is None:
             self._build_base(dk, dv)
+            self._dirty_rows.clear()
         elif isinstance(self.base, _PagedBase):
             info = self.base.merge(dk, dv)
             self.stats["pages_touched"] += info["touched"]
             self.stats["rows_rewritten"] += info["rows_rewritten"]
             self.stats["top_derives"] = self.base.derives
             if info["split"]:
+                # repack renumbered the pages; stale dirty-row ids die here
+                self._dirty_rows.clear()
                 self.stats["splits"] += info["splits"]
             else:
                 # page-local merge: pipeline unchanged, keep the compiled
@@ -390,12 +432,166 @@ class MutableIndex:
         from .schedule import executed_occupancy
         return lambda: executed_occupancy(q_n, int(steps), tile, num_pages)
 
+    # ---------------------------------------------------------------- scan
+    def _ensure_scan(self):
+        """(jitted scan fns, device ScanAux) for the fused range scan,
+        rebuilt lazily: the fns when the base structure changed (a derive),
+        the aux arrays + dirty value rows when any mutation happened.
+        Returns None for non-paged bases (host fallback)."""
+        base = self.base
+        if base is not None and not isinstance(base, _PagedBase):
+            return None
+        from . import scan as _scan
+        key = -1 if base is None else base.derives
+        if self._scan_jit is None or self._scan_jit["key"] != key:
+            if base is None:
+                make_agg, make_mat = _scan.make_delta_scan_fns(
+                    self._key_dtype)
+            else:
+                span_of = tiered._make_span_of(base.page_of_raw, base.dtype)
+                make_agg, make_mat = _scan.make_paged_scan_fns(
+                    span_of, num_pages=base.num_pages, lw_pad=base.lw_pad,
+                    tile=base.tile, interpret=base.interpret,
+                    key_dtype=base.dtype)
+            self._scan_jit = {"key": key, "make_agg": make_agg,
+                              "aggs": {}, "make_mat": make_mat, "mats": {}}
+        if self._scan_aux is None or self._scan_aux[0] != self._rev:
+            aux = None
+            if base is not None:
+                if self._dirty_rows:
+                    # push host-synced shadowed values to the device rows
+                    # (one pow2-padded donated scatter, like the merge path)
+                    idx = np.fromiter(sorted(self._dirty_rows), np.int32,
+                                      len(self._dirty_rows))
+                    pad = _next_pow2(idx.size)
+                    idx_p = np.concatenate(
+                        [idx, np.full(pad - idx.size, idx[-1], np.int32)])
+                    base.dev_keys, base.dev_vals = _scatter_rows(
+                        base.dev_keys, base.dev_vals, jnp.asarray(idx_p),
+                        jnp.asarray(base.keys[idx_p]),
+                        jnp.asarray(base.vals[idx_p]))
+                    self._dirty_rows.clear()
+                aux = _scan.build_page_aux(base.cnt, base.vals, np.int32)
+            self._scan_aux = (self._rev, aux)
+        return self._scan_jit, self._scan_aux[1]
+
+    def scan_range(self, lo, hi, *, aggs=None, materialize=None):
+        """Batched delta-aware range scan (DESIGN.md §8.2): count / sum /
+        min / max over live values in [lo, hi] plus exact merged
+        searchsorted ranks, ONE fused dispatch under a paged base (span
+        pipeline + branch-free delta scan + shadowed-key correction).
+        ``aggs`` caps the pushdown depth like the immutable facade (count
+        mode never streams the value pages). ``materialize=K``
+        additionally compacts the first K matches' slot addresses (base
+        region, then delta region at ``P*lw_pad + slot``) and values in
+        key order, with an overflow flag. Returns
+        ``engine.scan.ScanResult``. Non-tiered bases take a host path."""
+        from . import scan as _scan
+        mode = _scan.mode_for_aggs(aggs)
+        lo = jnp.asarray(lo, self._key_dtype)
+        hi = jnp.asarray(hi, self._key_dtype)
+        st = self._ensure_scan()
+        if st is None:
+            return self._scan_host(np.asarray(lo), np.asarray(hi),
+                                   mode, materialize)
+        jits, aux = st
+        dk, dv, _ = self.delta.device_state()
+        dsh = self.delta.device_shadow()
+        base = self.base
+        if base is None:
+            args = (lo, hi, dk, dv, dsh)
+        else:
+            args = (lo, hi, base.dev_keys, base.dev_vals, aux, dk, dv, dsh)
+        if materialize is None:
+            fn = jits["aggs"].get(mode)
+            if fn is None:
+                fn = jits["aggs"][mode] = jax.jit(jits["make_agg"](mode))
+            count, vsum, vmin, vmax, r_lo, r_hi = fn(*args)
+            return _scan.ScanResult(count=count, r_lo=r_lo, r_hi_excl=r_hi,
+                                    vsum=vsum, vmin=vmin, vmax=vmax)
+        K = int(materialize)
+        key = (K, mode)
+        fn = jits["mats"].get(key)
+        if fn is None:
+            fn = jits["mats"][key] = jax.jit(jits["make_mat"](K, mode))
+        count, vsum, vmin, vmax, r_lo, r_hi, ranks, vals, over = fn(*args)
+        return _scan.ScanResult(count=count, r_lo=r_lo, r_hi_excl=r_hi,
+                                vsum=vsum, vmin=vmin, vmax=vmax,
+                                ranks=ranks, values=vals, overflow=over)
+
+    def search_range(self, lo, hi):
+        """Exact merged range ranks over base + delta — the delta-aware
+        searchsorted the ROADMAP asked for: for each ``lo[i] <= hi[i]``
+        the half-open interval [r_lo, r_hi_excl) among the *live* merged
+        keys (shadow dup-count subtracted), plus the match count; lo > hi
+        normalizes to the empty interval at r_lo. Count-mode dispatch —
+        the value pages are never streamed."""
+        r = self.scan_range(lo, hi, aggs=("count",))
+        return r.r_lo, r.r_hi_excl, r.count
+
+    def _scan_host(self, lo, hi, mode, materialize):
+        """Host-path scan for non-tiered mutable bases (the fused span
+        machinery is the paged store's contract): merge the base + delta
+        snapshots in numpy. O(n + Q·matches) — a compatibility path, not a
+        fast path."""
+        from . import scan as _scan
+        from ..kernels.page_scan import agg_identities
+        if self.base is not None:
+            bk, bv = self._flat
+        else:
+            bk = np.empty(0, self._key_dtype)
+            bv = np.empty(0, np.int32)
+        dk, dv = self.delta.live()
+        if dk.size:
+            keep = ~np.isin(bk, dk)                  # delta wins (recency)
+            mk = np.concatenate([bk[keep], dk])
+            mv = np.concatenate([bv[keep], dv])
+            order = np.argsort(mk, kind="stable")
+            mk, mv = mk[order], mv[order]
+        else:
+            mk, mv = bk, bv
+        r_lo = np.searchsorted(mk, lo, side="left").astype(np.int32)
+        r_hi = np.searchsorted(mk, hi, side="right").astype(np.int32)
+        r_hi = np.where(lo > hi, r_lo, r_hi).astype(np.int32)
+        cnt = r_hi - r_lo
+        id_min, id_max = agg_identities(np.int32)
+        vsum = np.zeros(lo.shape[0], np.int32)
+        vmin = np.full(lo.shape[0], id_min, np.int32)
+        vmax = np.full(lo.shape[0], id_max, np.int32)
+        for i in range(lo.shape[0]):
+            if cnt[i]:
+                seg = mv[r_lo[i]: r_hi[i]]
+                vsum[i] = seg.sum(dtype=np.int32)
+                vmin[i] = seg.min()
+                vmax[i] = seg.max()
+        res = dict(count=jnp.asarray(cnt), r_lo=jnp.asarray(r_lo),
+                   r_hi_excl=jnp.asarray(r_hi))
+        if materialize is None:
+            return _scan.ScanResult(
+                **res,
+                vsum=jnp.asarray(vsum) if mode != "count" else None,
+                vmin=jnp.asarray(vmin) if mode == "full" else None,
+                vmax=jnp.asarray(vmax) if mode == "full" else None)
+        K = int(materialize)
+        ranks, vals, over = _scan.materialize_interval(
+            jnp.asarray(r_lo), jnp.asarray(cnt), jnp.asarray(mv), K=K)
+        return _scan.ScanResult(
+            **res,
+            vsum=jnp.asarray(vsum) if mode != "count" else None,
+            vmin=jnp.asarray(vmin) if mode == "full" else None,
+            vmax=jnp.asarray(vmax) if mode == "full" else None,
+            ranks=ranks, values=vals, overflow=over)
+
     @property
     def n(self) -> int:
-        """Live key count: exact after a merge; between merges delta keys
-        not yet folded may double-count base upserts (upper bound)."""
+        """Live key count. Under a paged base this is exact — shadowed
+        delta keys (live in both tiers) are tracked at insert and counted
+        once; under other bases, un-merged delta upserts may double-count
+        (upper bound, exact after a merge)."""
         base_n = self.base.n if self.base is not None else 0
-        return base_n + self.delta.count
+        shadowed = int(self.delta.h_shadow.sum()) \
+            if isinstance(self.base, _PagedBase) else 0
+        return base_n + self.delta.count - shadowed
 
     @property
     def tree_bytes(self) -> int:

@@ -80,6 +80,7 @@ class TieredIndex:
     top_kind: str                # 'nitrogen' | 'kary' | 'trivial'
     top: Any                     # the inner index over `seps` (None if trivial)
     page_of: Callable            # jit-cached: q[batch] -> leaf-page id
+    page_of_raw: Callable        # traceable descent, for fusing (scan.py)
     search_raw: Callable         # traceable (q, pages) -> ranks, for fusing
     search_fused: Callable       # jitted search_raw, zero host syncs
     donate: bool = True          # search_fused donates its query buffer
@@ -223,7 +224,7 @@ def build(keys, *, leaf_width: int | None = None, tile: int = 128,
         pages=jnp.asarray(pages),
         seps=jnp.asarray(seps), n=n, leaf_width=lw, lw_pad=lw_pad,
         num_pages=num_pages, tile=int(tile), top_kind=top_kind, top=top_idx,
-        page_of=jax.jit(page_of_raw),
+        page_of=jax.jit(page_of_raw), page_of_raw=page_of_raw,
         search_raw=pipeline,
         search_fused=functools.partial(
             jax.jit, donate_argnums=(0,) if donate else ())(pipeline),
@@ -292,3 +293,48 @@ def searcher(index: TieredIndex) -> Callable:
     def run(queries):
         return search(index, queries)
     return run
+
+
+# ---------------------------------------------------------------- ranges
+def _make_span_of(page_of_raw: Callable, key_dtype) -> Callable:
+    """Doubled-endpoint descent (DESIGN.md §8): ``(lo, hi) -> (page_lo,
+    page_hi)``, the inclusive boundary pages of each query's page span.
+    Both endpoint batches descend the compiled top in ONE 2Q pass. The
+    upper endpoint descends as its *successor* (``hi+1`` for ints,
+    ``nextafter`` for floats — searchsorted-right routing): separators
+    duplicate across pages when a key run crosses a boundary, and routing
+    ``hi`` itself would close the span one page early, dropping the run's
+    tail copies of ``hi``."""
+    is_float = np.issubdtype(np.dtype(key_dtype), np.floating)
+
+    def span_of(lo, hi):
+        q_n = lo.shape[0]
+        hi_next = jnp.nextafter(hi, jnp.inf) if is_float else hi + 1
+        pids = page_of_raw(jnp.concatenate([lo, hi_next]))
+        plo = pids[:q_n].astype(jnp.int32)
+        # hi >= lo implies page_hi >= page_lo (descent is monotone); the
+        # max only disciplines inverted (empty) ranges
+        phi = jnp.maximum(pids[q_n:].astype(jnp.int32), plo)
+        return plo, phi
+
+    return span_of
+
+
+def search_range_raw(index: TieredIndex) -> Callable:
+    """Traceable ``(lo, hi, pages) -> (r_lo, r_hi_excl, count)`` over the
+    range-scan subsystem (engine/scan.py, DESIGN.md §8) — the doubled
+    descent, boundary-page kernel and interior count prefix in one
+    composable fn (the scanner's aux arrays ride along as captured
+    constants; the leaf storage stays an argument)."""
+    from .scan import scanner_for
+    return scanner_for(index).range_raw
+
+
+def search_range(index: TieredIndex, lo, hi):
+    """Batched range ranks as ONE fused dispatch: for each ``lo[i] <=
+    hi[i]`` the half-open rank interval [r_lo, r_hi_excl) of keys in
+    ``[lo, hi]`` plus the count — exact for duplicate keys at either
+    endpoint (both endpoints descend with searchsorted-left/-right
+    routing); ``lo > hi`` normalizes to the empty interval at r_lo."""
+    from .scan import scanner_for
+    return scanner_for(index).search_range(lo, hi)

@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: endpoint-masked leaf-page scan with aggregation
+pushdown (DESIGN.md §8).
+
+The range-scan twin of ``page_search``: queries here are *scan items* — a
+(lo, hi) bound pair targeting one leaf page — bucketed by page exactly like
+point lookups (a span's boundary pages are ordinary page buckets), and each
+grid step DMAs one page of keys plus its aligned page of values HBM->VMEM
+via the same ``PrefetchScalarGridSpec`` index map.
+
+Within a page the scan is wide masked reductions (the paper's SIMD tier
+doing OLAP work): one compare pair builds the in-range mask, and the lane's
+outputs are the pushed-down aggregates — match count, value sum / min / max
+over the masked values, and the below-lo count that anchors rank
+derivation. Matches are never written out: an aggregate range query
+allocates O(lanes), not O(matches), which is the entire point of pushing
+the aggregation into the kernel instead of gathering rows to the host.
+
+Sentinel safety: gap/pad slots hold the key-domain sentinel, and every
+caller's upper bound is at most the largest in-domain key (strictly below
+the sentinel), so a gap slot can never enter the mask. Int32 sums wrap
+(two's complement), matching the numpy ``dtype=int32`` oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def agg_identities(val_dtype):
+    """(min-identity, max-identity) for masked reductions over ``val_dtype``:
+    the values empty scans report (count 0 ⇒ min is the dtype's max)."""
+    vd = np.dtype(val_dtype)
+    if np.issubdtype(vd, np.floating):
+        return vd.type(np.inf), vd.type(-np.inf)
+    info = np.iinfo(vd)
+    return vd.type(info.max), vd.type(info.min)
+
+
+MODES = ("count", "sum", "full")
+
+
+def _kernel_count(page_ids_ref, lo_ref, hi_ref, kpages_ref,
+                  lt_ref, le_ref):
+    k = kpages_ref[...][0, :]                        # [lw_pad] page keys
+    lo = lo_ref[...][0, :]                           # [TQ] per-lane bounds
+    hi = hi_ref[...][0, :]
+    # both popcounts in one stacked reduction (per-step op count is what
+    # interpret mode bills for; on hardware this is two VPU passes either
+    # way)
+    both = jnp.stack([k[None, :] < lo[:, None], k[None, :] <= hi[:, None]])
+    counts = jnp.sum(both, axis=-1).astype(jnp.int32)    # [2, TQ]
+    lt_ref[...] = counts[0][None, :]
+    le_ref[...] = counts[1][None, :]
+
+
+def _kernel_values(page_ids_ref, lo_ref, hi_ref, kpages_ref, vpages_ref,
+                   *out_refs, mode: str, id_min, id_max):
+    k = kpages_ref[...][0, :]
+    v = vpages_ref[...][0, :]
+    lo = lo_ref[...][0, :]
+    hi = hi_ref[...][0, :]
+    below = k[None, :] < lo[:, None]                 # [TQ, lw_pad]
+    le = k[None, :] <= hi[:, None]
+    counts = jnp.sum(jnp.stack([below, le]), axis=-1).astype(jnp.int32)
+    out_refs[0][...] = counts[0][None, :]
+    out_refs[1][...] = counts[1][None, :]
+    # in-range mask: le minus its subset below (ordered bounds); for an
+    # inert (impossible) pair ~below keeps only sentinel slots, which can
+    # never satisfy le — the mask is empty
+    m = ~below & le
+    vt = v[None, :]
+    out_refs[2][...] = jnp.sum(jnp.where(m, vt, 0), axis=-1)[None, :]
+    if mode == "full":
+        out_refs[3][...] = jnp.min(jnp.where(m, vt, id_min),
+                                   axis=-1)[None, :]
+        out_refs[4][...] = jnp.max(jnp.where(m, vt, id_max),
+                                   axis=-1)[None, :]
+
+
+def page_scan_bucketed(lo_b: jnp.ndarray, hi_b: jnp.ndarray,
+                       page_ids: jnp.ndarray, kpages: jnp.ndarray,
+                       vpages: jnp.ndarray = None, *, mode: str = "full",
+                       interpret: bool = True):
+    """lo_b, hi_b: [G, TQ] — step g's lanes all scan page page_ids[g] with
+    per-lane inclusive bounds; kpages (and, for value modes, the aligned
+    vpages): [num_pages, lw_pad] leaf storage (keys sentinel-padded; pad
+    values are never selected).
+
+    The static ``mode`` picks the pushdown depth — narrower modes stream
+    and compute strictly less (count mode never DMAs the value page):
+
+      "count"  ->  (lt, le)                       int32 [G, TQ] each
+      "sum"    ->  (lt, le, vsum)
+      "full"   ->  (lt, le, vsum, vmin, vmax)
+
+    where per lane
+      lt    |{slot : key < lo}|  (the rank anchor; gaps never count)
+      le    |{slot : key <= hi}| — the in-range count is
+            ``max(le - lt, 0)``, computed by the caller once per dispatch
+            (the clamp makes inert/impossible bound pairs read as zero)
+      vsum  sum of in-range values (int32 wraps)
+      vmin/vmax  min/max of in-range values (dtype max/min when empty)
+
+    A lane is made inert (empty mask, lt ignored) by an impossible bound
+    pair — see ``engine/scan.py``.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown scan mode {mode!r}; want one of {MODES}")
+    G, TQ = lo_b.shape
+    num_pages, lw_pad = kpages.shape
+    n_out = {"count": 2, "sum": 3, "full": 5}[mode]
+    in_specs = [
+        pl.BlockSpec((1, TQ), lambda g, pids: (g, 0)),
+        pl.BlockSpec((1, TQ), lambda g, pids: (g, 0)),
+        pl.BlockSpec((1, lw_pad), lambda g, pids: (pids[g], 0)),
+    ]
+    operands = [page_ids, lo_b, hi_b, kpages]
+    if mode == "count":
+        kern = _kernel_count
+    else:
+        vd = vpages.dtype
+        id_min, id_max = agg_identities(vd)
+        in_specs.append(pl.BlockSpec((1, lw_pad), lambda g, pids:
+                                     (pids[g], 0)))
+        operands.append(vpages)
+        kern = functools.partial(_kernel_values, mode=mode,
+                                 id_min=id_min, id_max=id_max)
+    out_dtypes = [jnp.int32, jnp.int32] + [vpages.dtype] * (n_out - 2) \
+        if mode != "count" else [jnp.int32, jnp.int32]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G,),
+        in_specs=in_specs,
+        out_specs=tuple(pl.BlockSpec((1, TQ), lambda g, pids: (g, 0))
+                        for _ in range(n_out)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=tuple(jax.ShapeDtypeStruct((G, TQ), d)
+                        for d in out_dtypes),
+        interpret=interpret,
+    )(*operands)
+
+# The span expansion + scan-step plan live in engine/schedule.py
+# (span_scan_plan) and engine/scan.py; this module is kernel-only.

@@ -1,0 +1,494 @@
+"""Batched range-scan subsystem (DESIGN.md §8): fused span scheduling +
+aggregation pushdown. Oracle equality against numpy over the tiered engine
+(immutable and mutable/delta-aware), the exact-endpoint fixes on the core
+facade (duplicate float keys at hi, lo > hi normalization), materialize
+mode with address decoding, and the single-dispatch transfer-guard
+contract. Hypothesis-free so the suite collects on a bare CPU box."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexConfig, build_index
+from repro.engine import scan as escan
+from repro.engine import tiered
+from repro.kernels.page_scan import agg_identities
+
+INT_MIN = np.iinfo(np.int32).min
+INT_MAX = np.iinfo(np.int32).max
+
+
+def oracle(keys_sorted, vals_sorted, lo, hi):
+    """(r_lo, r_hi_excl, count, sum, min, max) with the subsystem's
+    contract: right bound inclusive, lo > hi empty at r_lo, int32 sums
+    wrap, identities on empty ranges."""
+    r_lo = np.searchsorted(keys_sorted, lo, side="left").astype(np.int32)
+    r_hi = np.searchsorted(keys_sorted, hi, side="right").astype(np.int32)
+    r_hi = np.where(lo > hi, r_lo, r_hi).astype(np.int32)
+    cnt = r_hi - r_lo
+    id_min, id_max = agg_identities(vals_sorted.dtype)
+    vsum = np.zeros(lo.shape[0], vals_sorted.dtype)
+    vmin = np.full(lo.shape[0], id_min, vals_sorted.dtype)
+    vmax = np.full(lo.shape[0], id_max, vals_sorted.dtype)
+    for i in range(lo.shape[0]):
+        if cnt[i]:
+            seg = vals_sorted[r_lo[i]: r_hi[i]]
+            vsum[i] = seg.sum(dtype=vals_sorted.dtype)
+            vmin[i] = seg.min()
+            vmax[i] = seg.max()
+    return r_lo, r_hi, cnt, vsum, vmin, vmax
+
+
+def check_scan(idx, keys_sorted, vals_sorted, lo, hi):
+    r = idx.scan_range(lo, hi)
+    w_lo, w_hi, cnt, vsum, vmin, vmax = oracle(keys_sorted, vals_sorted,
+                                               lo, hi)
+    np.testing.assert_array_equal(np.asarray(r.count), cnt)
+    np.testing.assert_array_equal(np.asarray(r.r_lo), w_lo)
+    np.testing.assert_array_equal(np.asarray(r.r_hi_excl), w_hi)
+    if np.issubdtype(vals_sorted.dtype, np.floating):
+        # float sums are reduction-order-dependent (per-page partials +
+        # prefix differences); int32 sums are bit-exact mod 2^32
+        np.testing.assert_allclose(np.asarray(r.vsum), vsum, rtol=1e-4,
+                                   atol=1e-4)
+    else:
+        np.testing.assert_array_equal(np.asarray(r.vsum), vsum)
+    np.testing.assert_array_equal(np.asarray(r.vmin), vmin)
+    np.testing.assert_array_equal(np.asarray(r.vmax), vmax)
+
+
+# ------------------------------------------------------- immutable tiered
+@pytest.mark.parametrize("n,q_n,desc", [
+    (1, 16, "single key"),
+    (300, 128, "one partial page"),
+    (9001, 512, "many pages, non-pow2"),
+])
+def test_scan_matches_oracle_int32(n, q_n, desc):
+    rng = np.random.default_rng(n)
+    keys = rng.integers(0, 2**30, n).astype(np.int32)          # dups allowed
+    vals = rng.integers(-1000, 1000, n).astype(np.int32)
+    order = np.argsort(keys, kind="stable")
+    ks, vs = keys[order], vals[order]
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", leaf_width=128))
+    lo = rng.integers(0, 2**30, q_n).astype(np.int32)
+    hi = (lo + rng.integers(-10**6, 2**28, q_n)).astype(np.int32)
+    check_scan(idx, ks, vs, lo, hi)
+
+
+def test_scan_duplicate_run_crossing_pages():
+    """Whole pages of one key; hi equal to that key must count every copy —
+    the searchsorted-right page routing (successor descent), not just the
+    lower boundary page."""
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, 40, 5000).astype(np.int32)          # ~125 dups each
+    vals = rng.integers(0, 100, 5000).astype(np.int32)
+    order = np.argsort(keys, kind="stable")
+    ks, vs = keys[order], vals[order]
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", leaf_width=128))
+    lo = np.arange(-2, 44, dtype=np.int32)
+    hi = lo.copy()                                             # point ranges
+    check_scan(idx, ks, vs, lo, hi)
+    check_scan(idx, ks, vs, np.zeros_like(lo), lo)             # prefix ranges
+
+
+def test_scan_span_shapes_and_whole_domain():
+    """Ranges spanning 0 / 1 / some / all pages in one batch."""
+    keys = np.arange(0, 65536, 2, dtype=np.int32)
+    vals = (np.arange(keys.size, dtype=np.int32) * 3) % 251
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", leaf_width=128))
+    lo = np.array([5, 10, 10, 0, 1000, 65534, -5], np.int32)
+    hi = np.array([5, 9, 300, 65535, 64000, 65535, -1], np.int32)
+    check_scan(idx, keys, vals, lo, hi)
+
+
+def test_scan_float32_keys_and_values():
+    rng = np.random.default_rng(7)
+    keys = rng.normal(size=4000).astype(np.float32)
+    vals = rng.normal(size=4000).astype(np.float32)
+    order = np.argsort(keys, kind="stable")
+    ks, vs = keys[order], vals[order]
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", leaf_width=128))
+    lo = rng.normal(size=128).astype(np.float32)
+    hi = (lo + rng.normal(size=128).astype(np.float32))        # some inverted
+    check_scan(idx, ks, vs, lo, hi)
+
+
+def test_scan_count_only_without_values():
+    keys = np.arange(0, 1000, 3, dtype=np.int32)
+    idx = build_index(keys, config=IndexConfig(kind="tiered", leaf_width=128))
+    r = idx.scan_range(np.array([0, 10], np.int32),
+                       np.array([9, 8], np.int32))
+    assert np.asarray(r.count).tolist() == [4, 0]
+    assert r.vsum is None and r.vmin is None and r.vmax is None
+
+
+def test_scan_empty_batch():
+    idx = build_index(np.arange(512, dtype=np.int32),
+                      config=IndexConfig(kind="tiered"))
+    r = idx.scan_range(np.zeros(0, np.int32), np.zeros(0, np.int32))
+    assert r.count.shape == (0,) and r.r_lo.shape == (0,)
+
+
+# ------------------------------------------------ facade endpoint fixes
+@pytest.mark.parametrize("kind", ["binary", "css", "fast", "nitrogen",
+                                  "tiered"])
+def test_search_range_float_duplicates_at_hi_exact(kind):
+    """Duplicate float keys equal to hi all count (the old facade counted
+    them once — documented wart, now deleted)."""
+    keys = np.repeat(np.array([0.25, 0.5, 0.75], np.float32), 5)
+    idx = build_index(keys, config=IndexConfig(kind=kind, node_width=8,
+                                               levels=2,
+                                               compiled_node_width=3))
+    r_lo, r_hi, cnt = idx.search_range(np.array([0.25, 0.5], np.float32),
+                                       np.array([0.5, 0.5], np.float32))
+    np.testing.assert_array_equal(np.asarray(cnt), [10, 5])
+    np.testing.assert_array_equal(np.asarray(r_hi), [10, 10])
+
+
+@pytest.mark.parametrize("kind", ["binary", "css", "fast", "nitrogen",
+                                  "tiered"])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_search_range_inverted_bounds_normalize_empty(kind, dtype):
+    """lo > hi is the empty interval anchored at rank(lo) — ordered rank
+    pair, zero count (previously: clamped count but unordered ranks)."""
+    keys = np.arange(0, 100, 1).astype(dtype)
+    idx = build_index(keys, config=IndexConfig(kind=kind, node_width=8,
+                                               levels=2,
+                                               compiled_node_width=3))
+    lo = np.array([50, 10, 99], dtype)
+    hi = np.array([10, 50, 0], dtype)
+    r_lo, r_hi, cnt = idx.search_range(lo, hi)
+    np.testing.assert_array_equal(np.asarray(cnt), [0, 41, 0])
+    np.testing.assert_array_equal(np.asarray(r_lo), [50, 10, 99])
+    np.testing.assert_array_equal(np.asarray(r_hi), [50, 51, 99])
+    assert bool((np.asarray(r_hi) >= np.asarray(r_lo)).all())
+
+
+def test_tiered_search_range_module_entry():
+    """engine.tiered.search_range / search_range_raw — the engine-level
+    entry points (one fused dispatch, no api facade)."""
+    keys = np.arange(0, 50_000, 5, dtype=np.int32)
+    idx = tiered.build(keys)
+    r_lo, r_hi, cnt = tiered.search_range(idx, np.array([10], np.int32),
+                                          np.array([29], np.int32))
+    assert int(cnt[0]) == 4 and int(r_lo[0]) == 2 and int(r_hi[0]) == 6
+    raw = tiered.search_range_raw(idx)
+    out = jax.jit(lambda lo, hi, pages: raw(lo, hi, pages))(
+        jnp.asarray([10], jnp.int32), jnp.asarray([29], jnp.int32),
+        idx.pages)
+    assert int(out[2][0]) == 4
+
+
+# ------------------------------------------------------------ mutable
+def _mutable_case(seed=11, n0=3000, capacity=256):
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(0, 60_000, n0).astype(np.int32))
+    vals = rng.integers(-50, 50, keys.size).astype(np.int32)
+    ref = dict(zip(keys.tolist(), vals.tolist()))
+    m = build_index(keys, vals, IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=capacity,
+        leaf_width=128))
+    return rng, m, ref
+
+
+def _merged(ref):
+    mk = np.array(sorted(ref), np.int32)
+    mv = np.array([ref[k] for k in mk.tolist()], np.int32)
+    return mk, mv
+
+
+def test_mutable_scan_shadowed_upserts_exact():
+    """Upserted keys live in base AND delta; aggregates must count them
+    once with the delta (newest) value — the dup-aware correction."""
+    rng, m, ref = _mutable_case()
+    keys = np.array(sorted(ref), np.int32)
+    up_k = keys[rng.integers(0, keys.size, 80)]
+    up_v = rng.integers(-50, 50, 80).astype(np.int32)
+    new_k = np.setdiff1d(rng.integers(0, 60_000, 150).astype(np.int32),
+                         keys)[:60]
+    new_v = rng.integers(-50, 50, new_k.size).astype(np.int32)
+    m.insert(np.concatenate([up_k, new_k]), np.concatenate([up_v, new_v]))
+    ref.update(zip(up_k.tolist(), up_v.tolist()))
+    ref.update(zip(new_k.tolist(), new_v.tolist()))
+    assert m.stats["shadowed"] > 0
+    mk, mv = _merged(ref)
+    lo = rng.integers(0, 60_000, 128).astype(np.int32)
+    hi = (lo + rng.integers(-500, 30_000, 128)).astype(np.int32)
+    check_scan(m, mk, mv, lo, hi)
+    assert m.n == len(ref)            # shadow tracking makes n exact
+
+
+def test_mutable_scan_across_merges_and_repacks():
+    rng, m, ref = _mutable_case(seed=13, capacity=128)
+    lo = rng.integers(0, 60_000, 64).astype(np.int32)
+    hi = (lo + rng.integers(0, 30_000, 64)).astype(np.int32)
+    for round_ in range(4):
+        ik = rng.integers(0, 60_000, 400).astype(np.int32)
+        iv = rng.integers(-50, 50, 400).astype(np.int32)
+        m.insert(ik, iv)
+        ref.update(zip(ik.tolist(), iv.tolist()))
+        mk, mv = _merged(ref)
+        check_scan(m, mk, mv, lo, hi)
+    assert m.stats["merges"] > 0
+    assert m.n == len(ref)
+
+
+def test_mutable_search_range_delta_aware_ranks():
+    """Exact merged searchsorted ranks over base + delta (the ROADMAP
+    'delta-aware ranks' follow-on): shadowed keys counted once."""
+    rng, m, ref = _mutable_case(seed=17)
+    keys = np.array(sorted(ref), np.int32)
+    m.insert(keys[:40], np.full(40, 7, np.int32))      # pure shadows
+    for k in keys[:40].tolist():
+        ref[k] = 7
+    mk, mv = _merged(ref)
+    lo = rng.integers(0, 60_000, 64).astype(np.int32)
+    hi = (lo + rng.integers(0, 30_000, 64)).astype(np.int32)
+    r_lo, r_hi, cnt = m.search_range(lo, hi)
+    w_lo = np.searchsorted(mk, lo, "left")
+    w_hi = np.searchsorted(mk, hi, "right")
+    w_hi = np.where(lo > hi, w_lo, w_hi)
+    np.testing.assert_array_equal(np.asarray(r_lo), w_lo)
+    np.testing.assert_array_equal(np.asarray(r_hi), w_hi)
+    np.testing.assert_array_equal(np.asarray(cnt), w_hi - w_lo)
+
+
+def test_mutable_scan_delta_only_store():
+    m = build_index(None, None, IndexConfig(kind="tiered", mutable=True,
+                                            delta_capacity=64))
+    m.insert(np.array([5, 1, 9, 3], np.int32),
+             np.array([50, 10, 90, 30], np.int32))
+    r = m.scan_range(np.array([1, 4, 9, 7], np.int32),
+                     np.array([5, 2, 9, 3], np.int32))
+    assert np.asarray(r.count).tolist() == [3, 0, 1, 0]
+    assert np.asarray(r.vsum).tolist() == [90, 0, 90, 0]
+    assert np.asarray(r.vmin).tolist() == [10, INT_MAX, 90, INT_MAX]
+    assert np.asarray(r.r_lo).tolist() == [0, 2, 3, 3]
+
+
+def test_mutable_scan_non_tiered_base_host_path():
+    """Non-paged bases answer exactly through the host path."""
+    rng = np.random.default_rng(19)
+    keys = np.unique(rng.integers(0, 5000, 600).astype(np.int32))
+    vals = rng.integers(-50, 50, keys.size).astype(np.int32)
+    m = build_index(keys, vals, IndexConfig(kind="css", mutable=True,
+                                            delta_capacity=32))
+    ref = dict(zip(keys.tolist(), vals.tolist()))
+    ik = rng.integers(0, 5000, 90).astype(np.int32)
+    iv = rng.integers(-50, 50, 90).astype(np.int32)
+    m.insert(ik, iv)
+    ref.update(zip(ik.tolist(), iv.tolist()))
+    mk, mv = _merged(ref)
+    lo = rng.integers(0, 5000, 40).astype(np.int32)
+    hi = (lo + rng.integers(-100, 2000, 40)).astype(np.int32)
+    check_scan(m, mk, mv, lo, hi)
+    rmat = m.scan_range(lo, hi, materialize=8)
+    w_lo = np.searchsorted(mk, lo, "left")
+    for i in range(lo.size):
+        c = int(np.asarray(rmat.count)[i])
+        k = min(c, 8)
+        np.testing.assert_array_equal(np.asarray(rmat.values[i])[:k],
+                                      mv[w_lo[i]: w_lo[i] + k])
+        assert bool(rmat.overflow[i]) == (c > 8)
+
+
+# ------------------------------------------------------------ materialize
+def test_materialize_immutable_ranks_and_overflow():
+    keys = np.arange(0, 4096, 2, dtype=np.int32)
+    vals = (np.arange(keys.size, dtype=np.int32) * 5) % 97
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", leaf_width=128))
+    lo = np.array([0, 100, 5000, 10], np.int32)
+    hi = np.array([14, 120, 6000, 8], np.int32)
+    K = 4
+    r = idx.scan_range(lo, hi, materialize=K)
+    w_lo = np.searchsorted(keys, lo, "left").astype(np.int32)
+    w_hi = np.searchsorted(keys, hi, "right").astype(np.int32)
+    w_hi = np.where(lo > hi, w_lo, w_hi)
+    for i in range(lo.size):
+        c = int(w_hi[i] - w_lo[i])
+        k = min(c, K)
+        got = np.asarray(r.ranks[i])
+        np.testing.assert_array_equal(got[:k],
+                                      np.arange(w_lo[i], w_lo[i] + k))
+        assert (got[k:] == -1).all()
+        np.testing.assert_array_equal(np.asarray(r.values[i])[:k],
+                                      vals[w_lo[i]: w_lo[i] + k])
+        assert bool(r.overflow[i]) == (c > K)
+
+
+def test_materialize_mutable_addresses_decode():
+    """Mutable materialize emits slot addresses (base region, then delta
+    region); decoding them through the two stores must reproduce the
+    merged keys and values in key order, shadow-deduped."""
+    rng, m, ref = _mutable_case(seed=23, capacity=128)
+    keys = np.array(sorted(ref), np.int32)
+    m.insert(keys[5:25], np.arange(20, dtype=np.int32) + 1000)  # shadows
+    for i, k in enumerate(keys[5:25].tolist()):
+        ref[k] = i + 1000
+    new_k = np.setdiff1d(rng.integers(0, 60_000, 60).astype(np.int32),
+                         keys)[:20]
+    m.insert(new_k, np.full(new_k.size, -7, np.int32))
+    for k in new_k.tolist():
+        ref[k] = -7
+    mk, mv = _merged(ref)
+    lo = rng.integers(0, 60_000, 32).astype(np.int32)
+    hi = (lo + rng.integers(0, 5000, 32)).astype(np.int32)
+    K = 12
+    r = m.scan_range(lo, hi, materialize=K)
+    base = m.base
+    flat_bk = base.keys.reshape(-1)
+    flat_dk = m.delta.h_keys.reshape(-1)
+    bsz = base.num_pages * base.lw_pad
+    w_lo = np.searchsorted(mk, lo, "left")
+    w_hi = np.searchsorted(mk, hi, "right")
+    for i in range(lo.size):
+        c = int(np.asarray(r.count)[i])
+        assert c == w_hi[i] - w_lo[i]
+        k = min(c, K)
+        addrs = np.asarray(r.ranks[i])[:k]
+        got_keys = np.where(
+            addrs < bsz,
+            flat_bk[np.clip(addrs, 0, bsz - 1)],
+            flat_dk[np.clip(addrs - bsz, 0, flat_dk.size - 1)])
+        np.testing.assert_array_equal(got_keys, mk[w_lo[i]: w_lo[i] + k])
+        np.testing.assert_array_equal(np.asarray(r.values[i])[:k],
+                                      mv[w_lo[i]: w_lo[i] + k])
+        assert (np.asarray(r.ranks[i])[k:] == -1).all()
+        assert bool(r.overflow[i]) == (c > K)
+
+
+# ------------------------------------------------------- single dispatch
+def test_scan_single_dispatch_no_transfers_immutable():
+    """Acceptance: a batched range scan is ONE device dispatch — no host
+    plan, no transfer between descent, kernel and aggregation."""
+    rng = np.random.default_rng(29)
+    keys = rng.integers(0, 2**30, 16384).astype(np.int32)
+    vals = rng.integers(0, 1000, keys.size).astype(np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind="tiered"))
+    lo = jnp.asarray(rng.integers(0, 2**30, 512).astype(np.int32))
+    hi = jnp.asarray(np.asarray(lo) + 2**24)
+    idx.scan_range(lo, hi).count.block_until_ready()         # warm/compile
+    with jax.transfer_guard("disallow"):
+        r = idx.scan_range(lo, hi)
+        jax.block_until_ready((r.count, r.vsum, r.vmin, r.vmax,
+                               r.r_lo, r.r_hi_excl))
+    ks = np.sort(keys, kind="stable")
+    w_lo = np.searchsorted(ks, np.asarray(lo), "left")
+    np.testing.assert_array_equal(np.asarray(r.r_lo), w_lo)
+
+
+def test_scan_single_dispatch_no_transfers_mutable():
+    rng = np.random.default_rng(31)
+    keys = np.unique(rng.integers(0, 2**30, 8192).astype(np.int32))
+    vals = rng.integers(0, 1000, keys.size).astype(np.int32)
+    m = build_index(keys, vals, IndexConfig(kind="tiered", mutable=True,
+                                            delta_capacity=128))
+    m.insert(keys[:50], vals[:50] + 1)                       # shadows
+    lo = jnp.asarray(rng.integers(0, 2**30, 256).astype(np.int32))
+    hi = jnp.asarray(np.asarray(lo) + 2**24)
+    m.scan_range(lo, hi).count.block_until_ready()           # warm: pushes
+    with jax.transfer_guard("disallow"):                     # dirty rows
+        r = m.scan_range(lo, hi)
+        jax.block_until_ready((r.count, r.vsum, r.vmin, r.vmax, r.r_lo))
+
+
+# ------------------------------------------------------------- helpers
+def test_sparse_table_range_reduce():
+    rng = np.random.default_rng(37)
+    a = rng.integers(-100, 100, 37).astype(np.int32)
+    st = escan.sparse_table(a, np.minimum, np.int32(INT_MAX))
+    lo = rng.integers(0, 37, 64)
+    ln = rng.integers(0, 37, 64)
+    hi = np.minimum(lo + ln, 37)
+    got = np.asarray(escan._table_range(
+        jnp.asarray(st), jnp.asarray(lo, jnp.int32),
+        jnp.asarray(hi, jnp.int32), jnp.minimum, np.int32(INT_MAX)))
+    want = np.array([a[l:h].min() if h > l else INT_MAX
+                     for l, h in zip(lo, hi)], np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_floor_log2_exact_past_float32_mantissa():
+    """float32 log2 rounds 2^k - 1 up to k for k >= 24; the corrected
+    floor must not (it selects the sparse-table level — an off-by-one
+    level reads one element past the range)."""
+    xs = np.array([1, 2, 3, 2**23 - 1, 2**24 - 1, 2**24, 2**24 + 1,
+                   2**30 - 1, 2**30], np.int32)
+    got = np.asarray(escan._floor_log2(jnp.asarray(xs)))
+    want = np.floor(np.log2(xs.astype(np.float64))).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mutable_scan_accepts_aggs_depth():
+    """The mutable store honors the same aggs pushdown-depth contract as
+    the immutable facade (the README snippet must work on both)."""
+    rng, m, ref = _mutable_case(seed=43)
+    keys = np.array(sorted(ref), np.int32)
+    m.insert(keys[:10], np.full(10, 3, np.int32))
+    for k in keys[:10].tolist():
+        ref[k] = 3
+    mk, mv = _merged(ref)
+    lo = np.array([int(mk[5]), int(mk[100])], np.int32)
+    hi = np.array([int(mk[80]), int(mk[40])], np.int32)
+    r = m.scan_range(lo, hi, aggs=("count", "sum"))
+    assert r.vmin is None and r.vmax is None
+    w_lo, w_hi, cnt, vsum, _, _ = oracle(mk, mv, lo, hi)
+    np.testing.assert_array_equal(np.asarray(r.count), cnt)
+    np.testing.assert_array_equal(np.asarray(r.vsum), vsum)
+    rc = m.scan_range(lo, hi, aggs=("count",))
+    assert rc.vsum is None
+    np.testing.assert_array_equal(np.asarray(rc.r_lo), w_lo)
+    with pytest.raises(ValueError, match="unknown aggregates"):
+        m.scan_range(lo, hi, aggs=("bogus",))
+
+
+def test_scan_rejects_unknown_aggs_every_kind():
+    keys = np.arange(64, dtype=np.int32)
+    for kind in ("tiered", "css"):
+        for vals in (keys, None):        # valued and value-less alike
+            idx = build_index(keys, vals, IndexConfig(kind=kind))
+            with pytest.raises(ValueError, match="unknown aggregates"):
+                idx.scan_range(np.array([1], np.int32),
+                               np.array([5], np.int32), aggs=("avg",))
+
+
+def test_materialize_composes_with_aggs():
+    """materialize=K *additionally* compacts — requested aggregates ride
+    the same dispatch, on every path (tiered, fallback, mutable)."""
+    keys = np.arange(0, 1000, 2, dtype=np.int32)
+    vals = (np.arange(keys.size, dtype=np.int32) * 3) % 101
+    lo = np.array([10, 600], np.int32)
+    hi = np.array([40, 500], np.int32)
+    w_lo = np.searchsorted(keys, lo, "left")
+    w_hi = np.where(lo > hi, w_lo, np.searchsorted(keys, hi, "right"))
+    w_sum = np.array([vals[a:b].sum(dtype=np.int32)
+                      for a, b in zip(w_lo, w_hi)], np.int32)
+    for cfg in (IndexConfig(kind="tiered", leaf_width=128),
+                IndexConfig(kind="css"),
+                IndexConfig(kind="tiered", mutable=True,
+                            delta_capacity=64, leaf_width=128)):
+        idx = build_index(keys, vals, cfg)
+        r = idx.scan_range(lo, hi, aggs=("count", "sum"), materialize=4)
+        assert r.ranks is not None and r.overflow is not None
+        np.testing.assert_array_equal(np.asarray(r.vsum), w_sum,
+                                      err_msg=str(cfg.kind))
+        assert r.vmin is None
+        lean = idx.scan_range(lo, hi, aggs=("count",), materialize=4)
+        assert lean.vsum is None and lean.ranks is not None
+
+
+def test_flat_aggregator_matches_loop():
+    rng = np.random.default_rng(41)
+    v = rng.integers(-1000, 1000, 513).astype(np.int32)
+    fa = escan.FlatAggregator(v)
+    lo = rng.integers(0, 514, 100).astype(np.int32)
+    hi = np.minimum(lo + rng.integers(0, 200, 100), 513).astype(np.int32)
+    vsum, vmin, vmax = (np.asarray(x) for x in fa(lo, hi))
+    for i in range(100):
+        seg = v[lo[i]: hi[i]]
+        if seg.size:
+            assert vsum[i] == seg.sum(dtype=np.int32)
+            assert vmin[i] == seg.min() and vmax[i] == seg.max()
+        else:
+            assert vsum[i] == 0 and vmin[i] == INT_MAX and vmax[i] == INT_MIN

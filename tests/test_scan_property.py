@@ -1,0 +1,160 @@
+"""Property tests for the batched range-scan subsystem (DESIGN.md §8):
+``scan_range`` aggregates, rank intervals and materialized matches must
+equal a numpy oracle across index kinds, mutable/immutable stores,
+int32/float32 keys, empty and inverted ranges, ranges spanning 0/1/all
+pages, and post-merge/repack delta states (interleaved insert traces with
+shadowing upserts).
+
+Runs under hypothesis when installed; otherwise a seeded parametrized
+fallback drives the same cases, so the oracle is exercised on a bare box.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import IndexConfig, build_index
+from repro.kernels.page_scan import agg_identities
+
+UNIVERSE = 30_000
+KINDS = ("tiered", "binary", "css")
+
+
+def _oracle(mk, mv, lo, hi):
+    r_lo = np.searchsorted(mk, lo, side="left").astype(np.int32)
+    r_hi = np.searchsorted(mk, hi, side="right").astype(np.int32)
+    r_hi = np.where(lo > hi, r_lo, r_hi).astype(np.int32)
+    cnt = r_hi - r_lo
+    id_min, id_max = agg_identities(np.int32)
+    vsum = np.zeros(lo.shape[0], np.int32)
+    vmin = np.full(lo.shape[0], id_min, np.int32)
+    vmax = np.full(lo.shape[0], id_max, np.int32)
+    for i in range(lo.shape[0]):
+        if cnt[i]:
+            seg = mv[r_lo[i]: r_hi[i]]
+            vsum[i] = seg.sum(dtype=np.int32)
+            vmin[i] = seg.min()
+            vmax[i] = seg.max()
+    return r_lo, r_hi, cnt, vsum, vmin, vmax
+
+
+def _ranges(rng, dtype, q_n):
+    """Adversarial range mix: point, inverted, whole-domain, page-scale."""
+    if np.issubdtype(np.dtype(dtype), np.floating):
+        lo = (rng.normal(size=q_n) * UNIVERSE / 4).astype(np.float32)
+        hi = lo + (rng.normal(size=q_n) * UNIVERSE / 4).astype(np.float32)
+    else:
+        lo = rng.integers(-100, UNIVERSE + 100, q_n).astype(np.int32)
+        hi = (lo + rng.integers(-200, UNIVERSE, q_n)).astype(np.int32)
+    k = max(q_n // 8, 1)
+    hi[:k] = lo[:k]                                 # point ranges
+    lo[k:2 * k] = np.iinfo(np.int32).min + 1 if dtype == np.int32 \
+        else np.float32(-1e30)                      # whole-domain prefix
+    return lo, hi
+
+
+def _check(idx, ref, lo, hi, check_values=True):
+    mk = np.array(sorted(ref), idx_key_dtype(ref))
+    mv = np.array([ref[k] for k in mk.tolist()], np.int32)
+    w_lo, w_hi, cnt, vsum, vmin, vmax = _oracle(mk, mv, lo, hi)
+    r = idx.scan_range(lo, hi)
+    np.testing.assert_array_equal(np.asarray(r.count), cnt)
+    np.testing.assert_array_equal(np.asarray(r.r_lo), w_lo)
+    np.testing.assert_array_equal(np.asarray(r.r_hi_excl), w_hi)
+    if check_values:
+        np.testing.assert_array_equal(np.asarray(r.vsum), vsum)
+        np.testing.assert_array_equal(np.asarray(r.vmin), vmin)
+        np.testing.assert_array_equal(np.asarray(r.vmax), vmax)
+    # materialized matches: values in merged key order + overflow flag
+    K = 8
+    rm = idx.scan_range(lo, hi, materialize=K)
+    vals = np.asarray(rm.values)
+    over = np.asarray(rm.overflow)
+    for i in range(lo.shape[0]):
+        k = min(int(cnt[i]), K)
+        np.testing.assert_array_equal(vals[i, :k], mv[w_lo[i]: w_lo[i] + k])
+        assert bool(over[i]) == (cnt[i] > K)
+
+
+def idx_key_dtype(ref):
+    for k in ref:
+        return np.float32 if isinstance(k, float) else np.int32
+    return np.int32
+
+
+def _run_immutable(seed, kind, dtype):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 4000))
+    if dtype == np.int32:
+        keys = np.unique(rng.integers(0, UNIVERSE, n).astype(np.int32))
+    else:
+        keys = np.unique((rng.normal(size=n) * UNIVERSE / 4)
+                         .astype(np.float32))
+    vals = rng.integers(-1000, 1000, keys.size).astype(np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind=kind, node_width=16,
+                                              leaf_width=128))
+    ref = dict(zip(keys.tolist(), vals.tolist()))
+    lo, hi = _ranges(rng, dtype, int(rng.integers(1, 150)))
+    _check(idx, ref, lo, hi)
+
+
+def _run_mutable(seed, capacity):
+    """Interleaved insert/scan trace over the paged mutable store: merges,
+    repacks and shadowing upserts all crossed by scans."""
+    rng = np.random.default_rng(seed)
+    n0 = int(rng.integers(0, 1500))
+    init = np.unique(rng.integers(0, UNIVERSE, n0).astype(np.int32)) \
+        if n0 else np.empty(0, np.int32)
+    vals = rng.integers(-1000, 1000, init.size).astype(np.int32)
+    idx = build_index(init, vals if init.size else None, IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=capacity,
+        leaf_width=128))
+    ref = dict(zip(init.tolist(), vals.tolist()))
+    for _ in range(int(rng.integers(2, 5))):
+        size = int(rng.integers(1, 400))
+        universe = list(ref) if ref and rng.random() < 0.4 else None
+        if universe is not None:      # upsert-heavy batch (shadows)
+            ks = np.array(universe, np.int32)[
+                rng.integers(0, len(universe), size)]
+        else:
+            ks = rng.integers(0, UNIVERSE, size).astype(np.int32)
+        vs = rng.integers(-1000, 1000, size).astype(np.int32)
+        idx.insert(ks, vs)
+        ref.update(zip(ks.tolist(), vs.tolist()))
+        lo, hi = _ranges(rng, np.int32, int(rng.integers(1, 100)))
+        if ref:
+            _check(idx, ref, lo, hi)
+        assert idx.n == len(ref)
+
+
+# -------------------------------------------------------------- drivers
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), kind=st.sampled_from(KINDS),
+           dtype=st.sampled_from([np.int32, np.float32]))
+    def test_scan_matches_oracle_immutable(seed, kind, dtype):
+        _run_immutable(seed, kind, dtype)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           capacity=st.sampled_from([32, 128, 512]))
+    def test_scan_matches_oracle_mutable(seed, capacity):
+        _run_mutable(seed, capacity)
+
+else:                                  # seeded fallback, same cases
+
+    @pytest.mark.parametrize("seed", range(3))
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("dtype", [np.int32, np.float32])
+    def test_scan_matches_oracle_immutable_seeded(seed, kind, dtype):
+        _run_immutable(seed * 101 + 7, kind, dtype)
+
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("capacity", [32, 128])
+    def test_scan_matches_oracle_mutable_seeded(seed, capacity):
+        _run_mutable(seed * 57 + 3, capacity)
