@@ -42,6 +42,11 @@ class IndexConfig:
     queue_deadline_s: float = 0.002  # max time a submit may wait in-queue
     queue_min_flush: int = 64    # floor of the adaptive flush threshold
     queue_adapt: bool = True     # occupancy feedback steers the threshold
+    # multi-tenant admission knobs (engine/admission.py, DESIGN.md §7.1)
+    queue_max_share: float = 1.0  # hard cap on one tenant's share of a flush
+    queue_adaptive_deadline: bool = True  # EWMA rate scales the flush window
+    queue_deadline_floor_s: float = 1e-4  # lower bound of the scaled window
+    queue_max_backlog: int = 0   # per-tenant pending-query limit (0 = off)
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -58,6 +63,18 @@ class IndexConfig:
         if self.queue_deadline_s < 0:
             raise ValueError(
                 f"queue_deadline_s must be >= 0, got {self.queue_deadline_s}")
+        if not (0.0 < self.queue_max_share <= 1.0):
+            raise ValueError(
+                f"queue_max_share must be in (0, 1], got "
+                f"{self.queue_max_share}")
+        if self.queue_deadline_floor_s < 0:
+            raise ValueError(
+                f"queue_deadline_floor_s must be >= 0, got "
+                f"{self.queue_deadline_floor_s}")
+        if self.queue_max_backlog < 0:
+            raise ValueError(
+                f"queue_max_backlog must be >= 0, got "
+                f"{self.queue_max_backlog}")
 
 
 @dataclass(frozen=True)

@@ -6,14 +6,18 @@
 # keeps the whole search a single jitted dispatch.
 from .schedule import (BucketPlan, DevicePlan, bucket_plan,  # noqa: F401
                        device_plan, executed_occupancy, ladder_grid,
-                       ladder_rungs, lane_arrays, plan_method, run_scheduled,
-                       run_scheduled_multi, select_rung, span_scan_plan,
-                       worst_case_steps)
+                       ladder_rungs, lane_arrays, occupancy_shares,
+                       plan_method, run_scheduled, run_scheduled_multi,
+                       select_rung, span_scan_plan, worst_case_steps)
 from .tiered import (TieredIndex, build, plan_tiers, search,  # noqa: F401
                      search_range, searcher)
 from .scan import (FlatAggregator, ScanResult, TieredScanner,  # noqa: F401
                    scanner_for)
 from .delta import DeltaBuffer  # noqa: F401
 from .store import MutableIndex  # noqa: F401
-from .queue import MicroBatchQueue, QueueFuture, QueueStats, index_probe_fn  # noqa: F401
+from .admission import (AdmissionPolicy, FlushAdmit,  # noqa: F401
+                        QueueOverflow, RateEstimator, TenantStats,
+                        effective_deadline)
+from .queue import (DEFAULT_TENANT, MicroBatchQueue,  # noqa: F401
+                    QueueFuture, QueueStats, index_probe_fn)
 from . import sharded  # noqa: F401

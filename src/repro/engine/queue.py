@@ -1,4 +1,5 @@
-"""Cross-request micro-batch scheduler (DESIGN.md §7).
+"""Cross-request micro-batch scheduler (DESIGN.md §7) with a multi-tenant
+admission tier (§7.1).
 
 The batch-oriented structures in this repo only pay off when batches are
 deep: the sort-and-bucket schedule's occupancy (DESIGN.md §2.1) collapses
@@ -12,17 +13,27 @@ applied across requests instead of within one.
 
 Mechanics:
 
-* ``submit(queries)`` enqueues one caller's point lookups and returns a
-  :class:`QueueFuture`; callers never see each other — each future resolves
-  to exactly its own results, in its own submitted order (the fused
-  pipeline un-permutes internally, so slicing the concatenated result by
-  arrival offsets restores per-caller request order).
-* A flush — ONE fused dispatch for everything pending — triggers on
-  **capacity** (pending queries reach the adaptive ``flush_at`` threshold,
-  or the hard ``capacity``), on **deadline** (the oldest pending submit has
-  waited ``deadline_s``; a daemon timer guards callers that never block),
-  or on **demand** (a caller blocks on ``result()`` — single-threaded
-  clients flush immediately instead of eating the deadline).
+* ``submit(queries, tenant=...)`` enqueues one caller's point lookups on
+  its tenant's lane and returns a :class:`QueueFuture`; callers never see
+  each other — each future resolves to exactly its own results, in its own
+  submitted order (the fused pipeline un-permutes internally, so slicing
+  the concatenated result by arrival offsets restores per-caller request
+  order). Submissions may be arbitrary pytrees whose leaves share a
+  leading batch axis (the decode path submits ``(cdf, u)`` pairs —
+  ``kernels.cdf_search.cdf_probe_fn``).
+* A flush — ONE fused dispatch — triggers on **capacity** (pending queries
+  reach the adaptive ``flush_at`` threshold, or the hard ``capacity``), on
+  **deadline** (the oldest pending submit has waited the *effective*
+  window; a daemon timer guards callers that never block), or on **demand**
+  (a caller blocks on ``result()``). What a flush admits is decided by the
+  weighted-fair admission policy (``engine/admission.py``): whole submits,
+  round-robin across tenant lanes, any tenant hard-capped at
+  ``max_share * capacity`` queries per flush — a hog's backlog defers to
+  later flushes instead of starving everyone else out of the dispatch.
+* **Adaptive deadline**: an EWMA arrival-rate estimate scales the flush
+  window by the depth the traffic can actually deliver
+  (``admission.effective_deadline``) — light traffic stops paying the full
+  window for a batch that cannot deepen.
 * **Occupancy feedback**: the executed plan's step count rides back out of
   the fused dispatch (``engine/store.py``) as a lazily-resolved thunk.
   Thunks resolve (one device-scalar read each) at the start of the *next*
@@ -30,8 +41,9 @@ Mechanics:
   the device stream anyway — never in ``submit``, so enqueueing a request
   cannot stall on device execution. Low executed occupancy means buckets
   were shallow — the queue raises ``flush_at`` (wait for deeper batches);
-  occupancy at or above target halves it back toward ``min_flush`` (don't
-  add latency the schedule can't use).
+  occupancy at or above target halves it back toward ``min_flush``. The
+  occupancy is also attributed to the flush's tenants by lane share
+  (``schedule.occupancy_shares``) for the per-tenant stats.
 
 The queue holds *queries*, not result copies: results stay device-resident
 pytree slices, and a flush adds no host↔device sync beyond what the
@@ -41,21 +53,27 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .schedule import _next_pow2
+from .admission import (AdmissionPolicy, QueueOverflow, RateEstimator,
+                        TenantStats, effective_deadline)
+from .schedule import _next_pow2, occupancy_shares
+
+DEFAULT_TENANT = "default"
 
 
 @dataclass
 class QueueStats:
     """Counters + executed-plan occupancy aggregate (mean over flushes that
     reported feedback). ``flush_at`` mirrors the current adaptive
-    threshold so callers can watch the steering."""
+    threshold so callers can watch the steering; ``tenants`` carries the
+    per-tenant ledger (admission.TenantStats)."""
     submits: int = 0
     queries: int = 0
     flushes: int = 0
@@ -63,10 +81,13 @@ class QueueStats:
     deadline_flushes: int = 0
     demand_flushes: int = 0
     manual_flushes: int = 0
+    capped_flushes: int = 0       # flushes that left admissible work behind
+    drops: int = 0                # submits rejected by a backlog limit
     max_batch: int = 0
     occ_sum: float = 0.0
     occ_n: int = 0
     flush_at: int = 0
+    tenants: Dict[Any, TenantStats] = field(default_factory=dict)
 
     @property
     def mean_occupancy(self) -> float:
@@ -76,11 +97,18 @@ class QueueStats:
     def mean_batch(self) -> float:
         return self.queries / self.flushes if self.flushes else 0.0
 
+    def tenant(self, key) -> TenantStats:
+        ts = self.tenants.get(key)
+        if ts is None:
+            ts = self.tenants[key] = TenantStats()
+        return ts
+
 
 class QueueFuture:
     """Result handle for one ``submit``. ``result()`` flushes the queue on
     demand if the batch has not gone out yet (so a lone synchronous caller
-    pays one dispatch, not one deadline).
+    pays one dispatch, not one deadline); under admission caps the demand
+    loop keeps flushing until *this* caller's submit is admitted.
 
     Resolution stores the *shared* flush result plus this caller's slice
     bounds; the per-caller slice is taken lazily on first ``result()`` —
@@ -100,6 +128,12 @@ class QueueFuture:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until resolved WITHOUT demand-flushing — the passive twin
+        of ``result()`` for callers (and tests) that want the queue's own
+        triggers (deadline timer, other callers) to do the flushing."""
+        return self._event.wait(timeout)
+
     def _resolve(self, shared_result: Any, lo: int, hi: int):
         self._raw = shared_result
         self._bounds = (lo, hi)
@@ -110,8 +144,12 @@ class QueueFuture:
         self._event.set()
 
     def result(self, timeout: Optional[float] = None) -> Any:
-        if not self._event.is_set():
-            self._queue.flush(reason="demand")
+        while not self._event.is_set():
+            # demand-flush until OUR submit is admitted: a capped flush can
+            # serve other tenants first, so one flush is not always enough
+            if self._queue.flush(reason="demand") == 0 and \
+                    not self._event.is_set():
+                break                         # nothing pending anywhere
         if not self._event.wait(timeout):
             raise TimeoutError("micro-batch result not ready")
         if self._error is not None:
@@ -124,8 +162,20 @@ class QueueFuture:
         return self._value
 
 
+def _leading_dim(queries) -> int:
+    leaves = jax.tree.leaves(queries)
+    if not leaves:
+        return 0
+    n = int(leaves[0].shape[0])
+    for leaf in leaves[1:]:
+        if int(leaf.shape[0]) != n:
+            raise ValueError("submission leaves must share a leading axis")
+    return n
+
+
 class MicroBatchQueue:
-    """Deadline/capacity micro-batcher over a batched ``search_fn``.
+    """Deadline/capacity micro-batcher over a batched ``search_fn``, with
+    per-tenant weighted-fair admission.
 
     ``search_fn(queries) -> (result, occupancy_thunk)`` — one fused
     dispatch over the whole batch; ``result`` is any pytree whose leaves
@@ -133,14 +183,22 @@ class MicroBatchQueue:
     ``occupancy_thunk`` is a zero-arg callable yielding the executed plan's
     lane occupancy (or None when the engine has no feedback to give).
     ``MutableIndex.lookup`` + ``pop_plan_feedback`` is the canonical
-    pairing — see :func:`index_probe_fn`.
+    pairing — see :func:`index_probe_fn`; the decode-step twin is
+    ``kernels.cdf_search.cdf_probe_fn``.
 
     ``flush_at`` (the adaptive capacity trigger) starts at ``min_flush``
     and is steered within [min_flush, capacity] by occupancy feedback;
-    ``capacity`` is the hard trigger. A single submit larger than capacity
-    is legal — it flushes immediately as one deep batch (aggregation never
-    splits a caller). ``now_fn``/``timer`` exist for deterministic tests
-    and the virtual-clock benchmark (``benchmarks/bench_queue.py``).
+    ``capacity`` is both the hard trigger and the flush budget the
+    admission policy packs against. A single submit larger than capacity
+    is legal — it flushes as one deep batch (admission never splits a
+    caller). ``max_share`` caps any tenant's slice of one flush;
+    ``set_weight`` steers the round-robin interleave. ``max_backlog`` (>0)
+    rejects a tenant's submits once its pending backlog exceeds that many
+    queries (``admission.QueueOverflow`` — the drop path; default
+    unlimited). ``adaptive_deadline`` scales the flush window by the EWMA
+    arrival rate (``deadline_floor_s`` bounds it below).
+    ``now_fn``/``timer`` exist for deterministic tests and the
+    virtual-clock benchmark (``benchmarks/bench_queue.py``).
 
     Flushed batches are padded to the next power of two (``pad_pow2``) with
     zero-queries whose lanes no caller slice ever reads: flush sizes are
@@ -152,119 +210,256 @@ class MicroBatchQueue:
     def __init__(self, search_fn: Callable, *, capacity: int = 4096,
                  deadline_s: float = 0.002, min_flush: int = 64,
                  adapt: bool = True, occupancy_target: float = 0.5,
-                 pad_pow2: bool = True,
+                 pad_pow2: bool = True, max_share: float = 1.0,
+                 quantum: int = 32, max_backlog: int = 0,
+                 adaptive_deadline: bool = False,
+                 deadline_floor_s: float = 1e-4, rate_alpha: float = 0.3,
+                 record_flushes: bool = False,
                  now_fn: Callable[[], float] = time.monotonic,
                  timer: bool = True):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         if deadline_s < 0:
             raise ValueError(f"deadline must be >= 0, got {deadline_s}")
+        if max_backlog < 0:
+            raise ValueError(f"max_backlog must be >= 0, got {max_backlog}")
         self._search_fn = search_fn
         self.capacity = int(capacity)
         self.pad_pow2 = bool(pad_pow2)
         self.deadline_s = float(deadline_s)
+        self.deadline_floor_s = min(float(deadline_floor_s), self.deadline_s)
+        self.adaptive_deadline = bool(adaptive_deadline)
         self.min_flush = max(1, min(int(min_flush), self.capacity))
         self.adapt = bool(adapt)
         self.occupancy_target = float(occupancy_target)
         self.flush_at = self.min_flush
+        self.max_backlog = int(max_backlog)
+        self.admission = AdmissionPolicy(self.capacity, max_share=max_share,
+                                         quantum=quantum)
+        self._rate = RateEstimator(alpha=rate_alpha)
         self._now = now_fn
         self._use_timer = bool(timer)
         self._lock = threading.RLock()
-        self._pending: list = []          # (queries, q_n, future) arrival order
+        # per-tenant FIFO lanes of (queries, q_n, future, t_enqueued)
+        self._lanes: Dict[Any, deque] = {}
         self._pending_queries = 0
         self._oldest_t: Optional[float] = None
         self._timer: Optional[threading.Timer] = None
-        self._feedback: list = []         # unresolved occupancy thunks
-        self._dtype = np.dtype(np.int32)  # for the all-empty flush
+        self._closed = False
+        # unresolved (occ_thunk, real, dispatched, tenant_counts)
+        self._feedback: list = []
+        # per-flush admission ledger (reason/counts/total) for the fairness
+        # property suite and the bench cap gate; None unless requested
+        self.flush_log: Optional[list] = [] if record_flushes else None
+        # pytree spec of the last non-empty submission, for the all-empty
+        # flush: (treedef, [(trailing_shape, dtype), ...])
+        self._spec = (jax.tree.structure(0), [((), np.dtype(np.int32))])
         self.stats = QueueStats(flush_at=self.flush_at)
 
+    # ------------------------------------------------------------- tenants
+    def set_weight(self, tenant, weight: float):
+        """Round-robin weight for a tenant (default 1.0): under contention
+        a weight-w tenant earns admission credit w times as fast."""
+        self.admission.set_weight(tenant, weight)
+
+    def effective_deadline(self) -> float:
+        """The flush window currently in force: ``deadline_s`` scaled by
+        the EWMA arrival rate when ``adaptive_deadline`` is on."""
+        if not self.adaptive_deadline:
+            return self.deadline_s
+        need = min(self.flush_at, self.capacity) - self._pending_queries
+        return effective_deadline(self.deadline_s, self.deadline_floor_s,
+                                  self._rate.rate, need)
+
     # ------------------------------------------------------------- enqueue
-    def submit(self, queries) -> QueueFuture:
-        """Enqueue one caller's point lookups; returns a future for exactly
-        those results in the caller's order. May flush inline (capacity).
-        Never blocks on the device: feedback resolution happens at the next
-        flush (whose dispatch waits on the device anyway), not here."""
-        if not isinstance(queries, jax.Array):
+    def submit(self, queries, tenant=DEFAULT_TENANT) -> QueueFuture:
+        """Enqueue one caller's point lookups on ``tenant``'s lane; returns
+        a future for exactly those results in the caller's order. May flush
+        inline (capacity trigger). Never blocks on the device: feedback
+        resolution happens at the next flush (whose dispatch waits on the
+        device anyway), not here."""
+        if not isinstance(queries, jax.Array) and not isinstance(
+                queries, (tuple, list, dict)):
             queries = np.asarray(queries)
-        q_n = int(queries.shape[0])
+        q_n = _leading_dim(queries)
         fut = QueueFuture(self)
         with self._lock:
+            if self._closed:
+                raise RuntimeError("submit on a closed MicroBatchQueue")
+            ts = self.stats.tenant(tenant)
+            lane = self._lanes.get(tenant)
+            if lane is None:
+                lane = self._lanes[tenant] = deque()
+            if self.max_backlog and q_n and \
+                    self._lane_queries(lane) + q_n > self.max_backlog:
+                ts.drops += 1
+                self.stats.drops += 1
+                fut._reject(QueueOverflow(
+                    f"tenant {tenant!r} backlog over {self.max_backlog} "
+                    f"queries"))
+                return fut
+            now = self._now()
             if q_n:
-                self._dtype = np.dtype(queries.dtype)
-            self._pending.append((queries, q_n, fut))
+                leaves = jax.tree.leaves(queries)
+                self._spec = (jax.tree.structure(queries),
+                              [(tuple(leaf.shape[1:]), np.dtype(leaf.dtype))
+                               for leaf in leaves])
+                self._rate.observe(now, q_n)
+            lane.append((queries, q_n, fut, now))
             self._pending_queries += q_n
             if self._oldest_t is None:
-                self._oldest_t = self._now()
+                self._oldest_t = now
             self.stats.submits += 1
             self.stats.queries += q_n
+            ts.submits += 1
+            ts.queries += q_n
             if self._pending_queries >= min(self.flush_at, self.capacity):
-                self._flush_locked("capacity")
+                # admission packs at most `capacity` per flush; keep going
+                # until the backlog is back under the trigger
+                while self._pending_queries >= min(self.flush_at,
+                                                   self.capacity):
+                    if self._flush_locked("capacity") == 0:
+                        break
             elif self._use_timer and self._timer is None:
-                self._arm_timer()
+                self._arm_timer(self.effective_deadline())
         return fut
+
+    @staticmethod
+    def _lane_queries(lane) -> int:
+        return sum(n for _, n, _, _ in lane)
 
     # -------------------------------------------------------------- flush
     def flush(self, reason: str = "manual") -> int:
-        """Dispatch everything pending as ONE fused batch; returns the
-        number of queries dispatched (0 when nothing was pending)."""
+        """Dispatch one admitted batch as ONE fused dispatch; returns the
+        number of queries dispatched (0 when nothing was pending). Under
+        admission caps a flush may leave work behind — it re-arms the
+        deadline timer for the leftovers."""
         with self._lock:
             return self._flush_locked(reason)
+
+    def drain(self) -> int:
+        """Flush until nothing is pending (close/shutdown helper);
+        returns total queries dispatched."""
+        total = 0
+        with self._lock:
+            while self._pending_queries or any(self._lanes.values()):
+                n = self._flush_locked("manual")
+                total += n
+                if n == 0 and not any(self._lanes.values()):
+                    break
+        return total
 
     def _flush_locked(self, reason: str) -> int:
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None
-        if not self._pending:
+        if not any(self._lanes.values()):
             return 0
         # resolve the previous flush's occupancy feedback now: its dispatch
         # has retired (or is about to, ahead of ours on the device stream),
         # so this never stalls an enqueueing caller the way draining in
         # submit() would
         self.drain_feedback()
-        batch, self._pending = self._pending, []
-        total, self._pending_queries = self._pending_queries, 0
-        self._oldest_t = None
+        admit = self.admission.plan(
+            {t: [n for _, n, _, _ in lane]
+             for t, lane in self._lanes.items() if lane})
+        now = self._now()
+        batch = []                          # (queries, q_n, fut, tenant)
+        for t in admit.service:
+            queries, q_n, fut, t_enq = self._lanes[t].popleft()
+            batch.append((queries, q_n, fut, t))
+            ts = self.stats.tenant(t)
+            ts.admitted += q_n
+            wait = max(now - t_enq, 0.0)
+            ts.wait_s += wait
+            ts.wait_max_s = max(ts.wait_max_s, wait)
+        if not batch:
+            return 0
+        total = admit.total
+        self._pending_queries -= total
+        leftovers = False
+        for t, lane in self._lanes.items():
+            if lane:
+                leftovers = True
+                self.stats.tenant(t).deferred += len(lane)
+        self._oldest_t = min(
+            (lane[0][3] for lane in self._lanes.values() if lane),
+            default=None)
         self.stats.flushes += 1
+        if leftovers:
+            self.stats.capped_flushes += 1
         self.stats.max_batch = max(self.stats.max_batch, total)
+        for t, n in admit.counts.items():
+            if n or t in {b[3] for b in batch}:
+                self.stats.tenant(t).flushes += 1
+        if self.flush_log is not None:
+            subs: Dict[Any, int] = {}
+            for t in admit.service:
+                subs[t] = subs.get(t, 0) + 1
+            self.flush_log.append({"reason": reason,
+                                   "counts": dict(admit.counts),
+                                   "submits": subs, "total": total})
         counter = f"{reason}_flushes"
         if not hasattr(self.stats, counter):   # free-text reason: file under
             counter = "manual_flushes"         # manual instead of raising
         setattr(self.stats, counter, getattr(self.stats, counter) + 1)
         try:
-            parts = [q for q, n, _ in batch if n]
+            parts = [q for q, n, _, _ in batch if n]
             pad = (_next_pow2(total) - total) if (self.pad_pow2 and total) \
                 else 0
-            if parts and any(isinstance(p, jax.Array) for p in parts):
-                if pad:                       # device-side pad: no transfer
-                    parts = parts + [jnp.zeros((pad,), parts[0].dtype)]
-                q = parts[0] if len(parts) == 1 else \
-                    jnp.concatenate([jnp.asarray(p) for p in parts])
-            elif parts:
-                if pad:
-                    parts = parts + [np.zeros((pad,), parts[0].dtype)]
-                q = parts[0] if len(parts) == 1 else np.concatenate(parts)
-            else:                             # all-empty flush stays total
-                q = np.zeros((0,), self._dtype)
+            q = self._concat(parts, pad)
             result, occ_thunk = self._search_fn(q)
             if occ_thunk is not None:
                 # the engine saw the padded batch; scale its occupancy back
                 # to real queries so pad lanes never flatter the steering
-                self._feedback.append((occ_thunk, total, total + pad))
+                self._feedback.append((occ_thunk, total, total + pad,
+                                       dict(admit.counts)))
             lo = 0
-            for _, n, fut in batch:
+            for _, n, fut, _ in batch:
                 hi = lo + n
                 fut._resolve(result, lo, hi)
                 lo = hi
         except BaseException as e:            # noqa: BLE001 — futures must not hang
-            for _, _, fut in batch:
+            for _, _, fut, _ in batch:
                 fut._reject(e)
             raise
+        finally:
+            if leftovers and self._use_timer and not self._closed \
+                    and self._timer is None:
+                age = self._now() - (self._oldest_t or self._now())
+                self._arm_timer(self.effective_deadline() - age)
         return total
+
+    def _concat(self, parts: list, pad: int):
+        """Concatenate submissions (pytrees sharing a structure) leaf-wise
+        along the batch axis, appending ``pad`` zero rows; an all-empty
+        flush materializes zero-length leaves from the recorded spec."""
+        if not parts:
+            treedef, specs = self._spec
+            return jax.tree.unflatten(
+                treedef, [np.zeros((0,) + shape, dt)
+                          for shape, dt in specs])
+
+        def cat(*leaves):
+            arrs = list(leaves)
+            on_device = any(isinstance(a, jax.Array) for a in arrs)
+            if pad:                           # device-side pad: no transfer
+                zeros = jnp.zeros if on_device else np.zeros
+                arrs.append(zeros((pad,) + tuple(arrs[0].shape[1:]),
+                                  arrs[0].dtype))
+            if len(arrs) == 1:
+                return arrs[0]
+            if on_device:
+                return jnp.concatenate([jnp.asarray(a) for a in arrs])
+            return np.concatenate(arrs)
+
+        return jax.tree.map(cat, *parts)
 
     # ----------------------------------------------------------- deadline
     def _arm_timer(self, delay: Optional[float] = None):
         timer_box = []
-        timer = threading.Timer(max(delay or self.deadline_s, 1e-4),
+        timer = threading.Timer(max(delay if delay is not None
+                                    else self.deadline_s, 1e-4),
                                 lambda: self._on_deadline(timer_box[0]))
         timer_box.append(timer)
         timer.daemon = True
@@ -273,23 +468,25 @@ class MicroBatchQueue:
 
     def _on_deadline(self, me: threading.Timer):
         with self._lock:
-            if self._timer is not me:
-                return                        # cancelled and superseded: a
-            self._timer = None                # newer timer owns the batch
-            if not self._pending:
+            if self._closed or self._timer is not me:
+                return                        # closed, or cancelled and
+            self._timer = None                # superseded: a newer timer
+            if not any(self._lanes.values()):  # owns the batch
                 return
+            window = self.effective_deadline()
             age = self._now() - (self._oldest_t or 0.0)
-            if age + 1e-6 >= self.deadline_s:
+            if age + 1e-6 >= window:
                 self._flush_locked("deadline")
             else:                             # raced a fresh batch: re-arm
-                self._arm_timer(self.deadline_s - age)
+                self._arm_timer(window - age)
 
     def poll(self) -> int:
         """Timer-free deadline check (virtual-clock benchmarks / manual
-        drivers): flush iff the oldest pending submit has aged out."""
+        drivers): flush iff the oldest pending submit has aged past the
+        effective window."""
         with self._lock:
-            if self._pending and \
-                    self._now() - self._oldest_t >= self.deadline_s:
+            if any(self._lanes.values()) and \
+                    self._now() - self._oldest_t >= self.effective_deadline():
                 return self._flush_locked("deadline")
         return 0
 
@@ -300,13 +497,18 @@ class MicroBatchQueue:
         never from submit, which must not block on the device) and steer
         ``flush_at``: shallow buckets -> wait deeper; target met -> decay
         back toward min_flush. Occupancy is scaled to *real* queries so the
-        pow2 pad lanes never flatter the signal."""
+        pow2 pad lanes never flatter the signal, and attributed to the
+        flush's tenants by lane share for the per-tenant ledger."""
         with self._lock:
             pending, self._feedback = self._feedback, []
-        for thunk, real, dispatched in pending:
+        for thunk, real, dispatched, counts in pending:
             occ = float(thunk()) * (real / dispatched if dispatched else 0.0)
             self.stats.occ_sum += occ
             self.stats.occ_n += 1
+            for t, share in occupancy_shares(counts, occ).items():
+                ts = self.stats.tenant(t)
+                ts.occ_sum += share
+                ts.occ_n += 1
             if not self.adapt:
                 continue
             if occ < self.occupancy_target:
@@ -316,13 +518,27 @@ class MicroBatchQueue:
         self.stats.flush_at = self.flush_at
 
     # -------------------------------------------------------------- admin
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def close(self):
-        """Flush leftovers and cancel the deadline timer."""
-        self.flush(reason="manual")
+        """Drain leftovers and cancel the deadline timer. Idempotent, and
+        safe against a timer firing concurrently: the close flag is set
+        under the lock before the final drain, so a racing timer callback
+        (which re-checks the flag and its own identity under the same
+        lock) can never flush into a shut-down queue; submits after close
+        raise instead of landing on a dead lane."""
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             if self._timer is not None:
                 self._timer.cancel()
                 self._timer = None
+            while any(self._lanes.values()):
+                if self._flush_locked("manual") == 0:
+                    break                     # defensive: cannot starve
         self.drain_feedback()
 
 

@@ -172,6 +172,19 @@ def executed_occupancy(q_n: int, steps_used: int, tile: int,
     return q_n / float(rung * tile)
 
 
+def occupancy_shares(counts: dict, occupancy: float) -> dict:
+    """Attribute one flush's executed-plan occupancy to its tenants by lane
+    share: tenant t contributed ``counts[t]`` of the batch's real lanes, so
+    its share of the occupancy signal is ``occupancy * counts[t] / total``.
+    Shares sum to the flush occupancy (up to float rounding), so per-tenant
+    EWMA/means stay comparable to the queue-level signal. Zero-count
+    tenants (admitted only empty submits) get 0.0."""
+    total = sum(counts.values())
+    if total <= 0:
+        return {t: 0.0 for t in counts}
+    return {t: occupancy * (n / total) for t, n in counts.items()}
+
+
 def run_scheduled_multi(plan: DevicePlan, qs: tuple, q_n: int,
                         tile: int, g_cap: int, body: Callable) -> tuple:
     """Run a per-(step, lane) ``body`` over a DevicePlan at the ladder rung

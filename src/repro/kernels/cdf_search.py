@@ -9,8 +9,17 @@ don't apply — but the k-ary idea does: one pass of wide compares
 Grid: (batch tiles) x (vocab chunks); the vocab axis revisits the same
 output block and accumulates, so arbitrarily large vocabularies stream
 through VMEM in `chunk`-sized tiles.
+
+Decode-step micro-batching (DESIGN.md §7.1): one request's decode step is
+a B=1 inversion — a near-empty launch, exactly the shallow-batch problem
+the micro-batch queue solves for index probes. :func:`cdf_probe_fn` adapts
+the inversion to the queue's ``search_fn`` contract over ``(cdf, u)``
+pytree submissions, so steady-state decoding across requests flushes as
+one fused dispatch.
 """
 from __future__ import annotations
+
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -47,3 +56,49 @@ def cdf_search(cdf: jnp.ndarray, u: jnp.ndarray, *, tile_b: int = 8,
         interpret=interpret,
     )(cdf, u[:, None])
     return jnp.minimum(out[:, 0], V - 1)
+
+
+def invert_cdf(cdf: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """jnp reference for :func:`cdf_search` (no tiling constraints):
+    first index with cdf >= u, i.e. ``sum(cdf < u)``, clipped to V-1.
+    Bit-identical to the kernel on unpadded rows — the oracle the decode
+    batching property suite checks both paths against."""
+    idx = jnp.sum(cdf < u[:, None], axis=-1).astype(jnp.int32)
+    return jnp.minimum(idx, cdf.shape[-1] - 1)
+
+
+def cdf_probe_fn(*, use_kernel: bool = False, tile_b: int = 8,
+                 chunk: int = 512, interpret: bool = True) -> Callable:
+    """Adapt CDF inversion to the micro-batch queue's ``search_fn``
+    contract (``engine.queue.MicroBatchQueue``) — the decode-step twin of
+    ``engine.queue.index_probe_fn``.
+
+    Submissions are ``(cdf [b, V], u [b])`` pytrees; the queue concatenates
+    them along the batch axis (all submitters must share V — one engine,
+    one vocabulary) and pads with zero rows, whose inversion lands on index
+    0 and is never read back through any caller's slice. The probe is one
+    jitted dispatch over the flushed batch; flush sizes ride the queue's
+    power-of-two pad ladder, so the jit cache stays O(log B) entries.
+
+    Occupancy feedback: the inversion has no bucket schedule, so "executed
+    occupancy" reduces to the real-lane fraction of the padded batch — the
+    probe reports 1.0 and the queue scales it by real/dispatched, making
+    the feedback exactly the pad waste. Light decode traffic therefore
+    steers ``flush_at`` just like shallow index batches do.
+    """
+    if use_kernel:
+        from . import ops as kops   # lazy: ops imports this module
+
+        def _invert(cdf, u):
+            return kops.topp_search(cdf, u, tile_b=tile_b, chunk=chunk,
+                                    interpret=interpret)
+    else:
+        _invert = jax.jit(invert_cdf)
+
+    def probe(batch):
+        cdf, u = batch
+        if cdf.shape[0] == 0:
+            return jnp.zeros((0,), jnp.int32), None
+        return _invert(jnp.asarray(cdf), jnp.asarray(u)), (lambda: 1.0)
+
+    return probe

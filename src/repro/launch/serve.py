@@ -39,6 +39,19 @@ def main():
     ap.add_argument("--no-queue-adapt", action="store_true",
                     help="freeze the queue's flush threshold instead of "
                          "steering it by executed-plan occupancy")
+    ap.add_argument("--queue-max-share", type=float, default=1.0,
+                    help="admission tier (DESIGN.md §7.1): hard cap on one "
+                         "tenant's share of a flush, e.g. 0.25")
+    ap.add_argument("--no-adaptive-deadline", action="store_true",
+                    help="pay the full flush window regardless of the "
+                         "EWMA arrival-rate estimate")
+    ap.add_argument("--no-decode-queue", action="store_true",
+                    help="sample decode steps inline instead of batching "
+                         "their CDF inversions through the decode queue")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="spread requests round-robin over N tenant ids so "
+                         "probes and decode steps ride per-tenant "
+                         "admission lanes (0 = single default tenant)")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-p", type=float, default=0.9)
     args = ap.parse_args()
@@ -63,7 +76,11 @@ def main():
                                  mutable=not args.wholesale,
                                  queue_capacity=args.queue_capacity,
                                  queue_deadline_s=args.queue_deadline_us * 1e-6,
-                                 queue_adapt=not args.no_queue_adapt),
+                                 queue_adapt=not args.no_queue_adapt,
+                                 queue_max_share=args.queue_max_share,
+                                 queue_adaptive_deadline=
+                                 not args.no_adaptive_deadline),
+        decode_batching=not args.no_decode_queue,
         sampler=SamplerConfig(temperature=args.temperature, top_p=args.top_p))
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
@@ -74,8 +91,12 @@ def main():
     if cfg.family in ("vlm", "audio"):
         mem = jax.random.normal(jax.random.PRNGKey(5),
                                 (1, cfg.encoder_seq, cfg.d_model))
+    tenants = None
+    if args.tenants > 0:
+        tenants = [f"t{i % args.tenants}" for i in range(args.requests)]
     for _ in range(max(args.rounds, 1)):
-        out = eng.generate(prompts, steps=args.steps, memory=mem)
+        out = eng.generate(prompts, steps=args.steps, memory=mem,
+                           tenants=tenants)
     s = eng.stats
     print(f"tokens out: {out.shape}")
     print(f"prefill computed/reused: {s.prefill_tokens}/{s.reused_tokens}")
@@ -85,6 +106,16 @@ def main():
     print(f"probe queue:  {s.probe_batches} fused batches in "
           f"{s.probe_s:.3f}s, mean executed-plan occupancy "
           f"{s.probe_occupancy:.3f}")
+    if s.decode_flushes:
+        print(f"decode queue: {s.decode_flushes} fused inversion batches, "
+              f"mean occupancy {s.decode_occupancy:.3f}")
+    for (path, t), ts in sorted(s.tenants.items(),
+                                key=lambda kv: (kv[0][0], str(kv[0][1]))):
+        print(f"  tenant[{path}:{t}]: {ts.queries} queries / "
+              f"{ts.flushes} flushes, admitted {ts.admitted}, "
+              f"deferred {ts.deferred}, drops {ts.drops}, "
+              f"wait mean/max {ts.mean_wait_s*1e6:.0f}/"
+              f"{ts.wait_max_s*1e6:.0f}us, occ share {ts.mean_occ_share:.3f}")
     if eng.store.index_config.mutable:
         print(f"write path:   {eng.store.index_stats}")
 

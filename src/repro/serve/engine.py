@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from ..core import IndexConfig
 from ..models import transformer as T
 from . import kv_cache as KV
-from .sampler import SamplerConfig, sample
+from .sampler import SamplerConfig, sample, sample_queued
 
 
 @dataclass
@@ -35,16 +35,25 @@ class EngineStats:
     probe_s: float = 0.0          # wall time in batched store probes
     probe_batches: int = 0        # fused probe dispatches (queue flushes)
     probe_occupancy: float = 0.0  # mean executed-plan lane occupancy
+    # decode-step batching (DESIGN.md §7.1): CDF inversions through the
+    # decode micro-batch queue — one fused inversion per flush
+    decode_flushes: int = 0
+    decode_occupancy: float = 0.0
+    # per-tenant ledger (engine.admission.TenantStats), merged across the
+    # probe and decode queues; keys are the tenant ids passed to generate
+    tenants: dict = field(default_factory=dict)
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, max_len: int = 256, page_size: int = 16,
                  index_config: Optional[IndexConfig] = None,
                  sampler: SamplerConfig = SamplerConfig(temperature=0.0),
+                 decode_batching: bool = True,
                  compute_dtype=jnp.float32):
         self.cfg, self.params = cfg, params
         self.max_len, self.page_size = max_len, page_size
         self.sampler = sampler
+        self.decode_batching = decode_batching
         self.dtype = compute_dtype
         self.pageable = cfg.family in ("dense", "moe")
         # default probe structure is the mutable tiered engine (DESIGN.md
@@ -59,8 +68,39 @@ class ServeEngine:
                                                    plan="device",
                                                    mutable=True))
         self.stats = EngineStats()
+        self._decode_queue = None
         self._jit_decode = jax.jit(
             lambda p, t, c: T.decode_step(cfg, p, t, c, compute_dtype=compute_dtype))
+
+    def decode_queue(self):
+        """The decode-step micro-batch queue (DESIGN.md §7.1), lazily built
+        from the same IndexConfig knobs as the store's probe queue: every
+        sampled step's CDF inversions submit per tenant and flush as one
+        fused dispatch. Timer-free — ``generate`` drives flushes
+        synchronously (each step's blocking ``result()`` demand-flushes),
+        so no daemon thread races the decode loop."""
+        if self._decode_queue is None:
+            from ..engine.queue import MicroBatchQueue
+            from ..kernels.cdf_search import cdf_probe_fn
+            c = self.store.index_config
+            self._decode_queue = MicroBatchQueue(
+                cdf_probe_fn(use_kernel=self.sampler.use_kernel),
+                capacity=c.queue_capacity, deadline_s=c.queue_deadline_s,
+                min_flush=c.queue_min_flush, adapt=c.queue_adapt,
+                max_share=c.queue_max_share,
+                adaptive_deadline=c.queue_adaptive_deadline,
+                deadline_floor_s=c.queue_deadline_floor_s,
+                max_backlog=c.queue_max_backlog, timer=False)
+        return self._decode_queue
+
+    def _fold_tenants(self, queue, path: str):
+        """Surface a queue's per-tenant ledger in EngineStats.tenants under
+        a per-queue namespace — keys are ``(path, tenant)`` with path in
+        {"probe", "decode"}. The queue's TenantStats objects are cumulative
+        and live, so referencing them (not copying) keeps the engine view
+        always current with zero bookkeeping."""
+        for t, ts in queue.stats.tenants.items():
+            self.stats.tenants[(path, t)] = ts
 
     # ------------------------------------------------------------- prefill
     def prefill_one(self, tokens: np.ndarray, memory=None, probe=None):
@@ -101,32 +141,43 @@ class ServeEngine:
         return logits, cache
 
     # ------------------------------------------------------------- probes
-    def _probe_batch(self, prompts: list):
+    def _probe_batch(self, prompts: list, tenants=None):
         """One fused store probe for the whole prompt batch, routed through
         the store's micro-batch queue (DESIGN.md §7): B prompts submit
-        their hash chains, the queue flushes them as ONE index dispatch.
-        Probes share the pre-batch store snapshot (see
-        PrefixPageStore.lookup_batch). Returns per-prompt (n_hit, payloads)
-        and folds the queue's executed-plan stats into EngineStats."""
+        their hash chains (on their tenants' admission lanes when given),
+        the queue flushes them as ONE index dispatch. Probes share the
+        pre-batch store snapshot (see PrefixPageStore.lookup_batch).
+        Returns per-prompt (n_hit, payloads) and folds the queue's
+        executed-plan + per-tenant stats into EngineStats."""
         if not self.pageable:
             return [None] * len(prompts)
         t0 = time.perf_counter()
         probes = self.store.lookup_batch(
-            [np.asarray(p, np.int32) for p in prompts])
+            [np.asarray(p, np.int32) for p in prompts], tenants=tenants)
         self.stats.probe_s += time.perf_counter() - t0
         queue = self.store.probe_queue()
         queue.drain_feedback()
         self.stats.probe_batches = queue.stats.flushes
         self.stats.probe_occupancy = queue.stats.mean_occupancy
+        self._fold_tenants(queue, "probe")
         return probes
 
     # ------------------------------------------------------------- decode
-    def generate(self, prompts: list, steps: int, rng=None, memory=None):
+    def generate(self, prompts: list, steps: int, rng=None, memory=None,
+                 tenants=None):
         """Prefill each prompt (with reuse), then decode `steps` tokens for
         the whole batch. Store probes for all B prompts go out as one fused
-        micro-batch before the prefill loop. Returns [B, steps] token ids."""
+        micro-batch before the prefill loop; sampled decode steps route
+        their CDF inversions through the decode queue (one fused inversion
+        per step, DESIGN.md §7.1) unless ``decode_batching=False``.
+        ``tenants`` (one id per prompt) lands both the probes and the
+        decode submissions on per-tenant admission lanes. Returns
+        [B, steps] token ids."""
         rng = rng if rng is not None else jax.random.PRNGKey(0)
-        probes = self._probe_batch(prompts)
+        if tenants is not None and len(tenants) != len(prompts):
+            raise ValueError(f"tenants must have one id per prompt: "
+                             f"{len(tenants)} != {len(prompts)}")
+        probes = self._probe_batch(prompts, tenants=tenants)
         revision = self.store.revision
         logits_list, caches = [], []
         for p, probe in zip(prompts, probes):
@@ -151,13 +202,24 @@ class ServeEngine:
             cache = caches[0]
         logits = jnp.concatenate(logits_list, axis=0)
         toks_out = []
+        use_queue = self.decode_batching and self.sampler.temperature != 0.0
+        dq = self.decode_queue() if use_queue else None
         t0 = time.perf_counter()
         for i in range(steps):
             rng, k = jax.random.split(rng)
-            nxt = sample(logits, k, self.sampler)
+            if use_queue:
+                nxt = sample_queued(logits, k, self.sampler, dq,
+                                    tenants=tenants)
+            else:
+                nxt = sample(logits, k, self.sampler)
             toks_out.append(nxt)
             logits, cache = self._jit_decode(self.params, nxt, cache)
         jax.block_until_ready(logits)
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.decode_tokens += steps * len(prompts)
+        if dq is not None:
+            dq.drain_feedback()
+            self.stats.decode_flushes = dq.stats.flushes
+            self.stats.decode_occupancy = dq.stats.mean_occupancy
+            self._fold_tenants(dq, "decode")
         return jnp.stack(toks_out, axis=1)

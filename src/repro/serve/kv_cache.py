@@ -195,15 +195,24 @@ class PrefixPageStore:
                 # self._index between flushes
                 lambda q: index_probe_fn(self._index)(q),
                 capacity=c.queue_capacity, deadline_s=c.queue_deadline_s,
-                min_flush=c.queue_min_flush, adapt=c.queue_adapt)
+                min_flush=c.queue_min_flush, adapt=c.queue_adapt,
+                max_share=c.queue_max_share,
+                adaptive_deadline=c.queue_adaptive_deadline,
+                deadline_floor_s=c.queue_deadline_floor_s,
+                max_backlog=c.queue_max_backlog)
         return self._queue
 
-    def lookup_batch(self, prompts: list):
+    def lookup_batch(self, prompts: list, tenants: Optional[list] = None):
         """Longest reusable prefix for MANY prompts with ONE fused index
         probe: every prompt's hash chain is submitted to the micro-batch
         queue, the first blocking result demand-flushes the lot as a single
         deep dispatch, and each prompt verifies its own slice. Returns
         ``[(n_pages_hit, payloads), ...]`` in prompt order.
+
+        ``tenants`` (optional, one id per prompt) lands each prompt's probe
+        on that tenant's admission lane (DESIGN.md §7.1) — under contention
+        the flush is shared fairly instead of FIFO, and per-tenant
+        wait/occupancy stats accrue in the queue ledger.
 
         Probes in one batch see the same store snapshot: a prompt cannot
         reuse pages another prompt of the *same* batch is about to insert
@@ -216,7 +225,10 @@ class PrefixPageStore:
             return [(0, [])] * len(prompts)
         hs_list = [chain_hashes(p, self.page_size) for p in prompts]
         queue = self.probe_queue()
-        futs = [queue.submit(hs) if hs.size else None for hs in hs_list]
+        from ..engine.queue import DEFAULT_TENANT
+        tenants = tenants or [DEFAULT_TENANT] * len(prompts)
+        futs = [queue.submit(hs, tenant=t) if hs.size else None
+                for hs, t in zip(hs_list, tenants)]
         out = []
         for prompt, hs, fut in zip(prompts, hs_list, futs):
             if fut is None:

@@ -1,0 +1,319 @@
+"""Property suite for the multi-tenant admission tier (DESIGN.md §7.1).
+
+Three oracles over arbitrary interleaved multi-tenant traces:
+
+* **policy invariants** — a shadow-model simulation drives
+  ``AdmissionPolicy.plan`` with random lanes/weights/caps and checks, per
+  flush: (a) no tenant exceeds its cap except by a single unsplittable
+  submit, (b) the flush never exceeds capacity except likewise, (c)
+  admitted submits are each lane's FIFO prefix, (d) work conservation — a
+  flush that closes below capacity left no tenant behind unless its head
+  submit was cap- or budget-blocked.
+* **end-to-end queue trace** — random submit/advance-clock/poll traces
+  against a real tiered index under a virtual clock: every caller's result
+  must be bit-identical to the unqueued ``Index.lookup`` of exactly its own
+  queries (request order restored), and the per-flush ledger must satisfy
+  the same cap/budget invariants.
+* **rate/deadline units** — RateEstimator EWMA algebra and the
+  effective_deadline scaling law.
+
+Runs under hypothesis when installed; a seeded parametrized fallback
+drives the same cases otherwise (the test_scan_property.py idiom).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import IndexConfig, build_index
+from repro.engine.admission import (AdmissionPolicy, RateEstimator,
+                                    effective_deadline)
+from repro.engine.queue import MicroBatchQueue, index_probe_fn
+
+
+# ---------------------------------------------------------- policy oracle
+def _check_plan(policy, lanes, admit):
+    """The four per-flush invariants against a pending snapshot."""
+    cap, capacity = policy.cap_queries, policy.capacity
+    taken = {t: 0 for t in lanes}
+    total = 0
+    for t in admit.service:                       # (c) FIFO prefix + counts
+        assert taken[t] < len(lanes[t]), f"tenant {t}: popped past its lane"
+        total += lanes[t][taken[t]]
+        taken[t] += 1
+    assert total == admit.total
+    assert sum(admit.counts.values()) == admit.total
+    for t, cnt in admit.counts.items():
+        assert cnt == sum(lanes[t][: taken.get(t, 0)])
+        # (a) cap: only a single oversized (non-empty — empty submits don't
+        # consume the exemption) submit may exceed it
+        if cnt > cap:
+            nonempty = sum(1 for s in lanes[t][: taken.get(t, 0)] if s)
+            assert nonempty == 1, \
+                f"tenant {t}: {cnt} > cap {cap} across {nonempty} submits"
+    # (b) budget: only a single oversized submit may exceed capacity
+    if admit.total > capacity:
+        sizes = [s for t in lanes for s in lanes[t][: taken.get(t, 0)] if s]
+        assert len(sizes) == 1, \
+            f"{admit.total} > capacity {capacity} across {len(sizes)} submits"
+    # (d) work conservation: leftovers only when cap- or budget-blocked
+    if admit.total < capacity:
+        for t, lane in lanes.items():
+            if taken.get(t, 0) < len(lane):
+                head = lane[taken.get(t, 0)]
+                cnt = admit.counts.get(t, 0)
+                cap_blocked = cnt and cnt + head > cap
+                budget_blocked = admit.total and admit.total + head > capacity
+                assert cap_blocked or budget_blocked, (
+                    f"non-conserving: tenant {t} head submit of {head} "
+                    f"skipped at count {cnt}/{cap}, flush "
+                    f"{admit.total}/{capacity}")
+
+
+def _run_policy_trace(seed):
+    rng = np.random.default_rng(seed)
+    capacity = int(rng.integers(8, 256))
+    policy = AdmissionPolicy(capacity,
+                             max_share=float(rng.uniform(0.1, 1.0)),
+                             quantum=int(rng.integers(1, 64)))
+    n_tenants = int(rng.integers(1, 6))
+    tenants = [f"t{i}" for i in range(n_tenants)]
+    for t in tenants:
+        if rng.random() < 0.5:
+            policy.set_weight(t, float(rng.uniform(0.25, 4.0)))
+    lanes = {t: [] for t in tenants}
+    for _ in range(int(rng.integers(3, 12))):     # rounds of arrive + flush
+        for t in tenants:
+            for _ in range(int(rng.integers(0, 4))):
+                # size mix: empty, small, near-cap, oversized
+                size = int(rng.choice([0, 1, int(rng.integers(1, 16)),
+                                       int(rng.integers(1, capacity + 40))]))
+                lanes[t].append(size)
+        pending = {t: list(lane) for t, lane in lanes.items() if lane}
+        if not pending:
+            continue
+        admit = policy.plan(pending)
+        _check_plan(policy, pending, admit)
+        served = {t: 0 for t in pending}
+        for t in admit.service:                   # pop admitted prefixes
+            served[t] += 1
+        for t, k in served.items():
+            lanes[t] = lanes[t][k:]
+    # drain: repeated plans must empty every lane (termination/progress)
+    for _ in range(10_000):
+        pending = {t: list(lane) for t, lane in lanes.items() if lane}
+        if not pending:
+            break
+        admit = policy.plan(pending)
+        assert admit.service, "plan admitted nothing from non-empty lanes"
+        _check_plan(policy, pending, admit)
+        served = {}
+        for t in admit.service:
+            served[t] = served.get(t, 0) + 1
+        for t, k in served.items():
+            lanes[t] = lanes[t][k:]
+    assert not any(lanes.values())
+
+
+# ----------------------------------------------------- end-to-end queue
+_STORE = {}
+
+
+def _index(n=4096):
+    if n not in _STORE:
+        rng = np.random.default_rng(7)
+        keys = np.unique(rng.integers(0, 2**30, int(n * 1.2)
+                                      ).astype(np.int32))[:n]
+        vals = np.arange(keys.size, dtype=np.int32) * 5
+        idx = build_index(keys, vals, IndexConfig(kind="tiered",
+                                                  mutable=True))
+        idx.flush()
+        _STORE[n] = (keys, idx)
+    return _STORE[n]
+
+
+def _run_queue_trace(seed):
+    keys, idx = _index()
+    rng = np.random.default_rng(seed)
+    capacity = int(rng.choice([32, 64, 128]))
+    max_share = float(rng.choice([0.25, 0.5, 1.0]))
+    t = {"now": 0.0}
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=capacity,
+                        min_flush=int(rng.integers(1, capacity + 1)),
+                        deadline_s=0.01, max_share=max_share,
+                        adapt=bool(rng.integers(0, 2)),
+                        adaptive_deadline=bool(rng.integers(0, 2)),
+                        record_flushes=True,
+                        now_fn=lambda: t["now"], timer=False)
+    tenants = [f"t{i}" for i in range(int(rng.integers(1, 5)))]
+    submitted = []                                # (queries, future)
+    for _ in range(int(rng.integers(4, 30))):
+        ev = rng.random()
+        if ev < 0.7:                              # submit
+            tn = tenants[int(rng.integers(0, len(tenants)))]
+            k = int(rng.choice([0, 1, 3, 8, 21]))
+            qs = np.concatenate([
+                keys[rng.integers(0, keys.size, k)],
+                rng.integers(0, 2**30, int(rng.integers(0, 3))
+                             ).astype(np.int32)])
+            submitted.append((qs, q.submit(qs, tenant=tn)))
+        elif ev < 0.9:                            # time passes
+            t["now"] += float(rng.uniform(0.001, 0.02))
+            q.poll()
+        else:                                     # a caller blocks
+            if submitted:
+                submitted[int(rng.integers(0, len(submitted)))][1].result()
+    q.close()
+    # (b)+(c): every query appears exactly once, in caller order, and the
+    # result is bit-identical to the unqueued lookup
+    for qs, fut in submitted:
+        assert fut.done(), "close() left a future unresolved"
+        got = fut.result()
+        want = idx.lookup(qs)
+        np.testing.assert_array_equal(np.asarray(got.rank),
+                                      np.asarray(want.rank))
+        np.testing.assert_array_equal(np.asarray(got.found),
+                                      np.asarray(want.found))
+        np.testing.assert_array_equal(np.asarray(got.values),
+                                      np.asarray(want.values))
+    # (a)+(d): the per-flush admission ledger respects cap and budget
+    cap = q.admission.cap_queries
+    for entry in q.flush_log:
+        for tn, cnt in entry["counts"].items():
+            assert cnt <= max(cap, max(entry["counts"].values())), \
+                f"flush ledger: tenant {tn} over cap"
+            if cnt > cap:                          # oversized single submit
+                assert cnt == entry["counts"][tn]
+    total_admitted = sum(e["total"] for e in q.flush_log)
+    assert total_admitted == sum(len(qs) for qs, _ in submitted)
+    assert q.stats.queries == total_admitted
+
+
+# -------------------------------------------------------------- drivers
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_admission_policy_trace_invariants(seed):
+        _run_policy_trace(seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_queue_multi_tenant_trace_oracle(seed):
+        _run_queue_trace(seed)
+
+else:                                  # seeded fallback, same cases
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_admission_policy_trace_invariants_seeded(seed):
+        _run_policy_trace(seed * 211 + 17)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_queue_multi_tenant_trace_oracle_seeded(seed):
+        _run_queue_trace(seed * 97 + 5)
+
+
+# ------------------------------------------------------- units: fairness
+def test_cap_blocks_hog_but_admits_light_tenants():
+    policy = AdmissionPolicy(100, max_share=0.25)
+    admit = policy.plan({"hog": [20, 20, 20, 20], "a": [5], "b": [5]})
+    assert admit.counts["hog"] <= policy.cap_queries == 25
+    assert admit.counts["a"] == 5 and admit.counts["b"] == 5
+
+
+def test_weights_steer_contended_shares():
+    policy = AdmissionPolicy(64, quantum=8)
+    policy.set_weight("heavy", 2.0)
+    # both oversubscribed with unit submits; heavy should land ~2x
+    admit = policy.plan({"heavy": [1] * 100, "light": [1] * 100})
+    assert admit.total == 64
+    assert admit.counts["heavy"] > admit.counts["light"]
+
+
+def test_oversized_first_submit_is_never_starved():
+    policy = AdmissionPolicy(32, max_share=0.5)
+    admit = policy.plan({"big": [80]})
+    assert admit.counts["big"] == 80 and admit.total == 80
+    # and with competition it still lands eventually (alone in its flush
+    # or after the others drain), never deadlocks
+    lanes = {"big": [80], "small": [4] * 8}
+    for _ in range(10):
+        pending = {t: l for t, l in lanes.items() if l}
+        if not pending:
+            break
+        admit = policy.plan(pending)
+        assert admit.service
+        served = {}
+        for t in admit.service:
+            served[t] = served.get(t, 0) + 1
+        for t, k in served.items():
+            lanes[t] = lanes[t][k:]
+    assert not any(lanes.values())
+
+
+def test_rotation_prevents_positional_bias():
+    """With identical demand, service across flushes must not always start
+    at the same tenant."""
+    policy = AdmissionPolicy(8, quantum=8)
+    first = []
+    for _ in range(4):
+        admit = policy.plan({"a": [4, 4], "b": [4, 4], "c": [4, 4]})
+        first.append(admit.service[0])
+    assert len(set(first)) > 1
+
+
+# ------------------------------------------------- units: rate/deadline
+def test_rate_estimator_ewma():
+    r = RateEstimator(alpha=0.5)
+    assert r.observe(0.0, 10) == 0.0              # no estimate yet
+    assert r.observe(0.01, 10) == pytest.approx(1000.0)   # first real sample
+    # second inter-arrival at 500 q/s: EWMA midpoint
+    assert r.observe(0.03, 0) == pytest.approx(750.0)
+    # same-instant bursts accumulate and attribute to the next gap
+    r2 = RateEstimator(alpha=0.5)
+    r2.observe(0.0, 5)
+    r2.observe(0.0, 5)
+    assert r2.observe(0.0, 5) == 0.0
+    assert r2.observe(0.1, 1) == pytest.approx(150.0)     # 15 q over 0.1s
+    with pytest.raises(ValueError):
+        RateEstimator(alpha=0.0)
+
+
+def test_effective_deadline_scaling():
+    full, floor = 0.002, 1e-4
+    # no estimate: pay the full window
+    assert effective_deadline(full, floor, 0.0, 100) == full
+    # heavy traffic fills the need within the window: full window kept
+    assert effective_deadline(full, floor, 1e6, 100) == full
+    # light traffic: window scales down proportionally, floored
+    light = effective_deadline(full, floor, 1000.0, 100)
+    assert floor <= light < full
+    assert light == pytest.approx(max(floor, full * (1000.0 * full) / 100))
+    assert effective_deadline(full, floor, 1e-3, 100) == floor
+    # threshold already met: flush asap
+    assert effective_deadline(full, floor, 1000.0, 0) == floor
+
+
+def test_adaptive_deadline_shrinks_queue_window():
+    """A queue with adaptive_deadline must flush a light trickle earlier
+    than the configured window (the satellite's 'light traffic stops
+    paying the full window' behavior)."""
+    keys, idx = _index()
+    t = {"now": 0.0}
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=1024, min_flush=1024,
+                        deadline_s=0.5, adaptive_deadline=True,
+                        deadline_floor_s=0.01,
+                        now_fn=lambda: t["now"], timer=False)
+    # establish a light rate: ~100 q/s << need/deadline
+    for i in range(5):
+        t["now"] = i * 0.01
+        q.submit(keys[i: i + 1])
+    eff = q.effective_deadline()
+    assert eff < 0.5, "light traffic still pays the full window"
+    t["now"] += eff + 1e-6
+    assert q.poll() > 0                           # flushed before 0.5s
+    assert q.stats.deadline_flushes == 1

@@ -1,0 +1,138 @@
+"""Decode-step micro-batching oracle (DESIGN.md §7.1).
+
+The sampler's CDF inversion routed through the micro-batch queue
+(``kernels.cdf_search.cdf_probe_fn``) must be bit-identical to the
+per-request inversion for adversarial CDFs — ties (duplicate cumulative
+values), zero-mass buckets, u at the 1.0 boundary, u below the first
+bucket — and a flushed decode step must be ONE fused dispatch with no
+host<->device transfer (the transfer-guard contract the probe path
+already honors).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.queue import MicroBatchQueue
+from repro.kernels.cdf_search import cdf_probe_fn, cdf_search, invert_cdf
+from repro.kernels import ops as kops
+from repro.serve.sampler import SamplerConfig, sample, sample_queued
+
+V = 64
+
+
+def _adversarial_cdfs(rng, b):
+    """[b, V] nondecreasing CDFs with ties, zero-mass runs and flat tails,
+    plus u values hitting the boundaries."""
+    p = rng.random((b, V)).astype(np.float32)
+    p[rng.random((b, V)) < 0.4] = 0.0             # zero-mass buckets (ties)
+    k = rng.integers(1, V, b)
+    for i in range(b):
+        p[i, k[i]:] *= rng.random() < 0.5         # half the rows: dead tail
+        if p[i].sum() == 0.0:
+            p[i, 0] = 1.0
+    cdf = np.cumsum(p / p.sum(-1, keepdims=True), -1).astype(np.float32)
+    cdf[:, -1] = np.maximum(cdf[:, -1], 1.0)      # exact top for u == 1.0
+    u = rng.random(b).astype(np.float32)
+    u[0:: 4] = 1.0                                # boundary: last index
+    u[1:: 4] = 0.0                                # below the first bucket
+    u[2:: 4] = cdf[2:: 4, V // 2]                 # exactly ON a tie value
+    return cdf, u
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_queued_inversion_equals_per_request_paths(seed):
+    """Batched inversion through the queue == per-request cdf_search
+    (Pallas), topp_search (padded wrapper) and the jnp oracle, row for
+    row, under adversarial CDFs and interleaved submit sizes."""
+    rng = np.random.default_rng(100 + seed)
+    q = MicroBatchQueue(cdf_probe_fn(), capacity=256, min_flush=256,
+                        timer=False)
+    futs, refs = [], []
+    for b in [1, 4, 2, 1, 5]:
+        cdf, u = _adversarial_cdfs(rng, b)
+        futs.append(q.submit((jnp.asarray(cdf), jnp.asarray(u)),
+                             tenant=f"t{len(futs) % 2}"))
+        refs.append((cdf, u))
+    q.flush()
+    assert q.stats.flushes == 1                   # ONE fused inversion
+    for fut, (cdf, u) in zip(futs, refs):
+        got = np.asarray(fut.result())
+        # jnp oracle
+        want = np.asarray(invert_cdf(jnp.asarray(cdf), jnp.asarray(u)))
+        np.testing.assert_array_equal(got, want)
+        # padded kernel wrapper, per request
+        np.testing.assert_array_equal(
+            got, np.asarray(kops.topp_search(cdf, u)))
+        # raw Pallas kernel on tile-aligned rows, one request at a time
+        for i in range(cdf.shape[0]):
+            row = np.repeat(cdf[i: i + 1], 8, axis=0)
+            uu = np.repeat(u[i: i + 1], 8)
+            np.testing.assert_array_equal(
+                got[i], np.asarray(cdf_search(jnp.asarray(row),
+                                              jnp.asarray(uu),
+                                              chunk=V))[0])
+
+
+def test_queued_inversion_kernel_path_matches():
+    """cdf_probe_fn(use_kernel=True) routes the flush through the Pallas
+    kernel; results must equal the jnp-probe queue bit for bit."""
+    rng = np.random.default_rng(9)
+    cdf, u = _adversarial_cdfs(rng, 6)
+    out = {}
+    for use_kernel in (False, True):
+        q = MicroBatchQueue(cdf_probe_fn(use_kernel=use_kernel),
+                            capacity=64, min_flush=64, timer=False)
+        futs = [q.submit((jnp.asarray(cdf[i: i + 2]),
+                          jnp.asarray(u[i: i + 2]))) for i in range(0, 6, 2)]
+        q.flush()
+        out[use_kernel] = np.concatenate(
+            [np.asarray(f.result()) for f in futs])
+    np.testing.assert_array_equal(out[False], out[True])
+
+
+def test_sample_queued_equals_sample():
+    """End-to-end sampler equivalence: sample_queued tokens == sample
+    tokens for the same rng, across temperatures/top-p/top-k, with and
+    without tenant grouping."""
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(size=(6, V)).astype(np.float32) * 3)
+    for cfg in [SamplerConfig(temperature=0.8, top_p=0.9),
+                SamplerConfig(temperature=1.3, top_p=0.5, top_k=8),
+                SamplerConfig(temperature=0.0)]:
+        q = MicroBatchQueue(cdf_probe_fn(), capacity=64, min_flush=64,
+                            timer=False)
+        key = jax.random.PRNGKey(42)
+        want = np.asarray(sample(logits, key, cfg))
+        got = np.asarray(sample_queued(logits, key, cfg, q))
+        np.testing.assert_array_equal(got, want)
+        got_t = np.asarray(sample_queued(
+            logits, key, cfg, q, tenants=["a", "b", "a", "c", "b", "a"]))
+        np.testing.assert_array_equal(got_t, want)
+        q.close()
+
+
+def test_decode_flush_is_single_dispatch_no_transfers():
+    """A flushed decode step over device-resident (cdf, u) submissions
+    adds no host<->device transfer and is one fused dispatch."""
+    rng = np.random.default_rng(5)
+    subs = []
+    for b in [2, 2, 4]:
+        cdf, u = _adversarial_cdfs(rng, b)
+        subs.append((jnp.asarray(cdf), jnp.asarray(u)))
+    jax.block_until_ready([s[0] for s in subs])
+    warm = MicroBatchQueue(cdf_probe_fn(), capacity=32, min_flush=32,
+                           timer=False)
+    for s in subs:
+        warm.submit(s)
+    warm.flush()                                  # compile the fused shape
+    q = MicroBatchQueue(cdf_probe_fn(), capacity=32, min_flush=32,
+                        timer=False)
+    with jax.transfer_guard("disallow"):
+        futs = [q.submit(s, tenant=f"t{i}") for i, s in enumerate(subs)]
+        q.flush()
+    assert q.stats.flushes == 1
+    for s, f in zip(subs, futs):
+        np.testing.assert_array_equal(
+            np.asarray(f.result()), np.asarray(invert_cdf(*s)))

@@ -199,19 +199,70 @@ def test_queue_deadline_flush_trigger_manual_clock():
 
 
 def test_queue_deadline_timer_thread():
-    import time
     keys, vals, idx = _store()
     jax.block_until_ready(idx.lookup(keys[:4]).found)   # warm the (4,) shape
     q = MicroBatchQueue(index_probe_fn(idx), capacity=1024, min_flush=1024,
                         deadline_s=0.05)
     f = q.submit(keys[:4])
-    deadline = time.monotonic() + 30.0
-    while not f.done() and time.monotonic() < deadline:
-        time.sleep(0.02)
-    assert f.done(), "deadline timer never flushed"
+    # wait() blocks without demand-flushing, so the *timer* must flush
+    assert f.wait(30.0), "deadline timer never flushed"
     assert q.stats.deadline_flushes == 1
     np.testing.assert_array_equal(np.asarray(f.result().values), vals[:4])
     q.close()
+
+
+def test_queue_close_is_idempotent_and_rejects_late_submits():
+    keys, _, idx = _store()
+    t = {"now": 0.0}
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=1024, min_flush=1024,
+                        deadline_s=0.5, now_fn=lambda: t["now"], timer=False)
+    f = q.submit(keys[:4])
+    q.close()
+    assert f.done() and q.closed                       # close drained it
+    q.close()                                          # second close: no-op
+    assert q.stats.flushes == 1
+    with pytest.raises(RuntimeError, match="closed"):
+        q.submit(keys[:4])
+
+
+def test_queue_close_races_deadline_timer_manual_clock():
+    """Regression for the close()/timer race: a deadline callback that
+    fires concurrently with close() must not flush into the shut-down
+    queue. Simulated deterministically: capture the armed timer's callback,
+    close, then invoke the callback as the racing thread would — it must
+    observe the closed flag and do nothing."""
+    keys, _, idx = _store()
+    t = {"now": 0.0}
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=1024, min_flush=1024,
+                        deadline_s=0.5, now_fn=lambda: t["now"], timer=True)
+    q.submit(keys[:4])
+    timer = q._timer
+    assert timer is not None
+    q.close()                                          # drains + cancels
+    flushes = q.stats.flushes
+    t["now"] = 10.0                                    # way past the window
+    timer.function()                                   # the racing callback
+    assert q.stats.flushes == flushes                  # did NOT flush again
+    # and the passive poll path is equally inert after close
+    assert q.poll() == 0
+
+
+def test_queue_close_races_deadline_timer_real_threads():
+    """Real-timer variant: hammer submit -> close with a live deadline
+    timer short enough to fire mid-close; every future must still resolve
+    exactly once and no flush may land after close returns."""
+    keys, _, idx = _store()
+    jax.block_until_ready(idx.lookup(keys[:4]).found)
+    for trial in range(8):
+        q = MicroBatchQueue(index_probe_fn(idx), capacity=1024,
+                            min_flush=1024, deadline_s=0.001)
+        f = q.submit(keys[:4])
+        q.close()
+        assert f.done(), f"trial {trial}: close lost a pending submit"
+        flushes_at_close = q.stats.flushes
+        assert f.wait(0.1)
+        assert q.stats.flushes == flushes_at_close, \
+            f"trial {trial}: a timer flushed after close"
 
 
 def test_queue_empty_and_oversized_submissions():
@@ -271,7 +322,7 @@ def test_queue_occupancy_feedback_steers_flush_threshold():
     q.drain_feedback()
     assert q.flush_at == 64                           # still shallow: doubled
     # fake a deep-occupancy report: threshold decays
-    q._feedback.append((lambda: 0.9, 64, 64))
+    q._feedback.append((lambda: 0.9, 64, 64, {"default": 64}))
     q.drain_feedback()
     assert q.flush_at == 32
     assert q.stats.occ_n == 3 and q.stats.mean_occupancy > 0
