@@ -21,7 +21,17 @@ the structural work counters (pages touched / rows rebuilt).
 
 ``--smoke`` runs the small sweep and asserts the trend gate: at every cell
 with writes, the delta posture's total maintenance time must be strictly
-below wholesale (the CI ``updates-smoke`` job).
+below wholesale (the CI ``updates-smoke`` job). The sweep includes a
+delete/expire-heavy cell (half of every write batch tombstones existing
+keys) so reclamation rides the same gate.
+
+``--durability-smoke`` (the CI ``updates-durability-smoke`` job) gates the
+robustness contract of DESIGN.md §6.5 instead: (a) with background
+maintenance, hot-path insert cost stays O(w) — no fold ever runs inside a
+timed insert, and p99 insert latency stays within a small multiple of the
+median; (b) restoring a snapshotted store (snapshot adoption + bounded
+journal-tail replay + probe warm) reaches servable faster than the pre-PR
+restart path: a cold rebuild plus re-applying the full write history.
 
 Run: ``PYTHONPATH=src python -m benchmarks.bench_updates [--full] [--out F]``
 """
@@ -56,6 +66,11 @@ class WholesaleStore:
 
     def insert(self, keys: np.ndarray, vals: np.ndarray):
         self.map.update(zip(keys.tolist(), vals.tolist()))
+        self.dirty = True
+
+    def delete(self, keys: np.ndarray):
+        for k in keys.tolist():
+            self.map.pop(k, None)
         self.dirty = True
 
     def _rebuild(self, warm_q: np.ndarray):
@@ -107,6 +122,19 @@ class DeltaStore:
                 self._derives = base.derives
         return time.perf_counter() - t0
 
+    def timed_delete(self, keys: np.ndarray, warm_q: np.ndarray) -> float:
+        """Tombstone deletes ride the same maintenance accounting as
+        inserts (they are delta writes that reclaim at the next fold)."""
+        t0 = time.perf_counter()
+        self.idx.delete(keys)
+        base = self.idx.base
+        if base is not None and hasattr(base, "dev_keys"):
+            jax.block_until_ready((base.dev_keys, base.dev_vals))
+            if base.derives != self._derives:
+                jax.block_until_ready(self.idx.lookup(warm_q).found)
+                self._derives = base.derives
+        return time.perf_counter() - t0
+
     def lookup(self, q: np.ndarray):
         return self.idx.lookup(q)
 
@@ -122,12 +150,15 @@ def _verify(res, q: np.ndarray, ref: dict, tag: str):
             assert int(vals[i]) == want, f"{tag}: value mismatch at key {k}"
 
 
-def run_cell(n: int, mix: float, rounds: int, seed: int) -> list:
+def run_cell(n: int, mix: float, rounds: int, seed: int,
+             del_frac: float = 0.0) -> list:
     rng = np.random.default_rng(seed)
     keys = np.unique(rng.integers(0, 2**30, int(n * 1.2)).astype(np.int32))[:n]
     vals = np.arange(keys.size, dtype=np.int32)
-    n_ins = int(BATCH * mix)
-    n_look = BATCH - n_ins
+    n_write = int(BATCH * mix)
+    n_del = int(n_write * del_frac)       # expire existing keys, tombstoned
+    n_ins = n_write - n_del
+    n_look = BATCH - n_write
     cfg = dict(kind="tiered", plan="device")
     stores = {
         "wholesale": WholesaleStore(keys, vals, IndexConfig(**cfg)),
@@ -147,6 +178,7 @@ def run_cell(n: int, mix: float, rounds: int, seed: int) -> list:
         if posture == "delta":
             base = store.idx.base
             store._derives = base.derives if base is not None else -1
+        deletes = 0
         for _ in range(rounds):
             if n_ins:
                 ik = r.integers(0, 2**30, n_ins).astype(np.int32)
@@ -160,6 +192,19 @@ def run_cell(n: int, mix: float, rounds: int, seed: int) -> list:
                     maint_s += store.timed_insert(ik, iv, q0)
                 ref.update(zip(ik.tolist(), iv.tolist()))
                 inserts += n_ins
+            if n_del and ref:
+                dk = np.fromiter(ref, np.int32, len(ref))[
+                    r.integers(0, len(ref), n_del)]
+                if posture == "wholesale":
+                    t0 = time.perf_counter()
+                    store.delete(dk)
+                    maint_s += time.perf_counter() - t0
+                    maint_s += store.maintain(q0)
+                else:
+                    maint_s += store.timed_delete(dk, q0)
+                for k in dk.tolist():
+                    ref.pop(k, None)
+                deletes += n_del
             hits = np.fromiter(ref, np.int32, len(ref))[
                 r.integers(0, len(ref), n_look // 2)]
             misses = r.integers(0, 2**30, n_look - n_look // 2).astype(np.int32)
@@ -169,12 +214,14 @@ def run_cell(n: int, mix: float, rounds: int, seed: int) -> list:
             jax.block_until_ready((res.found, res.values))
             look_s.append(time.perf_counter() - t0)
             _verify(res, q, ref, f"{posture}/n{n}/mix{mix}")
+        writes = inserts + deletes
         rec = {
-            "posture": posture, "n": int(n), "mix": mix, "rounds": rounds,
-            "inserts": inserts,
+            "posture": posture, "n": int(n), "mix": mix,
+            "del_frac": del_frac, "rounds": rounds,
+            "inserts": inserts, "deletes": deletes,
             "maintenance_s": round(maint_s, 5),
             "maintenance_us_per_insert": (
-                round(maint_s * 1e6 / inserts, 2) if inserts else 0.0),
+                round(maint_s * 1e6 / writes, 2) if writes else 0.0),
             "p99_lookup_us": round(float(np.percentile(look_s, 99)) * 1e6, 1),
             "mean_lookup_us": round(float(np.mean(look_s)) * 1e6, 1),
         }
@@ -188,8 +235,12 @@ def run_cell(n: int, mix: float, rounds: int, seed: int) -> list:
                        rows_rewritten=s["rows_rewritten"],
                        top_derives=s["top_derives"],
                        num_pages=store.idx.base.num_pages)
+        if del_frac and posture == "delta":
+            rec["tombstones_written"] = store.idx.stats["deletes"]
         out.append(rec)
-        emit(f"updates/{posture}/n{n}/mix{mix}", rec["mean_lookup_us"],
+        emit(f"updates/{posture}/n{n}/mix{mix}"
+             + (f"/del{del_frac}" if del_frac else ""),
+             rec["mean_lookup_us"],
              f"maint={rec['maintenance_s']:.3f}s;"
              f"per_ins={rec['maintenance_us_per_insert']}us;"
              f"p99={rec['p99_lookup_us']}us")
@@ -201,6 +252,8 @@ def run(sizes, rounds: int, out: str, assert_trend: bool = False) -> dict:
     for i, n in enumerate(sizes):
         for mix in MIXES:
             results.extend(run_cell(n, mix, rounds, seed=100 + i))
+        # delete/expire-heavy cell: half of every write batch tombstones
+        results.extend(run_cell(n, 0.5, rounds, seed=100 + i, del_frac=0.5))
     payload = {"backend": jax.default_backend(),
                "interpret_kernels": jax.default_backend() == "cpu",
                "batch": BATCH, "delta_capacity": DELTA_CAPACITY,
@@ -216,18 +269,132 @@ def run(sizes, rounds: int, out: str, assert_trend: bool = False) -> dict:
 def _assert_delta_trend(results: list):
     """CI gate: at every cell with writes, total index-maintenance time
     under the delta store must be strictly below the wholesale rebuild."""
-    cells = {(r["n"], r["mix"], r["posture"]): r for r in results}
-    for (n, mix, posture) in list(cells):
+    cells = {(r["n"], r["mix"], r["del_frac"], r["posture"]): r
+             for r in results}
+    for (n, mix, df, posture) in list(cells):
         if posture != "wholesale" or mix == 0.0:
             continue
-        w = cells[(n, mix, "wholesale")]["maintenance_s"]
-        d = cells[(n, mix, "delta")]["maintenance_s"]
+        w = cells[(n, mix, df, "wholesale")]["maintenance_s"]
+        d = cells[(n, mix, df, "delta")]["maintenance_s"]
         verdict = "ok" if d < w else "REGRESSION"
-        print(f"# trend n={n} mix={mix}: wholesale={w:.3f}s delta={d:.3f}s "
-              f"({verdict})")
+        print(f"# trend n={n} mix={mix} del={df}: wholesale={w:.3f}s "
+              f"delta={d:.3f}s ({verdict})")
         assert d < w, (
-            f"delta maintenance not below wholesale at n={n}, mix={mix}: "
-            f"{d:.3f}s vs {w:.3f}s")
+            f"delta maintenance not below wholesale at n={n}, mix={mix}, "
+            f"del_frac={df}: {d:.3f}s vs {w:.3f}s")
+
+
+def durability_smoke(out: str) -> dict:
+    """CI gate for the robustness contract (DESIGN.md §6.5).
+
+    (a) O(w) hot-path inserts: with background maintenance ('deferred' —
+        folds happen only in explicit maintain() calls between timed
+        windows), NO merge runs inside a timed insert, and p99 insert
+        latency stays within a small multiple of the median (seals are
+        O(1) swaps, not folds).
+    (b) restart-to-servable beats cold rebuild at n=2**17: restoring the
+        newest snapshot (O(pages) array adoption + a bounded journal-tail
+        replay + probe warm) must be faster than the pre-PR restart path —
+        a cold build_index over the initial keys plus re-applying the full
+        post-build write history through the write path (+ the same probe
+        warm). Periodic saves are what bound the restore's replay to the
+        journal tail; the cold path replays everything."""
+    import os
+    import shutil
+    import tempfile
+
+    from repro.core import restore_index
+
+    # -- (a) p99 insert stays O(w): fold never lands on a timed insert
+    cap = 128
+    idx = build_index(np.arange(0, 2**14, 2, dtype=np.int32),
+                      config=IndexConfig(kind="tiered", plan="device",
+                                         mutable=True, delta_capacity=cap,
+                                         maintenance="deferred"))
+    rng = np.random.default_rng(0)
+    warm = rng.integers(0, 2**30, 64).astype(np.int32)
+    jax.block_until_ready(idx.lookup(warm).found)
+    idx.insert(rng.integers(0, 2**30, 16).astype(np.int32),   # untimed warm
+               rng.integers(0, 2**30, 16).astype(np.int32))
+    lat, batch = [], 16
+    for i in range(64):
+        idx.maintain()                     # background worker keeping up:
+        ik = rng.integers(0, 2**30, batch).astype(np.int32)  # fold untimed
+        iv = rng.integers(0, 2**30, batch).astype(np.int32)
+        m0 = idx.stats["merges"]
+        t0 = time.perf_counter()
+        idx.insert(ik, iv)
+        lat.append(time.perf_counter() - t0)
+        assert idx.stats["merges"] == m0, \
+            "fold ran inside a timed insert (maintenance not deferred)"
+    idx.maintain()
+    p50 = float(np.percentile(lat, 50))
+    p99 = float(np.percentile(lat, 99))
+    assert idx.stats["seals"] >= 1, "window never sealed: gate is vacuous"
+    ratio = p99 / max(p50, 1e-9)
+    print(f"# durability (a): insert p50={p50*1e6:.0f}us p99={p99*1e6:.0f}us "
+          f"ratio={ratio:.1f} seals={idx.stats['seals']} "
+          f"merges_on_hot_path=0")
+    assert ratio < 50, f"p99 insert {ratio:.1f}x median: hot path not O(w)"
+
+    # -- (b) restore-to-servable vs cold rebuild at n=2**17
+    n = 2**17
+    keys = np.unique(rng.integers(0, 2**30, int(n * 1.2)).astype(np.int32))[:n]
+    vals = np.arange(keys.size, dtype=np.int32)
+    d = tempfile.mkdtemp(prefix="bench_dur_")
+    history = 16384                    # post-build writes before the crash
+    save_every = 1024                  # bounds the restore's replay tail
+    mut_cfg = dict(kind="tiered", plan="device", mutable=True,
+                   delta_capacity=256)
+    wk = rng.integers(0, 2**30, history).astype(np.int32)
+    wv = rng.integers(0, 2**30, history).astype(np.int32)
+    try:
+        src = build_index(keys, vals, IndexConfig(**mut_cfg, ckpt_dir=d))
+        src.save()
+        for off in range(0, history, 32):
+            src.insert(wk[off:off + 32], wv[off:off + 32])
+            if (off + 32) % save_every == 0 and off + 32 < history:
+                src.save()
+        src.close()
+
+        t0 = time.perf_counter()
+        cold = build_index(keys, vals, IndexConfig(**mut_cfg))
+        for off in range(0, history, 32):       # re-apply the full history
+            cold.insert(wk[off:off + 32], wv[off:off + 32])
+        jax.block_until_ready(cold.lookup(warm).found)
+        cold_s = time.perf_counter() - t0
+        cold.close()
+
+        t0 = time.perf_counter()
+        res = restore_index(d, IndexConfig(**mut_cfg))
+        jax.block_until_ready(res.lookup(warm).found)
+        restore_s = time.perf_counter() - t0
+        replayed = res.stats["journal_replayed"]
+        res.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    assert replayed <= save_every, \
+        "snapshot rotation failed to bound the journal tail"
+    print(f"# durability (b): n={n} history={history} "
+          f"cold-rebuild+full-replay={cold_s:.3f}s "
+          f"restore={restore_s:.3f}s (replayed {replayed} journal records, "
+          f"speedup {cold_s / max(restore_s, 1e-9):.2f}x)")
+    assert restore_s < cold_s, (
+        f"restart-to-servable ({restore_s:.3f}s) not below cold rebuild + "
+        f"history replay ({cold_s:.3f}s)")
+
+    payload = {"backend": jax.default_backend(),
+               "insert_p50_us": round(p50 * 1e6, 1),
+               "insert_p99_us": round(p99 * 1e6, 1),
+               "insert_p99_over_p50": round(ratio, 2),
+               "seals": idx.stats["seals"],
+               "cold_rebuild_s": round(cold_s, 4),
+               "restore_to_servable_s": round(restore_s, 4),
+               "journal_replayed": replayed}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out}")
+    return payload
 
 
 def main():
@@ -237,8 +404,15 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="small sweep + delta<wholesale maintenance assert "
                          "(the CI gate)")
+    ap.add_argument("--durability-smoke", action="store_true",
+                    help="gate the robustness contract instead: O(w) p99 "
+                         "insert under deferred maintenance + "
+                         "restart-to-servable < cold rebuild")
     ap.add_argument("--out", default="BENCH_updates.json")
     args = ap.parse_args()
+    if args.durability_smoke:
+        durability_smoke(args.out)
+        return
     if args.smoke:
         run(sizes=(2**12, 2**14), rounds=8, out=args.out, assert_trend=True)
         return

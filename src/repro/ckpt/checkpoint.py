@@ -84,9 +84,20 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def _verify(path: str, manifest: dict) -> bool:
+    """Deep verification: every manifest key present, every member fully
+    readable (np.load is lazy — reading each array forces the zip-member
+    CRC32 check, which is what catches bit flips and truncation), and
+    shape/dtype matching the manifest."""
     try:
         with np.load(os.path.join(path, "arrays.host0.npz")) as z:
-            return sorted(z.files) == manifest["keys"]
+            if sorted(z.files) != manifest["keys"]:
+                return False
+            for k in z.files:
+                a = z[k]                        # full decompress + CRC
+                if list(a.shape) != manifest["shapes"][k] or \
+                        str(a.dtype) != manifest["dtypes"][k]:
+                    return False
+        return True
     except Exception:
         return False
 
@@ -94,9 +105,15 @@ def _verify(path: str, manifest: dict) -> bool:
 def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
             shardings: Any = None) -> tuple[Any, int]:
     """Fill `target`-shaped pytree from the newest verifiable checkpoint
-    (or `step`). Returns (tree, step). Raises FileNotFoundError if none."""
+    (or `step`). A corrupt/torn newer checkpoint is skipped with a warning
+    (graceful degradation to the previous step). ``target=None`` returns
+    the raw ``{path_key: array}`` dict with stored dtypes — for callers
+    whose tree structure is only known from the snapshot itself. Target
+    leaves without a ``.dtype`` (e.g. ``object()`` placeholders) keep the
+    stored dtype. Returns (tree, step). Raises FileNotFoundError if
+    none."""
     candidates = [step] if step is not None else list(reversed(all_steps(ckpt_dir)))
-    for s in candidates:
+    for i, s in enumerate(candidates):
         path = os.path.join(ckpt_dir, f"step_{s:08d}")
         try:
             with open(os.path.join(path, "manifest.json")) as f:
@@ -105,14 +122,24 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
             continue
         if not _verify(path, manifest):
             continue                            # torn checkpoint: skip back
+        if i > 0:
+            import warnings
+            warnings.warn(
+                f"checkpoint step {candidates[0]} in {ckpt_dir} failed "
+                f"verification; falling back to step {s}",
+                RuntimeWarning, stacklevel=2)
         with np.load(os.path.join(path, "arrays.host0.npz")) as z:
             arrays = {k: z[k] for k in z.files}
+        if target is None:
+            return arrays, s
         flat, treedef = _flatten_with_path(target)
         leaves = []
         sflat = jax.tree.leaves(shardings) if shardings is not None else None
         for i, (pth, leaf) in enumerate(flat):
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
-            arr = arrays[key].astype(leaf.dtype)
+            arr = arrays[key]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
             if sflat is not None:
                 arr = jax.device_put(arr, sflat[i])
             leaves.append(arr)

@@ -1,0 +1,134 @@
+"""Append-only write-ahead journal for the mutable store (DESIGN.md §6.5).
+
+One segment per snapshot step — ``journal_<step>.log`` holds every write
+issued AFTER snapshot ``step`` (rotated by ``MutableIndex.save``). Restore
+loads the newest verifying snapshot S and replays the segments with step
+>= S in step order; records are CRC-framed so a torn tail (crash mid-append)
+is detected and cleanly ignored, never misapplied.
+
+Format (all little-endian):
+
+    header   16 bytes   MAGIC ``b"RJL1"`` + key-dtype str padded to 12
+    record   25 bytes   seq uint64 · op uint8 (0=insert, 1=delete) ·
+                        key int64 bits (float keys carried as float64 bit
+                        pattern) · value int32 · crc32 of the 21 payload
+                        bytes
+
+Records carry a globally monotone sequence number so replay can detect
+ordering violations across segments. No fsync: the journal bounds loss to
+the writes since the last flush, the snapshot bounds replay length.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+
+import numpy as np
+
+MAGIC = b"RJL1"
+HEADER = struct.Struct("<4s12s")
+PAYLOAD = struct.Struct("<QBqi")
+RECORD = struct.Struct("<QBqiI")
+OP_INSERT, OP_DELETE = 0, 1
+
+
+def segment_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"journal_{step:08d}.log")
+
+
+def scan_dir(ckpt_dir: str):
+    """Sorted [(step, path)] of the directory's journal segments."""
+    out = []
+    if os.path.isdir(ckpt_dir):
+        for f in os.listdir(ckpt_dir):
+            if f.startswith("journal_") and f.endswith(".log"):
+                try:
+                    out.append((int(f[len("journal_"):-len(".log")]),
+                                os.path.join(ckpt_dir, f)))
+                except ValueError:
+                    pass
+    return sorted(out)
+
+
+def _encode_key(key, dtype: np.dtype) -> int:
+    if dtype.kind == "f":
+        return int(np.float64(key).view(np.int64))
+    return int(key)
+
+
+def _decode_key(bits: int, dtype: np.dtype):
+    if dtype.kind == "f":
+        return dtype.type(np.int64(bits).view(np.float64))
+    return dtype.type(bits)
+
+
+class Journal:
+    """Appender for one segment. Creates the file + header when absent or
+    empty; otherwise appends after the existing records (the caller
+    truncates any torn tail first — :func:`truncate_torn`)."""
+
+    def __init__(self, path: str, key_dtype, next_seq: int = 0):
+        self.path = path
+        self.dtype = np.dtype(key_dtype)
+        self.seq = int(next_seq)
+        fresh = not os.path.exists(path) or os.path.getsize(path) == 0
+        self._f = open(path, "ab")
+        if fresh:
+            self._f.write(HEADER.pack(MAGIC,
+                                      self.dtype.str.encode()[:12]))
+            self._f.flush()
+
+    def append(self, key, value: int, *, delete: bool = False):
+        payload = PAYLOAD.pack(self.seq, OP_DELETE if delete else OP_INSERT,
+                               _encode_key(key, self.dtype), int(value))
+        self._f.write(payload + struct.pack("<I", zlib.crc32(payload)))
+        self.seq += 1
+
+    def flush(self):
+        self._f.flush()
+
+    def close(self):
+        try:
+            self._f.flush()
+        finally:
+            self._f.close()
+
+
+def read_segment(path: str):
+    """(key_dtype, [(seq, op, key, value), ...]) — every record up to the
+    first torn/corrupt one (short read, CRC mismatch, or in-segment
+    sequence regression); the tail after it is ignored."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if len(blob) < HEADER.size:
+        return None, []
+    magic, dstr = HEADER.unpack_from(blob, 0)
+    if magic != MAGIC:
+        return None, []
+    dtype = np.dtype(dstr.rstrip(b"\x00").decode())
+    out = []
+    off, last = HEADER.size, -1
+    while off + RECORD.size <= len(blob):
+        seq, op, bits, val, crc = RECORD.unpack_from(blob, off)
+        if zlib.crc32(blob[off: off + PAYLOAD.size]) != crc:
+            break
+        if seq <= last or op not in (OP_INSERT, OP_DELETE):
+            break
+        last = seq
+        out.append((seq, op, _decode_key(bits, dtype), val))
+        off += RECORD.size
+    return dtype, out
+
+
+def truncate_torn(path: str):
+    """Rewrite the segment down to its valid prefix (header + CRC-clean
+    records), so later appends follow intact data instead of a torn
+    record."""
+    dtype, recs = read_segment(path)
+    if dtype is None:
+        return
+    good = HEADER.size + len(recs) * RECORD.size
+    if os.path.getsize(path) > good:
+        with open(path, "r+b") as f:
+            f.truncate(good)

@@ -1,5 +1,6 @@
 # The paper's primary contribution: main-memory index search structures
 # (binary / CSS / CSB+ / k-ary / FAST) and NitroGen index compilation, in JAX.
-from .api import Index, IndexConfig, LookupResult, build_index, KINDS  # noqa: F401
+from .api import (Index, IndexConfig, LookupResult, build_index,  # noqa: F401
+                  restore_index, KINDS)
 from . import sorted_array, css_tree, csb_tree, kary, fast_tree, nitrogen, util  # noqa: F401
 from .csb_tree import CSBTree  # noqa: F401

@@ -36,6 +36,11 @@ class IndexConfig:
     plan: str = "device"         # tiered: schedule placement ('device'|'host')
     mutable: bool = False        # delta-merge write path (engine/store.py)
     delta_capacity: int = 1024   # mutable: delta buffer size (rounded to pow2)
+    # mutable-store maintenance + durability (DESIGN.md §6.3–§6.5)
+    maintenance: str = "deferred"  # 'deferred'|'inline'|'thread' fold policy
+    maintenance_interval_s: float = 0.05  # thread mode: fold timer delay
+    ckpt_dir: Optional[str] = None  # journal + snapshot dir (None = off)
+    ckpt_keep: int = 3           # snapshots retained by Index.save rotation
     # micro-batch queue knobs (engine/queue.py, DESIGN.md §7) — consumed by
     # queue clients such as serve.kv_cache.PrefixPageStore.probe_queue
     queue_capacity: int = 4096   # hard flush trigger (pending queries)
@@ -57,6 +62,17 @@ class IndexConfig:
         if self.mutable and self.delta_capacity <= 0:
             raise ValueError(
                 f"delta_capacity must be positive, got {self.delta_capacity}")
+        if self.maintenance not in ("deferred", "inline", "thread"):
+            raise ValueError(
+                f"unknown maintenance mode {self.maintenance!r}; want "
+                "'deferred', 'inline' or 'thread'")
+        if self.maintenance_interval_s < 0:
+            raise ValueError(
+                f"maintenance_interval_s must be >= 0, got "
+                f"{self.maintenance_interval_s}")
+        if self.ckpt_keep <= 0:
+            raise ValueError(
+                f"ckpt_keep must be positive, got {self.ckpt_keep}")
         if self.queue_capacity <= 0:
             raise ValueError(
                 f"queue_capacity must be positive, got {self.queue_capacity}")
@@ -185,6 +201,22 @@ class Index:
             vals = jnp.take(self.values_sorted, safe, axis=0)
         return LookupResult(rank=rank, found=found, values=vals)
 
+    def delete(self, keys):
+        """Frozen indexes have no write path — deletes need the mutable
+        store (``IndexConfig(mutable=True)`` routes ``build_index`` to
+        ``MutableIndex``, which supports tombstone deletes)."""
+        raise TypeError(
+            "this index is immutable; build with "
+            "IndexConfig(mutable=True) for insert/delete support")
+
+    def save(self, ckpt_dir=None):
+        """Snapshot/restore is the mutable store's durability contract
+        (``MutableIndex.save``); frozen indexes are rebuilt from their
+        source arrays."""
+        raise TypeError(
+            "this index is immutable; build with "
+            "IndexConfig(mutable=True) for save/restore support")
+
     @property
     def tree_bytes(self) -> int:
         return int(getattr(self.impl, "tree_bytes", 0))
@@ -206,6 +238,18 @@ def _module_for(kind: str):
         from ..engine import tiered
         return tiered
     return _MODULES[kind]
+
+
+def restore_index(ckpt_dir: str, config: IndexConfig = IndexConfig(
+        kind="tiered", mutable=True)):
+    """Warm-restart a mutable index from its checkpoint directory: the
+    newest verifying snapshot (corrupt latest degrades to the previous
+    step with a warning) plus a replay of the journaled writes after it —
+    servable without an O(n) rebuild (DESIGN.md §6.5)."""
+    if not config.mutable:
+        raise ValueError("restore_index requires IndexConfig(mutable=True)")
+    from ..engine.store import MutableIndex
+    return MutableIndex.restore(ckpt_dir, config)
 
 
 def build_index(keys, values=None, config: IndexConfig = IndexConfig()) -> Index:

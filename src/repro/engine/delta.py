@@ -13,9 +13,19 @@ Layout — a one-level CSB+ leaf group (thesis Alg 3.2, shrunk to a buffer):
     h_keys   [nn, w]   node-structured slots; live keys in each node's
                        sorted prefix, sentinel in the gaps
     h_vals   [nn, w]   payload per slot (int32)
-    h_cnt    [nn]      live keys per node
-    node_max [nn]      max live key per node (sentinel when empty) — the
-                       buffer's one-level directory
+    h_cnt    [nn]      occupied slots per node
+    node_max [nn]      max occupied key per node (sentinel when empty) —
+                       the buffer's one-level directory
+
+plus three per-slot bit planes for the mutable store's three-tier algebra
+(DESIGN.md §6.3/§8.2):
+
+    h_shadow [nn, w]   sb — this entry carries the "subtract one physical
+                       base copy" correction (a base twin exists)
+    h_ss     [nn, w]   ss — a sealed-buffer twin exists below this entry
+                       (only ever set in the *active* buffer)
+    h_tomb   [nn, w]   tombstone — the key is deleted; the entry masks
+                       lookups and is skipped by scans/materialize
 
 Invariant: concatenating the node prefixes in node order yields the live
 (key, value) pairs globally sorted by key; ``node_max`` is ascending with
@@ -60,27 +70,40 @@ class DeltaBuffer:
         w = self.node_width
         self.h_keys = np.full((self.nn, w), self.sentinel, self.dtype)
         self.h_vals = np.zeros((self.nn, w), np.int32)
-        # slot shadows a base key (same key lives in the backing store):
-        # the range-scan dup correction (engine/scan.py, DESIGN.md §8.2)
+        # bit planes (docstring above): sb / ss / tombstone per slot
         self.h_shadow = np.zeros((self.nn, w), bool)
+        self.h_ss = np.zeros((self.nn, w), bool)
+        self.h_tomb = np.zeros((self.nn, w), bool)
         self.h_cnt = np.zeros(self.nn, np.int64)
         self.node_max = np.full(self.nn, self.sentinel, self.dtype)
         self.count = 0
+        self.tombs = 0
         self.respreads = 0
         self._dev = None
-        self._dev_shadow = None
+        self._dev_bits = None
 
     @property
     def full(self) -> bool:
         return self.count >= self.capacity
 
+    @property
+    def live_count(self) -> int:
+        """Occupied entries that are not tombstones."""
+        return self.count - self.tombs
+
+    def _invalidate(self):
+        self._dev = None
+        self._dev_bits = None
+
     # ---------------------------------------------------------------- write
-    def insert(self, key, value: int, shadows: bool = False) -> bool:
-        """Upsert one (key, value). Returns True when a *new* key was added
-        (False: existing key, value overwritten). ``shadows`` marks the key
-        as also live in the backing store (tracked for the range-scan dup
-        correction; recomputed truth on upsert). The caller must drain a
-        full buffer first (``engine/store.py`` merges on overflow)."""
+    def insert(self, key, value: int, shadows: bool = False,
+               shadows_sealed: bool = False, tomb: bool = False) -> bool:
+        """Upsert one entry. Returns True when a *new* key was added
+        (False: existing entry overwritten — value AND all three bits).
+        ``shadows`` (sb) marks a physical base twin this entry corrects
+        for; ``shadows_sealed`` (ss) a sealed-buffer twin; ``tomb`` records
+        a delete. The caller must seal/fold a full buffer first
+        (``engine/store.py`` double-buffers on overflow)."""
         key = self.dtype.type(key)
         if key == self.sentinel:
             raise ValueError("key equals the sentinel; out of key domain")
@@ -94,41 +117,86 @@ class DeltaBuffer:
         if pos < cnt and self.h_keys[j, pos] == key:
             self.h_vals[j, pos] = value
             self.h_shadow[j, pos] = shadows
-            self._dev = None
-            self._dev_shadow = None
+            self.h_ss[j, pos] = shadows_sealed
+            self.tombs += int(tomb) - int(self.h_tomb[j, pos])
+            self.h_tomb[j, pos] = tomb
+            self._invalidate()
             return False
         if self.full:
             raise ValueError("delta buffer full; merge before inserting")
         if cnt == w:
             # node overflow: flatten, place the key, re-open gaps everywhere
-            keys, vals, sh = self._live_full()
+            keys, vals, sh, ss, tb = self.entries()
             p = int(np.searchsorted(keys, key, side="left"))
             self._respread(np.insert(keys, p, key),
                            np.insert(vals, p, np.int32(value)),
-                           np.insert(sh, p, bool(shadows)))
+                           np.insert(sh, p, bool(shadows)),
+                           np.insert(ss, p, bool(shadows_sealed)),
+                           np.insert(tb, p, bool(tomb)))
         else:
             # shift the node tail one slot right (numpy buffers overlapping
             # basic-slice assignment) and drop the key in — at most w moves
             self.h_keys[j, pos + 1: cnt + 1] = self.h_keys[j, pos: cnt]
             self.h_vals[j, pos + 1: cnt + 1] = self.h_vals[j, pos: cnt]
             self.h_shadow[j, pos + 1: cnt + 1] = self.h_shadow[j, pos: cnt]
+            self.h_ss[j, pos + 1: cnt + 1] = self.h_ss[j, pos: cnt]
+            self.h_tomb[j, pos + 1: cnt + 1] = self.h_tomb[j, pos: cnt]
             self.h_keys[j, pos] = key
             self.h_vals[j, pos] = value
             self.h_shadow[j, pos] = shadows
+            self.h_ss[j, pos] = shadows_sealed
+            self.h_tomb[j, pos] = tomb
             self.h_cnt[j] = cnt + 1
             self.node_max[j] = self.h_keys[j, cnt]
         self.count += 1
-        self._dev = None
-        self._dev_shadow = None
+        self.tombs += int(tomb)
+        self._invalidate()
         return True
 
-    def _respread(self, keys: np.ndarray, vals: np.ndarray,
-                  shadows: np.ndarray):
-        """Redistribute live entries evenly across nodes (empties at tail)."""
+    def find(self, key):
+        """(node, pos) of an occupied key, or None — the host twin of the
+        device probe (tombstoned entries are found too: the write path
+        needs the physical slot, aliveness is the h_tomb bit)."""
+        key = self.dtype.type(key)
+        j = min(int(np.searchsorted(self.node_max, key, side="left")),
+                self.nn - 1)
+        cnt = int(self.h_cnt[j])
+        pos = int(np.searchsorted(self.h_keys[j, :cnt], key, side="left"))
+        if pos < cnt and self.h_keys[j, pos] == key:
+            return j, pos
+        return None
+
+    def sync(self, slot, value: int, tomb: bool):
+        """Overwrite value + tombstone of an occupied slot IN PLACE, keeping
+        its sb/ss bits — the write path's lower-twin sync (a newer tier's
+        write makes every older physical copy mirror the newest state, so
+        the scan algebra subtracts known quantities; DESIGN.md §6.3)."""
+        j, pos = slot
+        self.h_vals[j, pos] = value
+        self.tombs += int(tomb) - int(self.h_tomb[j, pos])
+        self.h_tomb[j, pos] = tomb
+        self._invalidate()
+
+    def promote_ss(self):
+        """Post-fold bit rewrite (engine/store.py maintain): the sealed
+        buffer this one's ss bits pointed at has been folded into the base.
+        A live ss entry's twin is now a physical base copy (ss -> sb); a
+        tombstoned ss entry's twin was removed with the fold (ss -> clear,
+        no base twin remains)."""
+        live_ss = self.h_ss & ~self.h_tomb
+        self.h_shadow |= live_ss
+        self.h_ss[:] = False
+        self._invalidate()
+
+    def _respread(self, keys, vals, shadows, ss, tomb):
+        """Redistribute occupied entries evenly across nodes (empties at
+        tail)."""
         w, nn = self.node_width, self.nn
         self.h_keys[:] = self.sentinel
         self.h_vals[:] = 0
         self.h_shadow[:] = False
+        self.h_ss[:] = False
+        self.h_tomb[:] = False
         self.h_cnt[:] = 0
         self.node_max[:] = self.sentinel
         n = keys.size
@@ -141,17 +209,19 @@ class DeltaBuffer:
             self.h_keys[j, :take] = keys[off: off + take]
             self.h_vals[j, :take] = vals[off: off + take]
             self.h_shadow[j, :take] = shadows[off: off + take]
+            self.h_ss[j, :take] = ss[off: off + take]
+            self.h_tomb[j, :take] = tomb[off: off + take]
             self.h_cnt[j] = take
             self.node_max[j] = keys[off + take - 1]
             off += take
         assert off == n, "respread lost entries"
         self.respreads += 1
-        self._dev = None
-        self._dev_shadow = None
+        self._invalidate()
 
     # ---------------------------------------------------------------- read
     def live(self):
-        """Live (keys, vals) in globally sorted key order."""
+        """Occupied (keys, vals) in globally sorted key order (tombstoned
+        entries included — callers needing aliveness use :meth:`entries`)."""
         if self.count == 0:
             return (np.empty(0, self.dtype), np.empty(0, np.int32))
         ks = [self.h_keys[j, : self.h_cnt[j]] for j in range(self.nn)
@@ -160,27 +230,39 @@ class DeltaBuffer:
               if self.h_cnt[j]]
         return np.concatenate(ks), np.concatenate(vs)
 
-    def _live_full(self):
-        """(keys, vals, shadow flags) in globally sorted key order."""
+    def entries(self):
+        """(keys, vals, sb, ss, tomb) of the occupied slots in globally
+        sorted key order."""
         keys, vals = self.live()
         if self.count == 0:
-            return keys, vals, np.empty(0, bool)
-        sh = [self.h_shadow[j, : self.h_cnt[j]] for j in range(self.nn)
-              if self.h_cnt[j]]
-        return keys, vals, np.concatenate(sh)
+            e = np.empty(0, bool)
+            return keys, vals, e, e.copy(), e.copy()
+        sh, ss, tb = [], [], []
+        for j in range(self.nn):
+            c = int(self.h_cnt[j])
+            if c:
+                sh.append(self.h_shadow[j, :c])
+                ss.append(self.h_ss[j, :c])
+                tb.append(self.h_tomb[j, :c])
+        return (keys, vals, np.concatenate(sh), np.concatenate(ss),
+                np.concatenate(tb))
 
     def drain(self):
-        """Live entries, then clear (the merge path's one-shot read)."""
-        keys, vals = self.live()
+        """Occupied (keys, vals, tomb flags), then clear — the fold path's
+        one-shot read (tomb rows direct the fold to REMOVE the key from the
+        base pages)."""
+        keys, vals, _, _, tomb = self.entries()
         self.h_keys[:] = self.sentinel
         self.h_vals[:] = 0
         self.h_shadow[:] = False
+        self.h_ss[:] = False
+        self.h_tomb[:] = False
         self.h_cnt[:] = 0
         self.node_max[:] = self.sentinel
         self.count = 0
-        self._dev = None
-        self._dev_shadow = None
-        return keys, vals
+        self.tombs = 0
+        self._invalidate()
+        return keys, vals, tomb
 
     def device_state(self):
         """(d_keys [nn, w], d_vals [nn, w], d_seps [nn]) jnp mirrors, cached
@@ -191,12 +273,49 @@ class DeltaBuffer:
                          jnp.asarray(self.node_max))
         return self._dev
 
-    def device_shadow(self):
-        """[nn, w] bool jnp mirror of the shadow bits, cached like
-        ``device_state`` (the range scan's dup-correction operand)."""
-        if self._dev_shadow is None:
-            self._dev_shadow = jnp.asarray(self.h_shadow)
-        return self._dev_shadow
+    def device_bits(self):
+        """(d_sb, d_ss, d_tomb) [nn, w] bool jnp mirrors, cached like
+        ``device_state`` (the range scan's three-tier correction operands;
+        the fused lookup uses d_tomb alone)."""
+        if self._dev_bits is None:
+            self._dev_bits = (jnp.asarray(self.h_shadow),
+                              jnp.asarray(self.h_ss),
+                              jnp.asarray(self.h_tomb))
+        return self._dev_bits
+
+    # ------------------------------------------------------------ snapshot
+    def state(self) -> dict:
+        """Snapshot of the full buffer as a dict of arrays + counters (the
+        crash-recovery checkpoint payload; DESIGN.md §6.5)."""
+        return {
+            "keys": self.h_keys.copy(), "vals": self.h_vals.copy(),
+            "shadow": self.h_shadow.copy(), "ss": self.h_ss.copy(),
+            "tomb": self.h_tomb.copy(), "cnt": self.h_cnt.copy(),
+            "node_max": self.node_max.copy(),
+            "meta": np.asarray([self.count, self.tombs, self.capacity,
+                                self.node_width], np.int64),
+        }
+
+    @classmethod
+    def from_state(cls, st: dict) -> "DeltaBuffer":
+        """Rebuild a buffer from :meth:`state` without replaying inserts
+        (the warm-restore path)."""
+        count, tombs, capacity, node_width = (int(x) for x in st["meta"])
+        keys = np.asarray(st["keys"])
+        buf = cls(capacity, dtype=keys.dtype, node_width=node_width)
+        if buf.h_keys.shape != keys.shape:
+            raise ValueError("delta snapshot shape mismatch: "
+                             f"{keys.shape} vs {buf.h_keys.shape}")
+        buf.h_keys[:] = keys
+        buf.h_vals[:] = st["vals"]
+        buf.h_shadow[:] = np.asarray(st["shadow"], bool)
+        buf.h_ss[:] = np.asarray(st["ss"], bool)
+        buf.h_tomb[:] = np.asarray(st["tomb"], bool)
+        buf.h_cnt[:] = st["cnt"]
+        buf.node_max[:] = st["node_max"]
+        buf.count = count
+        buf.tombs = tombs
+        return buf
 
 
 def probe(q: jnp.ndarray, d_keys: jnp.ndarray, d_vals: jnp.ndarray,
@@ -220,3 +339,24 @@ def probe(q: jnp.ndarray, d_keys: jnp.ndarray, d_vals: jnp.ndarray,
     val = jnp.sum(jnp.where(eq, jnp.take(d_vals, j, axis=0), 0),
                   axis=-1).astype(jnp.int32)
     return hit, val
+
+
+def probe_full(q: jnp.ndarray, d_keys: jnp.ndarray, d_vals: jnp.ndarray,
+               d_tomb: jnp.ndarray, d_seps: jnp.ndarray):
+    """:func:`probe` extended with the tombstone plane: returns
+    (hit [Q] bool — the key occupies a slot, tombstoned or not;
+    tomb [Q] bool — the occupying entry is a tombstone (the key is
+    deleted); value [Q] int32). The mutable store's fused three-tier
+    lookup resolves recency with these: a newer tier's hit decides
+    found = hit & ~tomb before any older tier is consulted."""
+    nn = d_seps.shape[0]
+    j = jnp.minimum(
+        jnp.sum(d_seps[None, :] < q[:, None], axis=-1), nn - 1
+    ).astype(jnp.int32)
+    row = jnp.take(d_keys, j, axis=0)                    # [Q, w]
+    eq = row == q[:, None]
+    hit = jnp.any(eq, axis=-1)
+    tomb = jnp.any(eq & jnp.take(d_tomb, j, axis=0), axis=-1)
+    val = jnp.sum(jnp.where(eq, jnp.take(d_vals, j, axis=0), 0),
+                  axis=-1).astype(jnp.int32)
+    return hit, tomb, val

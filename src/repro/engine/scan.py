@@ -172,13 +172,18 @@ def sparse_table(per_page: np.ndarray, op, identity) -> np.ndarray:
     return st
 
 
-def page_aggregates(vals: np.ndarray, cnt: np.ndarray):
+def page_aggregates(vals: np.ndarray, cnt: np.ndarray, mask_value=None):
     """Host-side per-page (sum, min, max) over the live prefix of each
-    value row ([P, lw_pad] + [P] live counts), vectorized."""
+    value row ([P, lw_pad] + [P] live counts), vectorized. ``mask_value``
+    (the mutable store's tombstone sentinel) excludes matching values —
+    mirroring the kernel's static mask, so interior-page aggregates and
+    boundary-page kernel lanes agree."""
     W = vals.shape[1]
     vd = vals.dtype
     id_min, id_max = agg_identities(vd)
     live = np.arange(W)[None, :] < np.asarray(cnt)[:, None]
+    if mask_value is not None:
+        live = live & (vals != vd.type(mask_value))
     psum = np.where(live, vals, 0).sum(axis=1, dtype=vd)
     pmin = np.where(live, vals, id_min).min(axis=1)
     pmax = np.where(live, vals, id_max).max(axis=1)
@@ -186,10 +191,12 @@ def page_aggregates(vals: np.ndarray, cnt: np.ndarray):
 
 
 def build_page_aux(cnt: np.ndarray, vals: Optional[np.ndarray],
-                   val_dtype=np.int32) -> ScanAux:
+                   val_dtype=np.int32, mask_value=None) -> ScanAux:
     """Device ScanAux from host truth: per-page live counts plus (optional)
     [P, lw_pad] value rows. With no values the sum/min/max members are
-    identity-filled (their outputs are ignored)."""
+    identity-filled (their outputs are ignored). ``mask_value`` excludes
+    tombstone-synced values from the value aggregates — ``cum_cnt`` stays
+    PHYSICAL (the shadow algebra subtracts deleted keys from counts)."""
     cnt = np.asarray(cnt, np.int64)
     P = cnt.size
     vd = np.dtype(val_dtype)
@@ -197,7 +204,8 @@ def build_page_aux(cnt: np.ndarray, vals: Optional[np.ndarray],
     cum_cnt[1:] = np.cumsum(cnt)
     id_min, id_max = agg_identities(vd)
     if vals is not None:
-        psum, pmin, pmax = page_aggregates(np.asarray(vals, vd), cnt)
+        psum, pmin, pmax = page_aggregates(np.asarray(vals, vd), cnt,
+                                           mask_value)
     else:
         psum = np.zeros(P, vd)
         pmin = np.full(P, id_min, vd)
@@ -255,7 +263,7 @@ class SpanScan(NamedTuple):
 
 def make_span_pipeline(span_of: Callable, *, num_pages: int, tile: int,
                        interpret: bool, key_dtype, val_dtype,
-                       mode: str = "full") -> Callable:
+                       mode: str = "full", mask_value=None) -> Callable:
     """The fused span-scan as a plain traceable fn
     ``pipeline(lo, hi, kpages, vpages, aux) -> SpanScan``.
 
@@ -294,6 +302,7 @@ def make_span_pipeline(span_of: Callable, *, num_pages: int, tile: int,
         def body(qbs, step_pages, g):
             return _pscan.page_scan_bucketed(qbs[0], qbs[1], step_pages,
                                              kpages, vpages, mode=mode,
+                                             mask_value=mask_value,
                                              interpret=interpret)
 
         outs = run_scheduled_multi(
@@ -547,71 +556,110 @@ class FlatAggregator:
 
 
 # -------------------------------------------------- mutable (paged) store
-def _delta_terms(lo, hi, fk, fv, fsh):
-    """Branch-free in-range scan of the flattened delta buffer: per-query
-    (count, sum, min, max) over live delta entries in [lo, hi], the
-    shadowed subset's (count, sum), and the below-lo counts for ranks.
+def _tier_terms(lo, hi, fk, fv, fsb, fss, ftomb):
+    """Branch-free in-range scan of one flattened delta tier (sealed or
+    active): the three-tier correction algebra of DESIGN.md §6.3.
+
+    Per query, over the tier's occupied slots:
+
+      cnt / vsum / vmin / vmax  — the tier's own LIVE (non-tomb)
+                                  contribution in [lo, hi];
+      sub      — count correction: one for every in-range sb entry (its
+                 base twin is physically counted whether the key is live
+                 or deleted — deleted base twins hold the tombstone
+                 sentinel, masked from value aggregates but not from the
+                 physical cum_cnt), plus one for every in-range LIVE ss
+                 entry (its sealed twin is synced live and double-counts;
+                 a tombstoned ss entry's twin is synced tomb and
+                 contributes nothing, so no correction);
+      sub_sum  — value correction: a live sb/ss entry's lower twin is
+                 value-synced to this entry's value, so subtracting fv
+                 removes the duplicate exactly (tomb entries subtract
+                 nothing — their lower twins are value-masked);
+      below / below_sub — the same pair over keys < lo (rank anchors).
+
     Gap slots hold the sentinel and can satisfy neither bound."""
     id_min, id_max = agg_identities(np.int32)
     inr = (fk[None, :] >= lo[:, None]) & (fk[None, :] <= hi[:, None])
     blw = fk[None, :] < lo[:, None]
-    shm = inr & fsh[None, :]
+    live = ~ftomb[None, :]
+    corr = fsb[None, :] | (fss[None, :] & live)      # sb and ss never co-set
+    vcorr = (fsb[None, :] | fss[None, :]) & live
     return dict(
-        cnt=jnp.sum(inr, -1).astype(jnp.int32),
-        vsum=jnp.sum(jnp.where(inr, fv, 0), -1),
-        vmin=jnp.min(jnp.where(inr, fv, id_min), -1),
-        vmax=jnp.max(jnp.where(inr, fv, id_max), -1),
-        sh_cnt=jnp.sum(shm, -1).astype(jnp.int32),
-        sh_sum=jnp.sum(jnp.where(shm, fv, 0), -1),
-        below=jnp.sum(blw, -1).astype(jnp.int32),
-        sh_below=jnp.sum(blw & fsh[None, :], -1).astype(jnp.int32),
+        cnt=jnp.sum(inr & live, -1).astype(jnp.int32),
+        sub=jnp.sum(inr & corr, -1).astype(jnp.int32),
+        vsum=jnp.sum(jnp.where(inr & live, fv, 0), -1),
+        sub_sum=jnp.sum(jnp.where(inr & vcorr, fv, 0), -1),
+        vmin=jnp.min(jnp.where(inr & live, fv, id_min), -1),
+        vmax=jnp.max(jnp.where(inr & live, fv, id_max), -1),
+        below=jnp.sum(blw & live, -1).astype(jnp.int32),
+        below_sub=jnp.sum(blw & corr, -1).astype(jnp.int32),
     )
 
 
-def _sorted_delta_window(fk, fv, lo, hi, K: int, offset: int):
-    """The in-range run of the key-sorted delta, per query, capped at
-    min(K, capacity) columns: (mask, keys, slot addresses [offset +
-    original flat slot], values, sorted keys). Delta entries are unique
-    and the gaps sort last (sentinel), so the matches of any [lo, hi] are
-    one contiguous run of the sorted view. Shared by the paged and
-    delta-only materialize paths."""
+def _sorted_tier_window(fk, fv, ftomb, lo, hi, offset: int):
+    """The in-range run of one key-sorted delta tier, per query, over the
+    tier's full ``capacity`` columns (tombstoned and superseded entries
+    interleave with live ones, so no shorter window is safe): (mask —
+    in-range AND live, keys, slot addresses [offset + original flat slot],
+    values, all sorted keys — for the callers' supersession membership
+    tests). Tier keys are unique and the gaps sort last (sentinel), so
+    the matches of any [lo, hi] are one contiguous run of the sorted
+    view."""
     cap = fk.shape[0]
     order = jnp.argsort(fk).astype(jnp.int32)        # sentinels last
     sk = jnp.take(fk, order)
     sv = jnp.take(fv, order)
-    Kd = min(K, cap)
+    stb = jnp.take(ftomb, order)
     dstart = jnp.sum(sk[None, :] < lo[:, None], -1).astype(jnp.int32)
-    didx = dstart[:, None] + jnp.arange(Kd, dtype=jnp.int32)[None, :]
+    didx = dstart[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
     didxc = jnp.clip(didx, 0, cap - 1)
     dkey = jnp.take(sk, didxc)
-    dok = (didx < cap) & (dkey >= lo[:, None]) & (dkey <= hi[:, None])
+    dok = (didx < cap) & (dkey >= lo[:, None]) & (dkey <= hi[:, None]) \
+        & ~jnp.take(stb, didxc)
     daddr = offset + jnp.take(order, didxc)
     dval = jnp.take(sv, didxc)
     return dok, dkey, daddr, dval, sk
 
 
-def make_paged_scan_fns(span_of: Callable, *, num_pages: int, lw_pad: int,
-                        tile: int, interpret: bool, key_dtype):
-    """Traceable fused scan over a gapped paged base + delta buffer with
-    the shadowed-key correction (DESIGN.md §8.2). Returns ``(make_agg,
-    make_mat)``:
+def _member(sorted_keys, query_keys):
+    """[Q, W] bool: each query key occupies a slot of the sorted tier
+    view (sentinels sort last and never match user keys)."""
+    cap = sorted_keys.shape[0]
+    pos = jnp.clip(jnp.searchsorted(sorted_keys,
+                                    query_keys).astype(jnp.int32),
+                   0, cap - 1)
+    return jnp.take(sorted_keys, pos) == query_keys
 
-    * ``make_agg(mode)`` — ``agg(lo, hi, kpages, vpages, aux, dk, dv,
-      dsh) -> (count, vsum, vmin, vmax, r_lo, r_hi_excl)`` at the static
-      pushdown depth ``mode`` (fields beyond it are None; count mode
-      never streams the value pages): exact merged aggregates and
-      delta-aware searchsorted ranks — base terms from the span pipeline,
-      delta terms from the branch-free buffer scan, shadowed terms
-      subtracted (count/sum; min/max need no correction — the insert path
-      syncs shadowed base values, making base ∪ delta a duplicate
-      multiset).
+
+def make_paged_scan_fns(span_of: Callable, *, num_pages: int, lw_pad: int,
+                        tile: int, interpret: bool, key_dtype,
+                        mask_value=None):
+    """Traceable fused scan over a gapped paged base + BOTH delta tiers
+    (sealed + active) with the three-tier shadow/tombstone correction
+    (DESIGN.md §6.3/§8.2). Returns ``(make_agg, make_mat)``:
+
+    * ``make_agg(mode)`` — ``agg(lo, hi, kpages, vpages, aux, sk, sv,
+      s_sb, s_ss, s_tb, ak, av, a_sb, a_ss, a_tb) -> (count, vsum, vmin,
+      vmax, r_lo, r_hi_excl)`` at the static pushdown depth ``mode``
+      (fields beyond it are None; count mode never streams the value
+      pages): exact merged aggregates and delta-aware searchsorted ranks
+      — base terms from the span pipeline (physical counts, tombstone
+      values masked by the kernel's static ``mask_value``), each tier's
+      live terms added and its sb/ss corrections subtracted
+      (:func:`_tier_terms`); min/max need no correction at all — the
+      write path value-syncs every lower twin, making the three tiers a
+      duplicate multiset over live keys.
     * ``make_mat(K, mode)`` — materialize at pushdown depth ``mode`` (the
-      aggregates ride the same dispatch): the first K merged matches'
-      slot addresses (base region, then delta region at ``P*lw_pad +
-      slot``) and values in key order, merged on device from a base
-      candidate window of K + capacity live ordinals (at most
-      ``capacity`` of them shadowed) and the in-range run of the
-      key-sorted delta.
+      aggregates ride the same dispatch): the first K merged live
+      matches' slot addresses (base region, then sealed at ``P*lw_pad +
+      slot``, then active at ``P*lw_pad + capacity + slot``) and values
+      in key order, merged on device from a base candidate window of
+      K + 2·capacity physical ordinals (at most 2·capacity of them
+      superseded by a tier twin) and each tier's in-range run — base
+      candidates with a twin in EITHER tier are dropped (the twin is the
+      newer copy or a tombstone), sealed candidates with an active twin
+      likewise, tombstones everywhere.
     """
     sent = sentinel_for(key_dtype)
     base_sz = num_pages * lw_pad
@@ -623,43 +671,53 @@ def make_paged_scan_fns(span_of: Callable, *, num_pages: int, lw_pad: int,
             p = pipes[mode] = make_span_pipeline(
                 span_of, num_pages=num_pages, tile=tile,
                 interpret=interpret, key_dtype=key_dtype,
-                val_dtype=np.int32, mode=mode)
+                val_dtype=np.int32, mode=mode, mask_value=mask_value)
         return p
 
-    def core(mode, lo, hi, kpages, vpages, aux, dk, dv, dsh):
+    def core(mode, lo, hi, kpages, vpages, aux, tiers):
         s = pipe(mode)(lo, hi, kpages, vpages, aux)
-        fk, fv, fsh = dk.reshape(-1), dv.reshape(-1), dsh.reshape(-1)
-        d = _delta_terms(lo, hi, fk, fv, fsh)
-        count = s.count + d["cnt"] - d["sh_cnt"]
-        vsum = vmin = vmax = None
-        if mode != "count":
-            vsum = s.vsum + d["vsum"] - d["sh_sum"]
-        if mode == "full":
-            vmin = jnp.minimum(s.vmin, d["vmin"])
-            vmax = jnp.maximum(s.vmax, d["vmax"])
-        below = aux.cum_cnt[s.plo] + s.lt_lo + d["below"] - d["sh_below"]
+        count = s.count
+        vsum = s.vsum if mode != "count" else None
+        vmin = s.vmin if mode == "full" else None
+        vmax = s.vmax if mode == "full" else None
+        below = aux.cum_cnt[s.plo] + s.lt_lo
+        for (dk, dv, dsb, dss, dtb) in tiers:
+            d = _tier_terms(lo, hi, dk.reshape(-1), dv.reshape(-1),
+                            dsb.reshape(-1), dss.reshape(-1),
+                            dtb.reshape(-1))
+            count = count + d["cnt"] - d["sub"]
+            below = below + d["below"] - d["below_sub"]
+            if mode != "count":
+                vsum = vsum + d["vsum"] - d["sub_sum"]
+            if mode == "full":
+                vmin = jnp.minimum(vmin, d["vmin"])
+                vmax = jnp.maximum(vmax, d["vmax"])
         return s, count, vsum, vmin, vmax, below
 
     def make_agg(mode: str):
-        def agg(lo, hi, kpages, vpages, aux, dk, dv, dsh):
+        def agg(lo, hi, kpages, vpages, aux,
+                sk, sv, s_sb, s_ss, s_tb, ak, av, a_sb, a_ss, a_tb):
             _, count, vsum, vmin, vmax, below = core(
-                mode, lo, hi, kpages, vpages, aux, dk, dv, dsh)
+                mode, lo, hi, kpages, vpages, aux,
+                ((sk, sv, s_sb, s_ss, s_tb), (ak, av, a_sb, a_ss, a_tb)))
             return count, vsum, vmin, vmax, below, below + count
         return agg
 
     def make_mat(K: int, mode: str = "count"):
-        def mat(lo, hi, kpages, vpages, aux, dk, dv, dsh):
+        def mat(lo, hi, kpages, vpages, aux,
+                sk, sv, s_sb, s_ss, s_tb, ak, av, a_sb, a_ss, a_tb):
             s, count, vsum, vmin, vmax, below = core(
-                mode, lo, hi, kpages, vpages, aux, dk, dv, dsh)
-            fk, fv = dk.reshape(-1), dv.reshape(-1)
-            cap = fk.shape[0]
-            # base candidates: live ordinals from the first in-range slot;
-            # K + cap of them suffice (at most cap are shadowed)
+                mode, lo, hi, kpages, vpages, aux,
+                ((sk, sv, s_sb, s_ss, s_tb), (ak, av, a_sb, a_ss, a_tb)))
+            sfk, sfv = sk.reshape(-1), sv.reshape(-1)
+            afk, afv = ak.reshape(-1), av.reshape(-1)
+            cap = sfk.shape[0]
+            # base candidates: physical ordinals from the first in-range
+            # slot; K + 2*cap suffice (each exclusion needs a tier twin)
             o_lo = aux.cum_cnt[s.plo] + s.lt_lo
-            W = K + cap
+            W = K + 2 * cap
             j = jnp.arange(W, dtype=jnp.int32)[None, :]
             ords = o_lo[:, None] + j
-            bvalid = j < s.count[:, None]
             pg = jnp.clip(
                 jnp.searchsorted(aux.cum_cnt, ords,
                                  side="right").astype(jnp.int32) - 1,
@@ -668,17 +726,26 @@ def make_paged_scan_fns(span_of: Callable, *, num_pages: int, lw_pad: int,
                             0, base_sz - 1)
             bkey = jnp.take(kpages.reshape(-1), addr, mode="clip")
             bval = jnp.take(vpages.reshape(-1), addr, mode="clip")
-            # delta candidates: the in-range run of the sorted delta
-            dok, dkey, daddr, dval, sk = _sorted_delta_window(
-                fk, fv, lo, hi, K, base_sz)
-            pos = jnp.clip(jnp.searchsorted(sk, bkey).astype(jnp.int32),
-                           0, cap - 1)
-            shadowed = jnp.take(sk, pos) == bkey        # key also in delta
-            bkey = jnp.where(bvalid & ~shadowed, bkey, sent)
-            dkey = jnp.where(dok, dkey, sent)
-            keys_all = jnp.concatenate([bkey, dkey], axis=1)
-            addr_all = jnp.concatenate([addr, daddr], axis=1)
-            val_all = jnp.concatenate([bval, dval], axis=1)
+            # keys are globally sorted across pages, so the in-range test
+            # bounds the physical window (overshoot reads larger keys or
+            # sentinels); tombstone-synced slots pass it but are dropped
+            # by their guaranteed tier twin below
+            bok = (bkey >= lo[:, None]) & (bkey <= hi[:, None])
+            # tier candidates: each tier's in-range live run
+            sok, skey, saddr, sval, s_sorted = _sorted_tier_window(
+                sfk, sfv, s_tb.reshape(-1), lo, hi, base_sz)
+            aok, akey, aaddr, aval, a_sorted = _sorted_tier_window(
+                afk, afv, a_tb.reshape(-1), lo, hi, base_sz + cap)
+            # supersession: any tier twin outranks a base copy; an active
+            # twin outranks a sealed copy (tomb twins delete them)
+            bok = bok & ~_member(s_sorted, bkey) & ~_member(a_sorted, bkey)
+            sok = sok & ~_member(a_sorted, skey)
+            bkey = jnp.where(bok, bkey, sent)
+            skey = jnp.where(sok, skey, sent)
+            akey = jnp.where(aok, akey, sent)
+            keys_all = jnp.concatenate([bkey, skey, akey], axis=1)
+            addr_all = jnp.concatenate([addr, saddr, aaddr], axis=1)
+            val_all = jnp.concatenate([bval, sval, aval], axis=1)
             ordx = jnp.argsort(keys_all, axis=1)[:, :K]
             rk = jnp.take_along_axis(addr_all, ordx, axis=1)
             vv = jnp.take_along_axis(val_all, ordx, axis=1)
@@ -692,48 +759,79 @@ def make_paged_scan_fns(span_of: Callable, *, num_pages: int, lw_pad: int,
 
 
 def make_delta_scan_fns(key_dtype):
-    """The base-less (delta-only) twin of :func:`make_paged_scan_fns` — a
-    mutable store before its first merge. No base means no shadows; ranks
-    are merged ranks over the delta alone. Returns ``(make_agg,
-    make_mat)`` like the paged form (the delta scan is cheap jnp either
-    way; narrower modes just return None fields, XLA prunes the rest)."""
+    """The base-less twin of :func:`make_paged_scan_fns` — a mutable store
+    before its first fold. Two tiers (sealed + active), no base: sb bits
+    are never set, ss corrections apply unchanged. Returns ``(make_agg,
+    make_mat)`` with the same 10 tier operands (the delta scan is cheap
+    jnp either way; narrower modes just return None fields, XLA prunes
+    the rest). Materialize addresses: sealed at ``slot``, active at
+    ``capacity + slot``."""
     sent = sentinel_for(key_dtype)
 
-    def _full(lo, hi, dk, dv, dsh):
-        fk, fv, fsh = dk.reshape(-1), dv.reshape(-1), dsh.reshape(-1)
-        d = _delta_terms(lo, hi, fk, fv, fsh)
-        return (d["cnt"], d["vsum"], d["vmin"], d["vmax"],
-                d["below"], d["below"] + d["cnt"])
+    def _terms(lo, hi, tiers):
+        count = below = jnp.zeros(lo.shape[0], jnp.int32)
+        vsum = jnp.zeros(lo.shape[0], jnp.int32)
+        id_min, id_max = agg_identities(np.int32)
+        vmin = jnp.full(lo.shape[0], id_min, jnp.int32)
+        vmax = jnp.full(lo.shape[0], id_max, jnp.int32)
+        for (dk, dv, dsb, dss, dtb) in tiers:
+            d = _tier_terms(lo, hi, dk.reshape(-1), dv.reshape(-1),
+                            dsb.reshape(-1), dss.reshape(-1),
+                            dtb.reshape(-1))
+            count = count + d["cnt"] - d["sub"]
+            below = below + d["below"] - d["below_sub"]
+            vsum = vsum + d["vsum"] - d["sub_sum"]
+            vmin = jnp.minimum(vmin, d["vmin"])
+            vmax = jnp.maximum(vmax, d["vmax"])
+        return count, vsum, vmin, vmax, below
 
     def make_agg(mode: str):
-        def agg(lo, hi, dk, dv, dsh):
-            count, vsum, vmin, vmax, below, r_hi = _full(lo, hi, dk, dv,
-                                                         dsh)
+        def agg(lo, hi, sk, sv, s_sb, s_ss, s_tb,
+                ak, av, a_sb, a_ss, a_tb):
+            count, vsum, vmin, vmax, below = _terms(
+                lo, hi, ((sk, sv, s_sb, s_ss, s_tb),
+                         (ak, av, a_sb, a_ss, a_tb)))
             if mode == "count":
                 vsum = vmin = vmax = None
             elif mode == "sum":
                 vmin = vmax = None
-            return count, vsum, vmin, vmax, below, r_hi
+            return count, vsum, vmin, vmax, below, below + count
         return agg
 
     def make_mat(K: int, mode: str = "count"):
-        def mat(lo, hi, dk, dv, dsh):
-            count, vsum, vmin, vmax, below, r_hi = _full(lo, hi, dk, dv,
-                                                         dsh)
+        def mat(lo, hi, sk, sv, s_sb, s_ss, s_tb,
+                ak, av, a_sb, a_ss, a_tb):
+            count, vsum, vmin, vmax, below = _terms(
+                lo, hi, ((sk, sv, s_sb, s_ss, s_tb),
+                         (ak, av, a_sb, a_ss, a_tb)))
             if mode == "count":
                 vsum = vmin = vmax = None
             elif mode == "sum":
                 vmin = vmax = None
-            fk, fv = dk.reshape(-1), dv.reshape(-1)
-            dok, _, daddr, dval, _ = _sorted_delta_window(
-                fk, fv, lo, hi, K, 0)
-            if dok.shape[1] < K:
-                pad = ((0, 0), (0, K - dok.shape[1]))
-                dok = jnp.pad(dok, pad)
-                daddr = jnp.pad(daddr, pad)
-                dval = jnp.pad(dval, pad)
+            cap = sk.reshape(-1).shape[0]
+            sok, skey, saddr, sval, _ = _sorted_tier_window(
+                sk.reshape(-1), sv.reshape(-1), s_tb.reshape(-1),
+                lo, hi, 0)
+            aok, akey, aaddr, aval, a_sorted = _sorted_tier_window(
+                ak.reshape(-1), av.reshape(-1), a_tb.reshape(-1),
+                lo, hi, cap)
+            sok = sok & ~_member(a_sorted, skey)
+            skey = jnp.where(sok, skey, sent)
+            akey = jnp.where(aok, akey, sent)
+            keys_all = jnp.concatenate([skey, akey], axis=1)
+            addr_all = jnp.concatenate([saddr, aaddr], axis=1)
+            val_all = jnp.concatenate([sval, aval], axis=1)
+            Kc = min(K, keys_all.shape[1])
+            ordx = jnp.argsort(keys_all, axis=1)[:, :Kc]
+            rk = jnp.take_along_axis(addr_all, ordx, axis=1)
+            vv = jnp.take_along_axis(val_all, ordx, axis=1)
+            if Kc < K:
+                pad = ((0, 0), (0, K - Kc))
+                rk = jnp.pad(rk, pad)
+                vv = jnp.pad(vv, pad)
+            valid = jnp.arange(K, dtype=jnp.int32)[None, :] < count[:, None]
             return (count, vsum, vmin, vmax, below, below + count,
-                    jnp.where(dok, daddr, -1), jnp.where(dok, dval, 0),
+                    jnp.where(valid, rk, -1), jnp.where(valid, vv, 0),
                     count > K)
         return mat
 

@@ -33,6 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import threading
 from typing import Any, Optional
 
 import numpy as np
@@ -47,6 +49,15 @@ from .schedule import _next_pow2
 # Target page fill after a pack or split: the remaining (1-fill)·leaf_width
 # gap slots are what lets a merge stay page-local instead of splitting.
 MERGE_FILL = 0.75
+
+# Reserved VALUE sentinel marking a deleted key (DESIGN.md §6.4). Values
+# are always int32 regardless of key dtype; user inserts of this value are
+# rejected. A tombstone-synced base slot keeps its key (physical counts
+# stay cheap) but holds this value, masked out of every value aggregate by
+# the kernel's static mask and removed for real at the next fold/repack.
+TOMBSTONE = int(np.iinfo(np.int32).min)
+
+MAINTENANCE_MODES = ("deferred", "inline", "thread")
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -151,35 +162,41 @@ class _PagedBase:
         self.derives += 1
 
     # ---------------------------------------------------------------- merge
-    def merge(self, dk: np.ndarray, dv: np.ndarray) -> dict:
+    def merge(self, dk: np.ndarray, dv: np.ndarray,
+              dt: Optional[np.ndarray] = None) -> dict:
         """Fold sorted unique delta entries into the leaf pages. Page-local
         when every touched page stays within leaf_width; otherwise the
-        overflowing pages split (num_pages changes, top re-derived)."""
+        overflowing pages split (num_pages changes, top re-derived).
+        ``dt`` flags tombstone rows: a tombstone with a resident twin
+        REMOVES the twin (the page may go empty — its stale separator
+        keeps routing, reclaimed at the next repack); one without a twin
+        is simply dropped."""
+        if dt is None:
+            dt = np.zeros(dk.shape, bool)
         P, lw = self.num_pages, self.leaf_width
         pids = np.minimum(np.searchsorted(self.seps, dk, side="left"), P - 1)
         merged = {}
         overflow = False
         for p in np.unique(pids):
             sel = pids == p
-            ks, vs = dk[sel], dv[sel]
+            ks, vs, ts = dk[sel], dv[sel], dt[sel]
             cnt = int(self.cnt[p])
             pk = self.keys[p, :cnt]
-            pv = self.vals[p, :cnt]
+            pv = self.vals[p, :cnt].copy()
             pos = np.searchsorted(pk, ks, side="left")
             if cnt:
                 isdup = (pos < cnt) & (pk[np.minimum(pos, cnt - 1)] == ks)
-                pv[pos[isdup]] = vs[isdup]          # upsert in place
             else:
                 isdup = np.zeros(ks.shape, bool)
-            newk, newv = ks[~isdup], vs[~isdup]
-            if newk.size:
-                mk = np.concatenate([pk, newk])
-                mv = np.concatenate([pv, newv])
-                order = np.argsort(mk, kind="stable")
-                mk, mv = mk[order], mv[order]
-            else:
-                mk, mv = pk.copy(), pv.copy()
-            merged[int(p)] = (mk, mv)
+            upd = isdup & ~ts
+            pv[pos[upd]] = vs[upd]                   # live upsert
+            keep = np.ones(cnt, bool)
+            keep[pos[isdup & ts]] = False            # tombstone: remove row
+            ins = ~isdup & ~ts                       # twin-less tomb: drop
+            mk = np.concatenate([pk[keep], ks[ins]])
+            mv = np.concatenate([pv[keep], vs[ins]])
+            order = np.argsort(mk, kind="stable")
+            merged[int(p)] = (mk[order], mv[order])
             overflow |= mk.size > lw
         if not overflow:
             self._write_rows(merged)
@@ -197,7 +214,14 @@ class _PagedBase:
             self.keys[p, :m] = mk
             self.vals[p, :m] = mv
             self.cnt[p] = m
-            self.seps[p] = mk[-1]
+            if m and mk[-1] > self.seps[p]:
+                self.seps[p] = mk[-1]            # grow-only (last page)
+            # separators NEVER shrink (tombstone removals can lower a
+            # page's max): the compiled top routes on build-time seps, so
+            # host routing must agree with it — a stale larger sep keeps
+            # both consistent, the vacated span just misses correctly.
+            # An empty page (everything tombstoned) likewise keeps its
+            # sep; the slot is reclaimed at the next repack.
         # device: one donated row-scatter, pow2-padded so the executable
         # cache stays O(log P) per shape family
         pad = _next_pow2(idx.size)
@@ -241,6 +265,41 @@ class _PagedBase:
         return {"touched": len(merged), "split": True, "splits": splits,
                 "rows_rewritten": num_pages, "num_pages": num_pages}
 
+    # ------------------------------------------------------------ snapshot
+    def state(self) -> dict:
+        """Snapshot of the leaf storage — everything a warm restore needs
+        to skip the O(n) sort/chunk build (the top tier is re-derived from
+        ``seps``, never persisted)."""
+        return {"keys": self.keys.copy(), "vals": self.vals.copy(),
+                "cnt": self.cnt.copy(), "seps": self.seps.copy(),
+                "meta": np.asarray([self.leaf_width, self.tile], np.int64)}
+
+    @classmethod
+    def from_state(cls, st: dict, *, top: str = "auto",
+                   vmem_budget: Optional[int] = None,
+                   interpret: bool = True) -> "_PagedBase":
+        """Adopt snapshot arrays directly (no sort, no chunking) and
+        re-derive the compiled top — the restore path's O(pages) build."""
+        from ..kernels import ops
+        self = cls.__new__(cls)
+        keys = np.array(st["keys"])
+        self.dtype = keys.dtype
+        self.sentinel = sentinel_for(self.dtype)
+        meta = np.asarray(st["meta"])
+        self.leaf_width = int(meta[0])
+        self.tile = int(meta[1])
+        self.top_cfg = top
+        self.vmem_budget = vmem_budget or ops.VMEM_BUDGET_BYTES
+        self.interpret = interpret
+        self.lw_pad = keys.shape[1]
+        self.keys = keys
+        self.vals = np.array(st["vals"], np.int32)
+        self.cnt = np.array(st["cnt"], np.int64)
+        self.seps = np.array(st["seps"], self.dtype)
+        self.derives = 0
+        self._derive()
+        return self
+
 
 class MutableIndex:
     """Mutable point-lookup store: delta buffer over a read-optimized base.
@@ -267,10 +326,24 @@ class MutableIndex:
         self._key_dtype = keys.dtype if keys.size else np.dtype(np.int32)
         self.delta = _delta.DeltaBuffer(config.delta_capacity,
                                         dtype=self._key_dtype)
+        # the frozen twin: a full active buffer swaps here and is folded
+        # into the base off the hot path (maintain); same capacity so the
+        # swap is O(1) and the fused lookup sees one compiled shape
+        self.sealed = _delta.DeltaBuffer(self.delta.capacity,
+                                         dtype=self._key_dtype)
+        self._mode = getattr(config, "maintenance", "deferred")
+        if self._mode not in MAINTENANCE_MODES:
+            raise ValueError(f"unknown maintenance mode {self._mode!r}; "
+                             f"want one of {MAINTENANCE_MODES}")
+        self._interval = getattr(config, "maintenance_interval_s", 0.05)
+        self._lock = threading.RLock()
+        self._timer = None
+        self._closed = False
         self.base: Any = None
-        self.stats = {"inserts": 0, "upserts": 0, "merges": 0, "splits": 0,
-                      "pages_touched": 0, "rows_rewritten": 0,
-                      "top_derives": 0, "base_rebuilds": 0, "shadowed": 0}
+        self.stats = {"inserts": 0, "upserts": 0, "deletes": 0, "merges": 0,
+                      "splits": 0, "pages_touched": 0, "rows_rewritten": 0,
+                      "top_derives": 0, "base_rebuilds": 0, "shadowed": 0,
+                      "seals": 0, "maintains": 0, "journal_replayed": 0}
         self._last_plan = None        # (q_n, steps, tile, P) of last lookup
         self._rev = 0                 # mutation revision (scan-state cache)
         self._dirty_rows = set()      # pages with host-synced shadow values
@@ -278,8 +351,19 @@ class MutableIndex:
         self._scan_aux = None         # (rev, ScanAux) device aggregates
         if keys.size:
             ks, vs = _dedup_last(keys, np.asarray(values, np.int32))
+            if np.any(vs == TOMBSTONE):
+                raise ValueError("value equals the tombstone sentinel "
+                                 f"({TOMBSTONE}); out of value domain")
             self._build_base(ks, vs)
         self._fused = self._make_lookup()
+        # durability (DESIGN.md §6.5): with a checkpoint dir configured,
+        # every write is journaled ahead of application; save() snapshots
+        # and rotates the journal segment
+        self._ckpt_dir = getattr(config, "ckpt_dir", None)
+        self._ckpt_keep = getattr(config, "ckpt_keep", 3)
+        self._journal = None
+        if self._ckpt_dir:
+            self._open_journal(self._ckpt_dir)
 
     # ---------------------------------------------------------------- build
     def _build_base(self, ks: np.ndarray, vs: np.ndarray):
@@ -296,83 +380,170 @@ class MutableIndex:
             self.stats["base_rebuilds"] += 1
 
     def _make_lookup(self):
-        """Fused lookup: (rank, found, values, plan_steps) in ONE dispatch.
-        ``plan_steps`` is the executed device plan's traced step count under
-        a paged base (the queue's occupancy feedback signal) and None
-        otherwise — an empty pytree leaf, so non-paged bases pay nothing."""
-        probe = _delta.probe
+        """Fused three-tier lookup: (rank, found, values, plan_steps) in
+        ONE dispatch over base + sealed + active delta. Recency resolves
+        newest-first — an active hit decides found = hit & ~tomb before
+        the sealed tier is consulted, sealed before the base — and a
+        tombstone anywhere reads as not-found. ``plan_steps`` is the
+        executed device plan's traced step count under a paged base (the
+        queue's occupancy feedback signal) and None otherwise."""
+        probe_full = _delta.probe_full
+
+        def overlay(q, bfound, bval, tiers):
+            # tiers newest-first: [(dk, dv, dtb, dsp), ...]
+            found, val = bfound, bval
+            for dk, dv, dtb, dsp in reversed(tiers):   # oldest applied last
+                hit, tomb, tval = probe_full(q, dk, dv, dtb, dsp)
+                found = jnp.where(hit, ~tomb, found)
+                val = jnp.where(hit, tval, val)
+            return found, val
+
         if self.base is None:
-            def fused(q, dk, dv, ds):
-                hit, val = probe(q, dk, dv, ds)
-                return jnp.zeros(q.shape, jnp.int32), hit, val, None
+            def fused(q, ak, av, atb, asp, sk, sv, stb, ssp):
+                found, val = overlay(
+                    q, jnp.zeros(q.shape, bool), jnp.zeros(q.shape,
+                                                           jnp.int32),
+                    [(ak, av, atb, asp), (sk, sv, stb, ssp)])
+                return jnp.zeros(q.shape, jnp.int32), found, val, None
             return jax.jit(fused)
         if isinstance(self.base, _PagedBase):
             pipeline = self.base.pipeline_stats
-            def fused(q, pages, vpages, dk, dv, ds):
+            def fused(q, pages, vpages, ak, av, atb, asp, sk, sv, stb, ssp):
                 addr, steps = pipeline(q, pages)
-                bfound = jnp.take(pages.reshape(-1), addr, axis=0,
-                                  mode="clip") == q
                 bval = jnp.take(vpages.reshape(-1), addr, axis=0,
                                 mode="clip")
-                dhit, dval = probe(q, dk, dv, ds)
-                return addr, dhit | bfound, jnp.where(dhit, dval, bval), steps
+                # a tombstone-synced base slot is a deleted key: its tier
+                # twin answers first anyway, the value guard is the
+                # restore-path belt-and-braces
+                bfound = (jnp.take(pages.reshape(-1), addr, axis=0,
+                                   mode="clip") == q) & (bval != TOMBSTONE)
+                found, val = overlay(q, bfound, bval,
+                                     [(ak, av, atb, asp),
+                                      (sk, sv, stb, ssp)])
+                return addr, found, val, steps
             return jax.jit(fused)
         base = self.base                       # core Index: traceable facade
-        def fused(q, dk, dv, ds):
+        def fused(q, ak, av, atb, asp, sk, sv, stb, ssp):
             res = base.lookup(q)
-            dhit, dval = probe(q, dk, dv, ds)
-            return (res.rank, dhit | res.found,
-                    jnp.where(dhit, dval, res.values), None)
+            found, val = overlay(q, res.found, res.values,
+                                 [(ak, av, atb, asp), (sk, sv, stb, ssp)])
+            return res.rank, found, val, None
         return jax.jit(fused)
 
     # ---------------------------------------------------------------- write
     def insert(self, keys, values):
-        """Upsert a batch. O(delta work) per key; an overflowing buffer is
-        merged into the base (page-local under a tiered base).
-
-        Under a paged base each key is host-probed for a live base twin
-        (O(log) numpy): a hit marks the delta slot *shadowed* and syncs the
-        base value host-side (pushed to device lazily by the next scan).
-        Lookups never read the stale base value (delta wins by recency),
-        and the sync makes base ∪ delta a duplicate multiset — min/max
-        range aggregates need no correction at all, count/sum subtract the
-        shadowed terms exactly (DESIGN.md §8.2)."""
+        """Upsert a batch. O(w) per key on the hot path: a full active
+        buffer SWAPS with the empty sealed twin (O(1)) instead of merging
+        inline — the fold into the leaf pages runs off the hot path
+        (:meth:`maintain`, explicit / inline / timer-thread per the
+        ``maintenance`` config knob). Writes sync every lower twin of the
+        key to the newest state (sealed value+tomb, base value), which is
+        what keeps the scan algebra's corrections exact and min/max
+        duplicate-insensitive (DESIGN.md §6.3)."""
         keys = np.atleast_1d(np.asarray(keys, self._key_dtype))
         values = np.atleast_1d(np.asarray(values, np.int32))
         if keys.shape != values.shape:
             raise ValueError("keys/values must align")
-        for k, v in zip(keys, values):
-            if self.delta.full:
-                self._merge()
-            shadows = False
-            base = self.base
-            if isinstance(base, _PagedBase):
-                slot = base.find_slot(k)
-                if slot is not None:
-                    shadows = True
-                    p, pos = slot
-                    if base.vals[p, pos] != v:
-                        base.vals[p, pos] = v
-                        self._dirty_rows.add(int(p))
-            if self.delta.insert(k, v, shadows=shadows):
-                self.stats["inserts"] += 1
-                if shadows:
-                    self.stats["shadowed"] += 1
-            else:
-                self.stats["upserts"] += 1
-        self._rev += 1
+        if np.any(values == TOMBSTONE):
+            raise ValueError("value equals the tombstone sentinel "
+                             f"({TOMBSTONE}); out of value domain")
+        self._write(keys, values, delete=False)
 
-    def _merge(self):
-        dk, dv = self.delta.drain()
-        if dk.size == 0:
-            return
-        self.stats["merges"] += 1
+    def delete(self, keys):
+        """Delete a batch by key — a tombstone sentinel through the same
+        delta path as insert (idempotent; deleting an absent key is a
+        no-op tombstone). Lookups read the key as not-found immediately;
+        scans mask it; the fold physically removes the base row and the
+        repack reclaims the slot."""
+        keys = np.atleast_1d(np.asarray(keys, self._key_dtype))
+        self._write(keys, np.full(keys.shape, TOMBSTONE, np.int32),
+                    delete=True)
+
+    def _write(self, keys, values, *, delete: bool):
+        with self._lock:
+            jr = self._journal
+            for k, v in zip(keys, values):
+                if jr is not None:               # write-ahead, then apply
+                    jr.append(k, 0 if delete else int(v), delete=delete)
+                if self.delta.full:
+                    self._seal()
+                # ---- lower-twin sync + bit derivation (DESIGN.md §6.3):
+                # sb = no sealed twin AND a base twin exists (this entry
+                # carries the base copy's correction); ss = a sealed twin
+                # exists (the sealed entry keeps carrying any sb)
+                sslot = self.sealed.find(k)
+                ss = sslot is not None
+                if ss:
+                    self.sealed.sync(sslot, int(v), delete)
+                sb = False
+                base = self.base
+                if isinstance(base, _PagedBase):
+                    slot = base.find_slot(k)
+                    if slot is not None:
+                        sb = not ss
+                        p, pos = slot
+                        nv = TOMBSTONE if delete else v
+                        if base.vals[p, pos] != nv:
+                            base.vals[p, pos] = nv
+                            self._dirty_rows.add(int(p))
+                elif base is not None:           # wholesale: membership only
+                    bk = self._flat[0]
+                    pos = int(np.searchsorted(bk, k, side="left"))
+                    sb = (not ss) and pos < bk.size and bk[pos] == k
+                if self.delta.insert(k, v, shadows=sb, shadows_sealed=ss,
+                                     tomb=delete):
+                    self.stats["deletes" if delete else "inserts"] += 1
+                    if sb:
+                        self.stats["shadowed"] += 1
+                else:
+                    self.stats["upserts"] += 1
+            if jr is not None:
+                jr.flush()
+            self._rev += 1
+
+    def _seal(self):
+        """Swap the full active buffer with the (empty) sealed twin — the
+        O(1) hot-path hand-off. Backpressure: if the previous sealed
+        buffer has not been folded yet, fold it now (the only path where
+        a writer still pays a merge — sustained pressure with maintenance
+        disabled or lagging)."""
+        if self.sealed.count:
+            self.maintain()
+        self.delta, self.sealed = self.sealed, self.delta
+        self.stats["seals"] += 1
         self._rev += 1
+        if self._mode == "inline":
+            self.maintain()
+        elif self._mode == "thread":
+            self._arm_timer()
+
+    def maintain(self) -> bool:
+        """Fold the sealed buffer into the base — the off-hot-path
+        maintenance step. Returns True when a fold ran. After the fold
+        the active buffer's ss bits are promoted (live ss -> sb: the twin
+        is now a physical base copy) or cleared (tombstoned ss: the twin
+        was removed with the fold)."""
+        with self._lock:
+            if self.sealed.count == 0:
+                return False
+            dk, dv, dt = self.sealed.drain()
+            self.stats["maintains"] += 1
+            self.stats["merges"] += 1
+            self._rev += 1
+            self._fold(dk, dv, dt)
+            self.delta.promote_ss()
+            return True
+
+    def _fold(self, dk, dv, dt):
+        live = ~dt
         if self.base is None:
-            self._build_base(dk, dv)
-            self._dirty_rows.clear()
-        elif isinstance(self.base, _PagedBase):
-            info = self.base.merge(dk, dv)
+            if live.any():
+                self._build_base(dk[live], dv[live])
+                self._dirty_rows.clear()
+                self._fused = self._make_lookup()
+            return
+        if isinstance(self.base, _PagedBase):
+            info = self.base.merge(dk, dv, dt)
             self.stats["pages_touched"] += info["touched"]
             self.stats["rows_rewritten"] += info["rows_rewritten"]
             self.stats["top_derives"] = self.base.derives
@@ -380,26 +551,72 @@ class MutableIndex:
                 # repack renumbered the pages; stale dirty-row ids die here
                 self._dirty_rows.clear()
                 self.stats["splits"] += info["splits"]
-            else:
-                # page-local merge: pipeline unchanged, keep the compiled
-                # fused lookup (rows flow in as arguments)
-                return
-        else:                                  # wholesale (non-tiered base)
-            bk, bv = self._flat
-            pos = np.searchsorted(bk, dk, side="left")
+                self._fused = self._make_lookup()
+            # page-local merge: pipeline unchanged, keep the compiled
+            # fused lookup (rows flow in as arguments)
+            return
+        # wholesale (non-tiered base): rebuild with upserts + removals
+        bk, bv = self._flat
+        pos = np.searchsorted(bk, dk, side="left")
+        if bk.size:
             isdup = (pos < bk.size) & \
-                (bk[np.minimum(pos, max(bk.size - 1, 0))] == dk)
-            bv = bv.copy()
-            bv[pos[isdup]] = dv[isdup]
-            mk = np.concatenate([bk, dk[~isdup]])
-            mv = np.concatenate([bv, dv[~isdup]])
+                (bk[np.minimum(pos, bk.size - 1)] == dk)
+        else:
+            isdup = np.zeros(dk.shape, bool)
+        bv = bv.copy()
+        upd = isdup & live
+        bv[pos[upd]] = dv[upd]
+        keep = np.ones(bk.size, bool)
+        keep[pos[isdup & dt]] = False
+        ins = ~isdup & live
+        mk = np.concatenate([bk[keep], dk[ins]])
+        mv = np.concatenate([bv[keep], dv[ins]])
+        if mk.size:
             order = np.argsort(mk, kind="stable")
             self._build_base(mk[order], mv[order])
+        else:
+            self.base = None                     # everything deleted
         self._fused = self._make_lookup()
 
     def flush(self):
-        """Force-merge the delta into the base (tests/benchmarks)."""
-        self._merge()
+        """Force-fold everything (sealed, then active) into the base —
+        tests/benchmarks and the pre-snapshot quiesce."""
+        with self._lock:
+            if self.delta.count:
+                self._seal()                     # folds old sealed first
+            self.maintain()
+
+    # ------------------------------------------------------- worker thread
+    def _arm_timer(self):
+        """Arm the one-shot maintenance timer (``maintenance="thread"``),
+        mirroring engine/queue.py's timer discipline: identity-checked
+        under the lock, idempotent, dead after close()."""
+        with self._lock:
+            if self._closed or self._timer is not None:
+                return
+            t = threading.Timer(self._interval, self._tick)
+            t.daemon = True
+            self._timer = t
+            t.start()
+
+    def _tick(self):
+        with self._lock:
+            self._timer = None
+            if self._closed:
+                return
+            self.maintain()
+
+    def close(self):
+        """Cancel the maintenance timer and close the journal (idempotent;
+        the store stays readable)."""
+        with self._lock:
+            self._closed = True
+            t, self._timer = self._timer, None
+            jr, self._journal = self._journal, None
+        if t is not None:
+            t.cancel()
+        if jr is not None:
+            jr.close()
 
     # ---------------------------------------------------------------- read
     def lookup(self, queries):
@@ -409,15 +626,20 @@ class MutableIndex:
         :meth:`pop_plan_feedback`."""
         from ..core.api import LookupResult
         q = jnp.asarray(queries)
-        dk, dv, ds = self.delta.device_state()
-        if isinstance(self.base, _PagedBase):
-            rank, found, vals, steps = self._fused(
-                q, self.base.dev_keys, self.base.dev_vals, dk, dv, ds)
-            self._last_plan = (int(q.shape[0]), steps, self.base.tile,
-                               self.base.num_pages)
-        else:
-            rank, found, vals, _ = self._fused(q, dk, dv, ds)
-            self._last_plan = None
+        with self._lock:
+            ak, av, asp = self.delta.device_state()
+            _, _, atb = self.delta.device_bits()
+            sk, sv, ssp = self.sealed.device_state()
+            _, _, stb = self.sealed.device_bits()
+            tiers = (ak, av, atb, asp, sk, sv, stb, ssp)
+            if isinstance(self.base, _PagedBase):
+                rank, found, vals, steps = self._fused(
+                    q, self.base.dev_keys, self.base.dev_vals, *tiers)
+                self._last_plan = (int(q.shape[0]), steps, self.base.tile,
+                                   self.base.num_pages)
+            else:
+                rank, found, vals, _ = self._fused(q, *tiers)
+                self._last_plan = None
         return LookupResult(rank=rank, found=found, values=vals)
 
     def pop_plan_feedback(self):
@@ -452,7 +674,7 @@ class MutableIndex:
                 make_agg, make_mat = _scan.make_paged_scan_fns(
                     span_of, num_pages=base.num_pages, lw_pad=base.lw_pad,
                     tile=base.tile, interpret=base.interpret,
-                    key_dtype=base.dtype)
+                    key_dtype=base.dtype, mask_value=TOMBSTONE)
             self._scan_jit = {"key": key, "make_agg": make_agg,
                               "aggs": {}, "make_mat": make_mat, "mats": {}}
         if self._scan_aux is None or self._scan_aux[0] != self._rev:
@@ -471,9 +693,17 @@ class MutableIndex:
                         jnp.asarray(base.keys[idx_p]),
                         jnp.asarray(base.vals[idx_p]))
                     self._dirty_rows.clear()
-                aux = _scan.build_page_aux(base.cnt, base.vals, np.int32)
+                aux = _scan.build_page_aux(base.cnt, base.vals, np.int32,
+                                           mask_value=TOMBSTONE)
             self._scan_aux = (self._rev, aux)
         return self._scan_jit, self._scan_aux[1]
+
+    def _tier_scan_ops(self, buf):
+        """One tier's five scan operands (keys, vals, sb, ss, tomb) as
+        cached device mirrors."""
+        k, v, _ = buf.device_state()
+        sb, ss, tb = buf.device_bits()
+        return k, v, sb, ss, tb
 
     def scan_range(self, lo, hi, *, aggs=None, materialize=None):
         """Batched delta-aware range scan (DESIGN.md §8.2): count / sum /
@@ -490,18 +720,19 @@ class MutableIndex:
         mode = _scan.mode_for_aggs(aggs)
         lo = jnp.asarray(lo, self._key_dtype)
         hi = jnp.asarray(hi, self._key_dtype)
-        st = self._ensure_scan()
-        if st is None:
-            return self._scan_host(np.asarray(lo), np.asarray(hi),
-                                   mode, materialize)
-        jits, aux = st
-        dk, dv, _ = self.delta.device_state()
-        dsh = self.delta.device_shadow()
-        base = self.base
+        with self._lock:
+            st = self._ensure_scan()
+            if st is None:
+                return self._scan_host(np.asarray(lo), np.asarray(hi),
+                                       mode, materialize)
+            jits, aux = st
+            tiers = (*self._tier_scan_ops(self.sealed),
+                     *self._tier_scan_ops(self.delta))
+            base = self.base
         if base is None:
-            args = (lo, hi, dk, dv, dsh)
+            args = (lo, hi, *tiers)
         else:
-            args = (lo, hi, base.dev_keys, base.dev_vals, aux, dk, dv, dsh)
+            args = (lo, hi, base.dev_keys, base.dev_vals, aux, *tiers)
         if materialize is None:
             fn = jits["aggs"].get(mode)
             if fn is None:
@@ -541,11 +772,22 @@ class MutableIndex:
         else:
             bk = np.empty(0, self._key_dtype)
             bv = np.empty(0, np.int32)
-        dk, dv = self.delta.live()
-        if dk.size:
-            keep = ~np.isin(bk, dk)                  # delta wins (recency)
-            mk = np.concatenate([bk[keep], dk])
-            mv = np.concatenate([bv[keep], dv])
+        # overlay newest-last: active wins over sealed wins over base;
+        # a tombstone anywhere above the base deletes the key
+        ov = {}
+        for buf in (self.sealed, self.delta):
+            k, v, _, _, tb = buf.entries()
+            for i in range(k.size):
+                ov[k[i].item()] = (int(v[i]), bool(tb[i]))
+        if ov:
+            okeys = np.asarray(sorted(ov), self._key_dtype)
+            keep = ~np.isin(bk, okeys)
+            lk = [k for k in sorted(ov) if not ov[k][1]]
+            mk = np.concatenate([bk[keep],
+                                 np.asarray(lk, self._key_dtype)])
+            mv = np.concatenate([bv[keep],
+                                 np.asarray([ov[k][0] for k in lk],
+                                            np.int32)])
             order = np.argsort(mk, kind="stable")
             mk, mv = mk[order], mv[order]
         else:
@@ -584,14 +826,165 @@ class MutableIndex:
 
     @property
     def n(self) -> int:
-        """Live key count. Under a paged base this is exact — shadowed
-        delta keys (live in both tiers) are tracked at insert and counted
-        once; under other bases, un-merged delta upserts may double-count
-        (upper bound, exact after a merge)."""
+        """Exact live key count — the full-range instance of the scan
+        algebra: physical base count, plus each tier's live entries, minus
+        its corrections (every sb entry has exactly one physical base
+        copy — live duplicate or tombstone-synced slot — and every live
+        ss entry a synced sealed duplicate)."""
         base_n = self.base.n if self.base is not None else 0
-        shadowed = int(self.delta.h_shadow.sum()) \
-            if isinstance(self.base, _PagedBase) else 0
-        return base_n + self.delta.count - shadowed
+        if self.base is not None and not isinstance(self.base, _PagedBase):
+            base_n = int(self._flat[0].size)
+        for buf in (self.sealed, self.delta):
+            _, _, sb, ss, tb = buf.entries()
+            live = ~tb
+            base_n += int(live.sum()) - int(sb.sum()) \
+                - int((ss & live).sum())
+        return base_n
+
+    # ----------------------------------------------------------- durability
+    def _open_journal(self, ckpt_dir: str):
+        """Open (or continue) the journal segment for the current latest
+        snapshot step, truncating any torn tail and resuming the sequence
+        counter after the last valid record."""
+        from ..ckpt import checkpoint as _ckpt
+        from ..ckpt import journal as _jr
+        os.makedirs(ckpt_dir, exist_ok=True)
+        step = _ckpt.latest_step(ckpt_dir) or 0
+        path = _jr.segment_path(ckpt_dir, step)
+        seq = 0
+        if os.path.exists(path):
+            _jr.truncate_torn(path)
+            _, recs = _jr.read_segment(path)
+            if recs:
+                seq = recs[-1][0] + 1
+        self._journal = _jr.Journal(path, self._key_dtype, next_seq=seq)
+
+    def save(self, ckpt_dir: Optional[str] = None) -> str:
+        """Snapshot the full index state (leaf pages, both delta tiers,
+        counters) through the manifest-verified checkpoint writer, then
+        rotate the journal to a fresh segment keyed by the new step. A
+        crash between journal writes and the next save loses nothing: the
+        previous snapshot + its segment replay reconstruct this exact
+        state (DESIGN.md §6.5)."""
+        from ..ckpt import checkpoint as _ckpt
+        with self._lock:
+            d = ckpt_dir or self._ckpt_dir
+            if d is None:
+                raise ValueError("no checkpoint directory: pass ckpt_dir "
+                                 "or set IndexConfig.ckpt_dir")
+            step = (_ckpt.latest_step(d) or 0) + 1
+            tree = {"active": self.delta.state(),
+                    "sealed": self.sealed.state()}
+            if isinstance(self.base, _PagedBase):
+                tree["base"] = self.base.state()
+            elif self.base is not None:
+                bk, bv = self._flat
+                tree["flat"] = {"keys": bk.copy(), "vals": bv.copy()}
+            path = _ckpt.save(d, step, tree, keep=self._ckpt_keep)
+            self._rotate_journal(d, step)
+            return path
+
+    def _rotate_journal(self, ckpt_dir: str, step: int):
+        from ..ckpt import checkpoint as _ckpt
+        from ..ckpt import journal as _jr
+        old, seq = self._journal, 0
+        if old is not None:
+            seq = old.seq
+            old.close()
+        self._journal = _jr.Journal(_jr.segment_path(ckpt_dir, step),
+                                    self._key_dtype, next_seq=seq)
+        self._ckpt_dir = self._ckpt_dir or ckpt_dir
+        # GC segments no retained snapshot can replay from
+        retained = _ckpt.all_steps(ckpt_dir)
+        floor = min(retained) if retained else 0
+        for s, p in _jr.scan_dir(ckpt_dir):
+            if s < floor and s != step:
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, config) -> "MutableIndex":
+        """Bring a store back servable from the newest VERIFYING snapshot
+        (a corrupt/torn latest degrades to the previous step) plus a
+        journal replay of every write after it — O(pages) array adoption
+        + one top derive + at most the un-snapshotted writes, never an
+        O(n) rebuild. Journaling resumes on the restored store."""
+        from ..ckpt import checkpoint as _ckpt
+        from ..ckpt import journal as _jr
+        cfg = dataclasses.replace(config, ckpt_dir=None) \
+            if getattr(config, "ckpt_dir", None) else config
+        self = cls(cfg)
+        try:
+            raw, step = _ckpt.restore(ckpt_dir, None)
+        except FileNotFoundError:
+            raw, step = None, 0                  # journal-only recovery
+        if raw is not None:
+            def sub(prefix):
+                return {k[len(prefix) + 1:]: v for k, v in raw.items()
+                        if k.startswith(prefix + "/")}
+            self.delta = _delta.DeltaBuffer.from_state(sub("active"))
+            self.sealed = _delta.DeltaBuffer.from_state(sub("sealed"))
+            self._key_dtype = self.delta.dtype
+            if "base/keys" in raw:
+                self.base = _PagedBase.from_state(
+                    sub("base"), top=getattr(config, "top", "auto"))
+                self.stats["top_derives"] = self.base.derives
+            elif "flat/keys" in raw:
+                self._build_base(np.asarray(raw["flat/keys"]),
+                                 np.asarray(raw["flat/vals"], np.int32))
+            self._fused = self._make_lookup()
+            self._rev += 1
+        applied, last_seq = self._replay(ckpt_dir, step)
+        self.stats["journal_replayed"] = applied
+        segs = [s for s, _ in _jr.scan_dir(ckpt_dir) if s >= step]
+        seg = max(segs) if segs else step
+        path = _jr.segment_path(ckpt_dir, seg)
+        if os.path.exists(path):
+            _jr.truncate_torn(path)
+        self._ckpt_dir = ckpt_dir
+        self._journal = _jr.Journal(path, self._key_dtype,
+                                    next_seq=last_seq + 1)
+        return self
+
+    def _replay(self, ckpt_dir: str, from_step: int):
+        """Apply journaled writes from every segment at/after the restored
+        step, in step order, stopping at the first torn/corrupt record or
+        sequence regression (everything before it is intact by CRC)."""
+        from ..ckpt import journal as _jr
+        applied, last = 0, -1
+        run_op, run_k, run_v = None, [], []
+
+        def flush_run():
+            if not run_k:
+                return
+            ks = np.asarray(run_k, self._key_dtype)
+            if run_op == _jr.OP_DELETE:
+                self.delete(ks)
+            else:
+                self.insert(ks, np.asarray(run_v, np.int32))
+
+        for s, p in _jr.scan_dir(ckpt_dir):
+            if s < from_step:
+                continue
+            _, recs = _jr.read_segment(p)
+            for seq, op, k, v in recs:
+                if seq <= last:
+                    flush_run()                 # replay order broken: stop
+                    return applied, last
+                last = seq
+                # batch consecutive same-op records into one write call —
+                # _write applies keys sequentially, so this is equivalent
+                # to per-record application, minus the per-call overhead
+                if op != run_op:
+                    flush_run()
+                    run_op, run_k, run_v = op, [], []
+                run_k.append(k)
+                run_v.append(v)
+                applied += 1
+        flush_run()
+        return applied, last
 
     @property
     def tree_bytes(self) -> int:

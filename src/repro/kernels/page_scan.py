@@ -59,7 +59,7 @@ def _kernel_count(page_ids_ref, lo_ref, hi_ref, kpages_ref,
 
 
 def _kernel_values(page_ids_ref, lo_ref, hi_ref, kpages_ref, vpages_ref,
-                   *out_refs, mode: str, id_min, id_max):
+                   *out_refs, mode: str, id_min, id_max, mask_value=None):
     k = kpages_ref[...][0, :]
     v = vpages_ref[...][0, :]
     lo = lo_ref[...][0, :]
@@ -73,6 +73,12 @@ def _kernel_values(page_ids_ref, lo_ref, hi_ref, kpages_ref, vpages_ref,
     # inert (impossible) pair ~below keeps only sentinel slots, which can
     # never satisfy le — the mask is empty
     m = ~below & le
+    if mask_value is not None:
+        # tombstone-synced slots (mutable store, DESIGN.md §6.3): the key
+        # still occupies the page (counts stay physical — the delta's sb
+        # bit subtracts it) but its value is the reserved sentinel and
+        # must not enter sum/min/max
+        m = m & (v != mask_value)[None, :]
     vt = v[None, :]
     out_refs[2][...] = jnp.sum(jnp.where(m, vt, 0), axis=-1)[None, :]
     if mode == "full":
@@ -85,7 +91,7 @@ def _kernel_values(page_ids_ref, lo_ref, hi_ref, kpages_ref, vpages_ref,
 def page_scan_bucketed(lo_b: jnp.ndarray, hi_b: jnp.ndarray,
                        page_ids: jnp.ndarray, kpages: jnp.ndarray,
                        vpages: jnp.ndarray = None, *, mode: str = "full",
-                       interpret: bool = True):
+                       mask_value=None, interpret: bool = True):
     """lo_b, hi_b: [G, TQ] — step g's lanes all scan page page_ids[g] with
     per-lane inclusive bounds; kpages (and, for value modes, the aligned
     vpages): [num_pages, lw_pad] leaf storage (keys sentinel-padded; pad
@@ -99,6 +105,11 @@ def page_scan_bucketed(lo_b: jnp.ndarray, hi_b: jnp.ndarray,
       "full"   ->  (lt, le, vsum, vmin, vmax)
 
     where per lane
+    The static ``mask_value`` (value modes only) excludes slots whose
+    VALUE equals it from sum/min/max — the mutable store's tombstone
+    sentinel (counts stay physical; the caller's shadow algebra corrects
+    them). ``None`` (immutable stores) compiles the mask out entirely.
+
       lt    |{slot : key < lo}|  (the rank anchor; gaps never count)
       le    |{slot : key <= hi}| — the in-range count is
             ``max(le - lt, 0)``, computed by the caller once per dispatch
@@ -129,7 +140,9 @@ def page_scan_bucketed(lo_b: jnp.ndarray, hi_b: jnp.ndarray,
                                      (pids[g], 0)))
         operands.append(vpages)
         kern = functools.partial(_kernel_values, mode=mode,
-                                 id_min=id_min, id_max=id_max)
+                                 id_min=id_min, id_max=id_max,
+                                 mask_value=None if mask_value is None
+                                 else vd.type(mask_value))
     out_dtypes = [jnp.int32, jnp.int32] + [vpages.dtype] * (n_out - 2) \
         if mode != "count" else [jnp.int32, jnp.int32]
     grid_spec = pltpu.PrefetchScalarGridSpec(

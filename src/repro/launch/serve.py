@@ -54,7 +54,18 @@ def main():
                          "admission lanes (0 = single default tenant)")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-p", type=float, default=0.9)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="snapshot directory for the prefix store "
+                         "(DESIGN.md §6.5); the store is saved there after "
+                         "the run, and the mutable index journals its "
+                         "writes for crash recovery")
+    ap.add_argument("--restore", action="store_true",
+                    help="warm-start the prefix store from --ckpt-dir "
+                         "(newest verifiable snapshot + journal replay) "
+                         "before serving")
     args = ap.parse_args()
+    if args.restore and not args.ckpt_dir:
+        ap.error("--restore requires --ckpt-dir")
 
     import jax
     from ..configs import get_config
@@ -82,6 +93,19 @@ def main():
                                  not args.no_adaptive_deadline),
         decode_batching=not args.no_decode_queue,
         sampler=SamplerConfig(temperature=args.temperature, top_p=args.top_p))
+    restore_s = None
+    if args.restore:
+        import time
+        import jax.numpy as jnp
+        from ..serve.kv_cache import PrefixPageStore
+        t0 = time.perf_counter()
+        eng.store = PrefixPageStore.restore(
+            args.ckpt_dir, index_config=eng.store.index_config)
+        if eng.store._index is not None:       # warm the probe jit: servable
+            eng.store._index.lookup(jnp.zeros(1, jnp.int32))
+        restore_s = time.perf_counter() - t0
+        print(f"restored prefix store: {len(eng.store.hashes)} pages "
+              f"from {args.ckpt_dir}")
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
     prompts = [np.concatenate([
@@ -118,6 +142,12 @@ def main():
               f"{ts.wait_max_s*1e6:.0f}us, occ share {ts.mean_occ_share:.3f}")
     if eng.store.index_config.mutable:
         print(f"write path:   {eng.store.index_stats}")
+    if restore_s is not None:
+        print(f"restore:      {restore_s:.3f}s snapshot+journal-replay to "
+              f"servable (no wholesale rebuild)")
+    if args.ckpt_dir:
+        path = eng.store.save(args.ckpt_dir)
+        print(f"saved prefix store: {len(eng.store.hashes)} pages -> {path}")
 
 
 if __name__ == "__main__":

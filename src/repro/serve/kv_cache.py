@@ -18,6 +18,7 @@ tokens before reuse (the index accelerates, correctness never depends on it).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -181,6 +182,68 @@ class PrefixPageStore:
         res = self._index.lookup(jnp.asarray(hs))
         return self._verify(prompt_tokens, hs, np.asarray(res.found),
                             np.asarray(res.values))
+
+    # ---------------------------------------------------------------- durability
+    def save(self, ckpt_dir: str) -> str:
+        """Snapshot the page store (hashes, tokens, payloads) plus, for the
+        mutable posture, the index's own snapshot+journal under
+        ``ckpt_dir/index`` (DESIGN.md §6.5). Returns the snapshot path."""
+        from ..ckpt import checkpoint as _ckpt
+        tree = {
+            "meta": np.asarray([self.page_size, len(self.hashes)], np.int64),
+            "hashes": np.asarray(self.hashes, np.int32),
+        }
+        tok, pay, paykeys = {}, {}, {}
+        for i, t in enumerate(self.tokens):
+            tok[str(i)] = np.asarray(t, np.int32)
+        for i, ent in enumerate(self.payloads):
+            names = sorted(ent)
+            # payload keys may contain the tree separator — store them as a
+            # string array and index entries positionally
+            paykeys[str(i)] = np.asarray(names)
+            pay[str(i)] = {str(j): {"k": np.asarray(ent[nm]["k"]),
+                                    "v": np.asarray(ent[nm]["v"])}
+                           for j, nm in enumerate(names)}
+        tree.update(tok=tok, pay=pay, paykeys=paykeys)
+        step = (_ckpt.latest_step(ckpt_dir) or 0) + 1
+        path = _ckpt.save(ckpt_dir, step, tree)
+        if self.index_config.mutable and self._index is not None:
+            self._index.save(os.path.join(ckpt_dir, "index"))
+        return path
+
+    @classmethod
+    def restore(cls, ckpt_dir: str,
+                index_config: Optional[IndexConfig] = None) -> "PrefixPageStore":
+        """Rebuild a servable store from the newest verifiable snapshot.
+
+        The mutable index restores from its own snapshot + journal replay
+        (no O(n) rebuild); wholesale configs mark the index dirty and
+        regenerate lazily on first lookup."""
+        from ..ckpt import checkpoint as _ckpt
+        raw, _step = _ckpt.restore(ckpt_dir, None)
+        page_size, n = (int(x) for x in np.asarray(raw["meta"]))
+        kw = {"page_size": page_size}
+        if index_config is not None:
+            kw["index_config"] = index_config
+        store = cls(**kw)
+        store.hashes = [int(h) for h in np.asarray(raw["hashes"])[:n]]
+        for i in range(n):
+            store.tokens.append(np.asarray(raw[f"tok/{i}"], np.int32))
+            names = [str(x) for x in np.asarray(
+                raw.get(f"paykeys/{i}", np.empty(0, "U1")))]
+            store.payloads.append(
+                {nm: {"k": np.asarray(raw[f"pay/{i}/{j}/k"]),
+                      "v": np.asarray(raw[f"pay/{i}/{j}/v"])}
+                 for j, nm in enumerate(names)})
+        store._known = set(store.hashes)
+        idx_dir = os.path.join(ckpt_dir, "index")
+        if store.index_config.mutable and os.path.isdir(idx_dir):
+            from ..engine.store import MutableIndex
+            store._index = MutableIndex.restore(idx_dir, store.index_config)
+            store._dirty = False
+        else:
+            store._dirty = True          # wholesale: lazy rebuild on lookup
+        return store
 
     def probe_queue(self):
         """The store's cross-request micro-batch queue (DESIGN.md §7),

@@ -1,7 +1,8 @@
 """Hypothesis property test for the delta-merge write path: for random
-interleaved insert/lookup traces, MutableIndex results (found/values,
-recency-wins) must match a rebuild-every-time reference index, including
-across merge and repack boundaries (DESIGN.md §6 acceptance oracle)."""
+interleaved insert/delete/lookup/maintain traces, MutableIndex results
+(found/values, recency-wins, tombstones) must match a rebuild-every-time
+reference index, including across merge and repack boundaries and
+re-inserts of tombstoned keys (DESIGN.md §6 acceptance oracle)."""
 import numpy as np
 import pytest
 
@@ -22,7 +23,8 @@ UNIVERSE = 2_000
     n0=st.integers(0, 400),
     capacity=st.sampled_from([16, 32, 64]),
     trace=st.lists(
-        st.tuples(st.booleans(),              # True: insert batch, else probe
+        st.tuples(st.integers(0, 4),          # 0/1: insert, 2: delete,
+                                              # 3: probe, 4: maintain+probe
                   st.integers(1, 30),         # batch size
                   st.integers(0, 10_000)),    # batch seed
         min_size=4, max_size=14),
@@ -36,15 +38,24 @@ def test_mutable_index_matches_rebuild_reference(seed, n0, capacity, trace):
         kind="tiered", mutable=True, delta_capacity=capacity, leaf_width=128))
     ref = dict(zip(init.tolist(), vals.tolist()))
     merges_seen = False
-    for is_insert, size, bseed in trace:
+    for op, size, bseed in trace:
         br = np.random.default_rng(bseed)
         ks = br.integers(0, UNIVERSE, size).astype(np.int32)
-        if is_insert:
+        if op <= 1:
+            # inserts revive tombstoned keys (recency wins over the sentinel)
             vs = br.integers(0, 10**6, size).astype(np.int32)
             idx.insert(ks, vs)
             ref.update(zip(ks.tolist(), vs.tolist()))
             merges_seen |= idx.stats["merges"] > 0
+        elif op == 2:
+            idx.delete(ks)
+            for k in ks.tolist():
+                ref.pop(k, None)
         else:
+            if op == 4:
+                # fold sealed+active into the base off the trace's hot path;
+                # the probe below must see identical results either way
+                idx.flush()
             got = idx.lookup(ks)
             g_found = np.asarray(got.found)
             g_vals = np.asarray(got.values)
@@ -61,7 +72,8 @@ def test_mutable_index_matches_rebuild_reference(seed, n0, capacity, trace):
                     g_vals[hit], np.asarray(want.values)[hit])
             else:
                 assert not g_found.any()
-    # final state check (after any trailing merges)
+    # final state check (after folding any trailing sealed/active writes)
+    idx.flush()
     probe = np.arange(0, UNIVERSE, 13, dtype=np.int32)
     got = idx.lookup(probe)
     g_found = np.asarray(got.found)

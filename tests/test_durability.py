@@ -1,0 +1,201 @@
+"""Crash-recovery acceptance tests (DESIGN.md §6.5): manifest-verified
+snapshots with graceful fallback to the previous step, append-only journal
+replay, and the kill-point contract — snapshot present, journal partially
+written → restore serves results bit-identical to a never-crashed store
+that performed the same prefix of writes."""
+import os
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.ckpt import journal as jr
+from repro.core import IndexConfig, build_index, restore_index
+
+
+def _cfg(tmp=None, capacity=32):
+    return IndexConfig(kind="tiered", mutable=True, delta_capacity=capacity,
+                       leaf_width=128, ckpt_dir=tmp)
+
+
+def _flip_byte(path, where=0.5):
+    sz = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.seek(int(sz * where))
+        b = f.read(1)
+        f.seek(-1, 1)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def _snapshot_results(idx, probe):
+    res = idx.lookup(jnp.asarray(probe))
+    scan = idx.scan_range(np.asarray([0], np.int32),
+                          np.asarray([1 << 20], np.int32))
+    return (np.asarray(res.found), np.asarray(res.values),
+            int(np.asarray(scan.count)[0]), int(np.asarray(scan.vsum)[0]))
+
+
+def _assert_same(a, b):
+    fa, va, ca, sa = a
+    fb, vb, cb, sb = b
+    np.testing.assert_array_equal(fa, fb)
+    np.testing.assert_array_equal(va[fa], vb[fb])
+    assert (ca, sa) == (cb, sb)
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_bitflip_and_truncation_fall_back(tmp_path):
+    """A bit-flipped or truncated newest checkpoint must fail deep
+    verification and degrade (with a warning) to the previous step."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"w": np.arange(64, dtype=np.int32)})
+    ckpt.save(d, 2, {"w": np.arange(64, dtype=np.int32) * 7})
+
+    npz = os.path.join(d, "step_00000002", "arrays.host0.npz")
+    _flip_byte(npz)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tree, step = ckpt.restore(d, None)
+    assert step == 1 and np.array_equal(tree["w"], np.arange(64))
+    assert any("falling back to step 1" in str(x.message) for x in w)
+
+    # truncation (torn write that escaped the atomic rename) degrades too
+    ckpt.save(d, 3, {"w": np.arange(64, dtype=np.int32) * 9})
+    npz = os.path.join(d, "step_00000003", "arrays.host0.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("ignore")
+        tree, step = ckpt.restore(d, None)
+    assert step == 1                       # step 2 still corrupt, falls to 1
+
+
+# ------------------------------------------------------------ journal replay
+def test_snapshot_plus_journal_replay_is_bit_identical(tmp_path):
+    """save → more writes (incl. deletes and re-inserts of tombstoned
+    keys) → close → restore: the restored store answers lookups and scan
+    aggregates bit-identically, without an O(n) rebuild."""
+    d = str(tmp_path / "ck")
+    rng = np.random.default_rng(7)
+    init = np.sort(rng.choice(1 << 18, 150, replace=False)).astype(np.int32)
+    idx = build_index(init, np.arange(150, dtype=np.int32), _cfg(d))
+    keys = rng.choice(1 << 19, 120, replace=False).astype(np.int32)
+
+    idx.insert(keys[:60], keys[:60] * 2)
+    idx.delete(keys[:20])
+    idx.save()
+    # journaled tail: inserts, deletes, re-inserts of tombstoned keys
+    idx.insert(keys[60:], keys[60:] * 3)
+    idx.delete(keys[60:80])
+    idx.insert(keys[60:70], keys[60:70] * 5)
+
+    probe = np.concatenate([init[::7], keys, [np.int32((1 << 19) + 1)]])
+    want = _snapshot_results(idx, probe)
+    replayable = 60 + 20 + 10              # records after the snapshot
+    idx.close()
+
+    got = restore_index(d, _cfg())
+    assert got.stats["journal_replayed"] == replayable
+    _assert_same(want, _snapshot_results(got, probe))
+    # journaling resumed: post-restore writes survive another restore
+    got.insert(np.asarray([3], np.int32), np.asarray([33], np.int32))
+    want2 = _snapshot_results(got, probe)
+    got.close()
+    again = restore_index(d, _cfg())
+    _assert_same(want2, _snapshot_results(again, probe))
+    again.close()
+
+
+def test_kill_point_torn_journal_serves_write_prefix(tmp_path):
+    """Kill-point: the journal's final record is torn mid-write. Restore
+    must serve, and results must be bit-identical to a never-crashed store
+    that performed the same writes minus the torn final one."""
+    d = str(tmp_path / "ck")
+    rng = np.random.default_rng(11)
+    init = np.sort(rng.choice(1 << 16, 100, replace=False)).astype(np.int32)
+    vals = np.arange(100, dtype=np.int32)
+    keys = rng.choice(1 << 17, 40, replace=False).astype(np.int32)
+
+    idx = build_index(init, vals, _cfg(d))
+    idx.insert(keys[:20], keys[:20] * 2)
+    idx.save()
+    idx.insert(keys[20:], keys[20:] * 3)
+    idx.delete(keys[:5])
+    idx.insert(np.asarray([keys[0]], np.int32),    # the record to tear
+               np.asarray([999], np.int32))
+    idx.close()
+
+    # never-crashed comparator: same writes except the torn final record
+    oracle = build_index(init, vals, _cfg())
+    oracle.insert(keys[:20], keys[:20] * 2)
+    oracle.insert(keys[20:], keys[20:] * 3)
+    oracle.delete(keys[:5])
+
+    segs = jr.scan_dir(d)
+    last = segs[-1][1]
+    with open(last, "r+b") as f:           # tear mid-record
+        f.truncate(os.path.getsize(last) - 7)
+
+    got = restore_index(d, _cfg())
+    probe = np.concatenate([init[::5], keys])
+    _assert_same(_snapshot_results(oracle, probe),
+                 _snapshot_results(got, probe))
+    got.close()
+    oracle.close()
+
+
+def test_corrupted_latest_snapshot_degrades_without_data_loss(tmp_path):
+    """Corrupting the newest snapshot must not raise: restore falls back
+    to the previous step with a warning, and because the previous step's
+    journal segment covers the gap, no acknowledged write is lost."""
+    d = str(tmp_path / "ck")
+    rng = np.random.default_rng(13)
+    init = np.sort(rng.choice(1 << 16, 80, replace=False)).astype(np.int32)
+    idx = build_index(init, np.arange(80, dtype=np.int32), _cfg(d))
+    keys = rng.choice(1 << 17, 30, replace=False).astype(np.int32)
+
+    idx.insert(keys[:10], keys[:10] * 2)
+    idx.save()                                       # step 1
+    idx.insert(keys[10:20], keys[10:20] * 3)
+    idx.delete(keys[:4])
+    idx.save()                                       # step 2
+    idx.insert(keys[20:], keys[20:] * 4)             # journaled after step 2
+    probe = np.concatenate([init[::4], keys])
+    want = _snapshot_results(idx, probe)
+    idx.close()
+
+    _flip_byte(os.path.join(d, "step_00000002", "arrays.host0.npz"))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = restore_index(d, _cfg())
+    assert any("falling back" in str(x.message) for x in w)
+    # step-1 snapshot + journal_1 (covers step-2's writes) + journal_2
+    _assert_same(want, _snapshot_results(got, probe))
+    got.close()
+
+
+def test_journal_segment_roundtrip_and_torn_tail(tmp_path):
+    """Unit-level journal contract: CRC-checked records round-trip, a torn
+    tail truncates to the valid prefix, and sequence regressions stop the
+    reader."""
+    p = str(tmp_path / "journal_00000000.log")
+    j = jr.Journal(p, np.dtype(np.int32))
+    j.append(5, 50)
+    j.append(9, -1, delete=True)
+    j.append(7, 70)
+    j.close()
+    dtype, recs = jr.read_segment(p)
+    assert dtype == np.dtype(np.int32)
+    assert [(r[1], r[2]) for r in recs] == [
+        (jr.OP_INSERT, 5), (jr.OP_DELETE, 9), (jr.OP_INSERT, 7)]
+
+    with open(p, "r+b") as f:                        # tear the last record
+        f.truncate(os.path.getsize(p) - 3)
+    _, recs = jr.read_segment(p)
+    assert len(recs) == 2
+    jr.truncate_torn(p)
+    _, recs2 = jr.read_segment(p)
+    assert len(recs2) == 2 and os.path.getsize(p) == jr.HEADER.size \
+        + 2 * jr.RECORD.size

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.core import IndexConfig, build_index
 from repro.engine import delta as delta_mod
 from repro.engine.delta import DeltaBuffer
-from repro.engine.store import MERGE_FILL, MutableIndex, _PagedBase
+from repro.engine.store import (MERGE_FILL, TOMBSTONE, MutableIndex,
+                                _PagedBase)
 
 
 def check_oracle(idx, ref: dict, qs: np.ndarray):
@@ -56,7 +57,8 @@ def test_delta_buffer_upsert_and_full():
     assert not buf.insert(3, 999)            # upsert: no new key, no raise
     with pytest.raises(ValueError, match="full"):
         buf.insert(100, 1)
-    ks, vs = buf.drain()
+    ks, vs, tb = buf.drain()
+    assert not tb.any()
     assert buf.count == 0 and not buf.full
     assert dict(zip(ks.tolist(), vs.tolist()))[3] == 999
 
@@ -256,6 +258,108 @@ def test_mutable_config_validation():
         build_index(np.arange(10, dtype=np.int32),
                     config=IndexConfig(kind="tiered", mutable=True,
                                        plan="host"))
+
+
+def test_mutable_index_tombstone_deletes():
+    """delete() masks base keys, delta keys, and unknown keys (no-op); a
+    re-insert revives a tombstoned key with the new value; live count n
+    tracks through it all."""
+    keys = np.arange(0, 2000, 2, dtype=np.int32)
+    idx = build_index(keys, np.arange(keys.size, dtype=np.int32),
+                      IndexConfig(kind="tiered", mutable=True,
+                                  delta_capacity=32, leaf_width=128))
+    n0 = idx.n
+    idx.delete(np.array([10, 20, 30], np.int32))       # base keys
+    idx.insert(np.int32(3001), np.int32(1))
+    idx.delete(np.array([3001, 9999], np.int32))       # delta key + unknown
+    res = idx.lookup(np.array([10, 20, 30, 3001, 40], np.int32))
+    assert np.asarray(res.found).tolist() == [False] * 4 + [True]
+    assert idx.n == n0 - 3
+    idx.insert(np.int32(20), np.int32(777))            # revive
+    res = idx.lookup(np.array([20], np.int32))
+    assert bool(np.asarray(res.found)[0])
+    assert int(np.asarray(res.values)[0]) == 777
+    assert idx.n == n0 - 2
+    # folds reclaim tombstoned rows from the base and preserve semantics
+    idx.flush()
+    res = idx.lookup(np.array([10, 20, 30, 3001], np.int32))
+    assert np.asarray(res.found).tolist() == [False, True, False, False]
+    assert idx.n == n0 - 2
+    with pytest.raises(ValueError, match="tombstone sentinel"):
+        idx.insert(np.int32(7), np.int32(TOMBSTONE))
+
+
+def test_mutable_index_sealed_tier_and_deferred_maintenance():
+    """Filling the active delta seals it (O(1) swap) instead of folding
+    inline: in 'deferred' mode inserts never pay the merge, lookups probe
+    base+sealed+active with recency preserved, and maintain() folds the
+    sealed buffer off the hot path."""
+    idx = build_index(np.arange(0, 512, 2, dtype=np.int32),
+                      config=IndexConfig(kind="tiered", mutable=True,
+                                         delta_capacity=16, leaf_width=128,
+                                         maintenance="deferred"))
+    merges0 = idx.stats["merges"]
+    for k in range(1, 35, 2):                 # fills active once -> one seal
+        idx.insert(np.int32(k), np.int32(k * 10))
+    assert idx.stats["seals"] >= 1
+    assert idx.stats["merges"] == merges0     # fold deferred, not inline
+    assert idx.sealed.count > 0
+    # recency across tiers: overwrite a sealed key from the active tier
+    sealed_key = int(idx.sealed.live()[0][0])
+    idx.insert(np.int32(sealed_key), np.int32(4444))
+    res = idx.lookup(np.array([sealed_key, 1, 31], np.int32))
+    assert np.asarray(res.found).all()
+    assert int(np.asarray(res.values)[0]) == 4444
+    idx.maintain()
+    assert idx.stats["maintains"] >= 1 and idx.sealed.count == 0
+    res2 = idx.lookup(np.array([sealed_key, 1, 31], np.int32))
+    np.testing.assert_array_equal(np.asarray(res2.values),
+                                  np.asarray(res.values))
+
+
+def test_mutable_index_thread_maintenance_mode():
+    """maintenance='thread' folds sealed deltas on a timer without any
+    explicit maintain() call; close() is idempotent and stops the timer."""
+    idx = build_index(np.empty(0, np.int32),
+                      config=IndexConfig(kind="tiered", mutable=True,
+                                         delta_capacity=16,
+                                         maintenance="thread",
+                                         maintenance_interval_s=0.01))
+    rng = np.random.default_rng(8)
+    ref = {}
+    for _ in range(8):
+        nk = rng.integers(0, 3000, 12).astype(np.int32)
+        nv = rng.integers(0, 3000, 12).astype(np.int32)
+        idx.insert(nk, nv)
+        ref.update(zip(nk.tolist(), nv.tolist()))
+    import time
+    deadline = time.time() + 5.0
+    while idx.sealed.count and time.time() < deadline:
+        time.sleep(0.02)
+    assert idx.sealed.count == 0              # worker folded it
+    check_oracle(idx, ref, np.arange(0, 3000, 11, dtype=np.int32))
+    idx.close()
+    idx.close()
+
+
+def test_mutable_index_scan_masks_tombstones():
+    """scan_range count/sum/min/max and ranks exclude deleted keys in
+    every tier (base, sealed, active)."""
+    keys = np.arange(0, 400, 4, dtype=np.int32)          # 0,4,...,396
+    idx = build_index(keys, keys.copy(),
+                      IndexConfig(kind="tiered", mutable=True,
+                                  delta_capacity=16, leaf_width=64))
+    idx.delete(np.array([100, 104], np.int32))           # base tombstones
+    idx.insert(np.array([101], np.int32), np.array([1], np.int32))
+    idx.delete(np.array([101], np.int32))                # delta tombstone
+    lo = np.array([96, 0], np.int32)
+    hi = np.array([112, 1000], np.int32)
+    s = idx.scan_range(lo, hi)
+    # [96,112]: live keys 96, 108, 112 (100/104 deleted, 101 revoked)
+    assert np.asarray(s.count).tolist() == [3, 98]
+    assert np.asarray(s.vsum).tolist()[0] == 96 + 108 + 112
+    assert int(np.asarray(s.vmin)[0]) == 96
+    assert int(np.asarray(s.vmax)[0]) == 112
 
 
 def test_paged_base_fill_leaves_gap_slots():

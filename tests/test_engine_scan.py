@@ -318,9 +318,10 @@ def test_materialize_immutable_ranks_and_overflow():
 
 
 def test_materialize_mutable_addresses_decode():
-    """Mutable materialize emits slot addresses (base region, then delta
-    region); decoding them through the two stores must reproduce the
-    merged keys and values in key order, shadow-deduped."""
+    """Mutable materialize emits slot addresses (base region, then the
+    sealed tier's region, then the active tier's at ``base_sz + capacity
+    + slot``); decoding them through the stores must reproduce the merged
+    keys and values in key order, shadow-deduped."""
     rng, m, ref = _mutable_case(seed=23, capacity=128)
     keys = np.array(sorted(ref), np.int32)
     m.insert(keys[5:25], np.arange(20, dtype=np.int32) + 1000)  # shadows
@@ -338,8 +339,11 @@ def test_materialize_mutable_addresses_decode():
     r = m.scan_range(lo, hi, materialize=K)
     base = m.base
     flat_bk = base.keys.reshape(-1)
-    flat_dk = m.delta.h_keys.reshape(-1)
+    flat_sk = m.sealed.h_keys.reshape(-1)
+    flat_ak = m.delta.h_keys.reshape(-1)
     bsz = base.num_pages * base.lw_pad
+    cap = flat_ak.size
+    flat_all = np.concatenate([flat_bk, flat_sk, flat_ak])
     w_lo = np.searchsorted(mk, lo, "left")
     w_hi = np.searchsorted(mk, hi, "right")
     for i in range(lo.size):
@@ -347,10 +351,8 @@ def test_materialize_mutable_addresses_decode():
         assert c == w_hi[i] - w_lo[i]
         k = min(c, K)
         addrs = np.asarray(r.ranks[i])[:k]
-        got_keys = np.where(
-            addrs < bsz,
-            flat_bk[np.clip(addrs, 0, bsz - 1)],
-            flat_dk[np.clip(addrs - bsz, 0, flat_dk.size - 1)])
+        assert (addrs >= 0).all() and (addrs < bsz + 2 * cap).all()
+        got_keys = flat_all[addrs]
         np.testing.assert_array_equal(got_keys, mk[w_lo[i]: w_lo[i] + k])
         np.testing.assert_array_equal(np.asarray(r.values[i])[:k],
                                       mv[w_lo[i]: w_lo[i] + k])
