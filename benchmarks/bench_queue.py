@@ -60,6 +60,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import IndexConfig, build_index
 from repro.engine import schedule
 from repro.engine.queue import MicroBatchQueue, index_probe_fn
@@ -490,7 +491,8 @@ def run(concurrencies, policies, q_sizes, page_counts, out,
     payload = {"backend": jax.default_backend(),
                "interpret_kernels": jax.default_backend() == "cpu",
                "store_n": STORE_N, "req_queries": REQ_QUERIES,
-               "results": rows}
+               "results": rows,
+               "obs": obs.snapshot()}
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {out} ({len(rows)} rows)")
@@ -508,7 +510,8 @@ def run_fairness_only(out):
     summary = run_fairness(rows)
     payload = {"backend": jax.default_backend(),
                "interpret_kernels": jax.default_backend() == "cpu",
-               "store_n": STORE_N, "results": rows}
+               "store_n": STORE_N, "results": rows,
+               "obs": obs.snapshot()}
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {out} ({len(rows)} rows)")

@@ -49,6 +49,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import IndexConfig, build_index
 from repro.engine import scan as escan
 from ._timing import emit
@@ -209,7 +210,8 @@ def run(n: int, batches, out: str, assert_trend: bool = False) -> dict:
                "interpret_kernels": jax.default_backend() == "cpu",
                "n": int(keys.size), "materialize_k": MAT_K,
                "fused_out_elems_per_batch": alloc,
-               "results": results}
+               "results": results,
+               "obs": obs.snapshot()}
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {out} ({len(results)} rows)")

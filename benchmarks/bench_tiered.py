@@ -29,6 +29,7 @@ import json
 import numpy as np
 import jax
 
+from repro import obs
 from repro.core import IndexConfig, build_index
 from repro.engine import schedule, tiered
 from ._timing import emit, time_fn, zipf_queries
@@ -119,12 +120,61 @@ def run(sizes=(2**14, 2**17), batches=(1024, 8192),
                      f"occ={rec['schedule']['occupancy']}")
     payload = {"backend": jax.default_backend(),
                "interpret_kernels": jax.default_backend() == "cpu",
-               "results": results}
+               "results": results,
+               "obs": obs.snapshot()}
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {out} ({len(results)} rows)")
     if assert_trend:
         _assert_device_trend(sizes, trend_cells)
+    return payload
+
+
+def run_obs_smoke(out="BENCH_obs_smoke.json", gate: float = 0.03):
+    """The instrumentation overhead gate (DESIGN.md §9.4): time the fused
+    tiered dispatch on a deep batch with observability OFF (null registry,
+    tracer disabled) vs fully ON (process registry + span recording) and
+    assert the median dispatch-staging latency regressed <= ``gate``.
+    Also asserts the ON leg actually recorded: search histogram samples in
+    the registry and spans in the tracer ring."""
+    rng = np.random.default_rng(7)
+    n, batch = 2**14, 8192
+    keys = np.unique(rng.integers(0, 2**31 - 2, int(n * 1.1)
+                                  ).astype(np.int32))[:n]
+    qs = _queries(keys, batch, seed=n % 1000 + batch)
+    idx = build_index(keys, config=IndexConfig(kind="tiered"))
+    fn = lambda q: tiered.search(idx.impl, q)  # noqa: E731
+
+    obs.configure(metrics=False, trace=False)
+    off_us = time_fn(fn, qs)
+    obs.REGISTRY.reset()
+    obs.TRACER.clear()
+    obs.configure(metrics=True, trace=True)
+    on_us = time_fn(fn, qs)
+    obs.configure(metrics=True, trace=False)
+
+    h = obs.REGISTRY.value("engine_op_seconds", path="search")
+    assert h is not None and h.count > 0, \
+        "instrumented run recorded no search histogram samples"
+    assert obs.TRACER.events(), "instrumented run recorded no spans"
+    overhead = on_us / off_us - 1.0
+    verdict = "ok" if overhead <= gate else "REGRESSION"
+    print(f"# obs-smoke n={n} b={batch}: off={off_us:.0f}us "
+          f"on={on_us:.0f}us overhead={overhead * 100:+.2f}% "
+          f"(gate {gate * 100:.0f}%, {verdict})")
+    payload = {"backend": jax.default_backend(),
+               "interpret_kernels": jax.default_backend() == "cpu",
+               "off_us": round(off_us, 2), "on_us": round(on_us, 2),
+               "overhead": round(overhead, 4), "gate": gate,
+               "search_samples": h.count,
+               "span_events": len(obs.TRACER.events()),
+               "obs": obs.snapshot()}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out}")
+    assert overhead <= gate, (
+        f"observability overhead {overhead * 100:.2f}% over the "
+        f"{gate * 100:.0f}% gate: {on_us:.0f}us vs {off_us:.0f}us")
     return payload
 
 
@@ -151,9 +201,16 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="small tiered-only sweep + device>=host trend "
                          "assert on the 8192 batch (the CI gate)")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="instrumentation-overhead gate: fused dispatch "
+                         "with observability on vs off, <= 3% (the CI "
+                         "obs-smoke gate, DESIGN.md §9.4)")
     ap.add_argument("--out", default="BENCH_tiered.json")
     args = ap.parse_args()
     plans = ("host", "device") if args.plan == "both" else (args.plan,)
+    if args.obs_smoke:
+        run_obs_smoke(out=args.out)
+        return
     if args.smoke:
         run(sizes=(2**14,), batches=(1024, 8192), plans=("host", "device"),
             kinds={}, out=args.out, assert_trend=True)

@@ -44,6 +44,7 @@ import time
 import numpy as np
 import jax
 
+from repro import obs
 from repro.core import IndexConfig, build_index
 from ._timing import emit
 
@@ -257,7 +258,8 @@ def run(sizes, rounds: int, out: str, assert_trend: bool = False) -> dict:
     payload = {"backend": jax.default_backend(),
                "interpret_kernels": jax.default_backend() == "cpu",
                "batch": BATCH, "delta_capacity": DELTA_CAPACITY,
-               "results": results}
+               "results": results,
+               "obs": obs.snapshot()}
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {out} ({len(results)} rows)")
@@ -390,7 +392,8 @@ def durability_smoke(out: str) -> dict:
                "seals": idx.stats["seals"],
                "cold_rebuild_s": round(cold_s, 4),
                "restore_to_servable_s": round(restore_s, 4),
-               "journal_replayed": replayed}
+               "journal_replayed": replayed,
+               "obs": obs.snapshot()}
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {out}")

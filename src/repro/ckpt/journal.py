@@ -15,8 +15,22 @@ Format (all little-endian):
                         bytes
 
 Records carry a globally monotone sequence number so replay can detect
-ordering violations across segments. No fsync: the journal bounds loss to
-the writes since the last flush, the snapshot bounds replay length.
+ordering violations across segments.
+
+Durability is governed by the ``fsync`` policy (the PR 7 follow-on gap):
+
+* ``"never"`` — OS page cache only; loss bound is whatever the kernel
+  had not written back (the original behavior).
+* ``"rotate"`` (default) — ``os.fsync`` when a segment closes at
+  rotation/shutdown; a crash loses at most the open segment's tail past
+  the last OS writeback, but every *rotated* segment is durable.
+* ``"always"`` — ``os.fsync`` on every ``flush()``, i.e. after every
+  acknowledged write batch; loss bound is zero acknowledged writes, at
+  the cost of a disk barrier per batch.
+
+Sync/append/byte counts flow into the metrics registry
+(``journal_syncs`` / ``journal_appends`` / ``journal_bytes``) so the
+fsync-policy cost is visible on the serving dashboard.
 """
 from __future__ import annotations
 
@@ -26,11 +40,14 @@ import zlib
 
 import numpy as np
 
+from ..obs import get_registry
+
 MAGIC = b"RJL1"
 HEADER = struct.Struct("<4s12s")
 PAYLOAD = struct.Struct("<QBqi")
 RECORD = struct.Struct("<QBqiI")
 OP_INSERT, OP_DELETE = 0, 1
+FSYNC_POLICIES = ("never", "rotate", "always")
 
 
 def segment_path(ckpt_dir: str, step: int) -> str:
@@ -68,10 +85,17 @@ class Journal:
     empty; otherwise appends after the existing records (the caller
     truncates any torn tail first — :func:`truncate_torn`)."""
 
-    def __init__(self, path: str, key_dtype, next_seq: int = 0):
+    def __init__(self, path: str, key_dtype, next_seq: int = 0,
+                 fsync: str = "rotate"):
+        if fsync not in FSYNC_POLICIES:
+            raise ValueError(f"fsync must be one of {FSYNC_POLICIES}, "
+                             f"got {fsync!r}")
         self.path = path
         self.dtype = np.dtype(key_dtype)
         self.seq = int(next_seq)
+        self.fsync = fsync
+        self.syncs = 0
+        self._pending = 0                 # appends since the last flush()
         fresh = not os.path.exists(path) or os.path.getsize(path) == 0
         self._f = open(path, "ab")
         if fresh:
@@ -84,13 +108,28 @@ class Journal:
                                _encode_key(key, self.dtype), int(value))
         self._f.write(payload + struct.pack("<I", zlib.crc32(payload)))
         self.seq += 1
+        self._pending += 1
 
     def flush(self):
         self._f.flush()
+        if self._pending:
+            if self.fsync == "always":
+                self._sync()
+            reg = get_registry()
+            reg.counter("journal_appends").inc(self._pending)
+            reg.counter("journal_bytes").inc(self._pending * RECORD.size)
+            self._pending = 0
+
+    def _sync(self):
+        os.fsync(self._f.fileno())
+        self.syncs += 1
+        get_registry().counter("journal_syncs", policy=self.fsync).inc()
 
     def close(self):
         try:
-            self._f.flush()
+            self.flush()
+            if self.fsync == "rotate":
+                self._sync()
         finally:
             self._f.close()
 

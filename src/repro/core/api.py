@@ -41,6 +41,7 @@ class IndexConfig:
     maintenance_interval_s: float = 0.05  # thread mode: fold timer delay
     ckpt_dir: Optional[str] = None  # journal + snapshot dir (None = off)
     ckpt_keep: int = 3           # snapshots retained by Index.save rotation
+    journal_fsync: str = "rotate"  # WAL sync: 'never'|'rotate'|'always'
     # micro-batch queue knobs (engine/queue.py, DESIGN.md §7) — consumed by
     # queue clients such as serve.kv_cache.PrefixPageStore.probe_queue
     queue_capacity: int = 4096   # hard flush trigger (pending queries)
@@ -73,6 +74,10 @@ class IndexConfig:
         if self.ckpt_keep <= 0:
             raise ValueError(
                 f"ckpt_keep must be positive, got {self.ckpt_keep}")
+        if self.journal_fsync not in ("never", "rotate", "always"):
+            raise ValueError(
+                f"unknown journal_fsync policy {self.journal_fsync!r}; "
+                "want 'never', 'rotate' or 'always'")
         if self.queue_capacity <= 0:
             raise ValueError(
                 f"queue_capacity must be positive, got {self.queue_capacity}")

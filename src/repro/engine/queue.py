@@ -64,6 +64,7 @@ import jax.numpy as jnp
 from .admission import (AdmissionPolicy, QueueOverflow, RateEstimator,
                         TenantStats, effective_deadline)
 from .schedule import _next_pow2, occupancy_shares
+from ..obs import get_registry, span
 
 DEFAULT_TENANT = "default"
 
@@ -144,6 +145,10 @@ class QueueFuture:
         self._event.set()
 
     def result(self, timeout: Optional[float] = None) -> Any:
+        with span("queue.result", path=self._queue.path):
+            return self._result(timeout)
+
+    def _result(self, timeout: Optional[float]) -> Any:
         while not self._event.is_set():
             # demand-flush until OUR submit is admitted: a capped flush can
             # serve other tenants first, so one flush is not always enough
@@ -216,7 +221,7 @@ class MicroBatchQueue:
                  deadline_floor_s: float = 1e-4, rate_alpha: float = 0.3,
                  record_flushes: bool = False,
                  now_fn: Callable[[], float] = time.monotonic,
-                 timer: bool = True):
+                 timer: bool = True, path: str = "probe"):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         if deadline_s < 0:
@@ -224,6 +229,7 @@ class MicroBatchQueue:
         if max_backlog < 0:
             raise ValueError(f"max_backlog must be >= 0, got {max_backlog}")
         self._search_fn = search_fn
+        self.path = str(path)       # registry/span label: "probe", "decode"
         self.capacity = int(capacity)
         self.pad_pow2 = bool(pad_pow2)
         self.deadline_s = float(deadline_s)
@@ -283,7 +289,9 @@ class MicroBatchQueue:
             queries = np.asarray(queries)
         q_n = _leading_dim(queries)
         fut = QueueFuture(self)
-        with self._lock:
+        reg = get_registry()
+        with span("queue.submit", path=self.path, tenant=tenant, n=q_n), \
+                self._lock:
             if self._closed:
                 raise RuntimeError("submit on a closed MicroBatchQueue")
             ts = self.stats.tenant(tenant)
@@ -294,6 +302,8 @@ class MicroBatchQueue:
                     self._lane_queries(lane) + q_n > self.max_backlog:
                 ts.drops += 1
                 self.stats.drops += 1
+                reg.counter("queue_drops", path=self.path,
+                            tenant=str(tenant)).inc()
                 fut._reject(QueueOverflow(
                     f"tenant {tenant!r} backlog over {self.max_backlog} "
                     f"queries"))
@@ -313,6 +323,10 @@ class MicroBatchQueue:
             self.stats.queries += q_n
             ts.submits += 1
             ts.queries += q_n
+            reg.counter("queue_submits", path=self.path,
+                        tenant=str(tenant)).inc()
+            reg.counter("queue_queries", path=self.path,
+                        tenant=str(tenant)).inc(q_n)
             if self._pending_queries >= min(self.flush_at, self.capacity):
                 # admission packs at most `capacity` per flush; keep going
                 # until the backlog is back under the trigger
@@ -355,14 +369,20 @@ class MicroBatchQueue:
             self._timer = None
         if not any(self._lanes.values()):
             return 0
+        with span("queue.flush", path=self.path, reason=reason):
+            return self._flush_admitted(reason)
+
+    def _flush_admitted(self, reason: str) -> int:
+        reg = get_registry()
         # resolve the previous flush's occupancy feedback now: its dispatch
         # has retired (or is about to, ahead of ours on the device stream),
         # so this never stalls an enqueueing caller the way draining in
         # submit() would
         self.drain_feedback()
-        admit = self.admission.plan(
-            {t: [n for _, n, _, _ in lane]
-             for t, lane in self._lanes.items() if lane})
+        with span("queue.admit", path=self.path):
+            admit = self.admission.plan(
+                {t: [n for _, n, _, _ in lane]
+                 for t, lane in self._lanes.items() if lane})
         now = self._now()
         batch = []                          # (queries, q_n, fut, tenant)
         for t in admit.service:
@@ -373,6 +393,10 @@ class MicroBatchQueue:
             wait = max(now - t_enq, 0.0)
             ts.wait_s += wait
             ts.wait_max_s = max(ts.wait_max_s, wait)
+            reg.counter("queue_admitted", path=self.path,
+                        tenant=str(t)).inc(q_n)
+            reg.histogram("queue_wait_seconds", path=self.path,
+                          tenant=str(t)).observe(wait)
         if not batch:
             return 0
         total = admit.total
@@ -382,6 +406,8 @@ class MicroBatchQueue:
             if lane:
                 leftovers = True
                 self.stats.tenant(t).deferred += len(lane)
+                reg.counter("queue_deferred", path=self.path,
+                            tenant=str(t)).inc(len(lane))
         self._oldest_t = min(
             (lane[0][3] for lane in self._lanes.values() if lane),
             default=None)
@@ -392,6 +418,8 @@ class MicroBatchQueue:
         for t, n in admit.counts.items():
             if n or t in {b[3] for b in batch}:
                 self.stats.tenant(t).flushes += 1
+                reg.counter("queue_tenant_flushes", path=self.path,
+                            tenant=str(t)).inc()
         if self.flush_log is not None:
             subs: Dict[Any, int] = {}
             for t in admit.service:
@@ -403,12 +431,23 @@ class MicroBatchQueue:
         if not hasattr(self.stats, counter):   # free-text reason: file under
             counter = "manual_flushes"         # manual instead of raising
         setattr(self.stats, counter, getattr(self.stats, counter) + 1)
+        reg.counter("queue_flushes", path=self.path, reason=reason).inc()
+        reg.histogram("queue_batch_size", path=self.path).observe(total)
+        reg.gauge("queue_flush_at", path=self.path).set(self.flush_at)
         try:
             parts = [q for q, n, _, _ in batch if n]
             pad = (_next_pow2(total) - total) if (self.pad_pow2 and total) \
                 else 0
             q = self._concat(parts, pad)
-            result, occ_thunk = self._search_fn(q)
+            # dispatch-boundary timer: measures the host-side *staging*
+            # cost of the one fused dispatch (search_fn returns without
+            # waiting on the device), so observing it adds no sync
+            with span("queue.dispatch", path=self.path, n=total, pad=pad):
+                t0 = time.perf_counter()
+                result, occ_thunk = self._search_fn(q)
+                reg.histogram("engine_op_seconds", path=self.path).observe(
+                    time.perf_counter() - t0)
+                reg.counter("engine_ops", path=self.path).inc()
             if occ_thunk is not None:
                 # the engine saw the padded batch; scale its occupancy back
                 # to real queries so pad lanes never flatter the steering
@@ -501,14 +540,19 @@ class MicroBatchQueue:
         flush's tenants by lane share for the per-tenant ledger."""
         with self._lock:
             pending, self._feedback = self._feedback, []
+        reg = get_registry()
         for thunk, real, dispatched, counts in pending:
             occ = float(thunk()) * (real / dispatched if dispatched else 0.0)
             self.stats.occ_sum += occ
             self.stats.occ_n += 1
+            reg.histogram("queue_flush_occupancy",
+                          path=self.path).observe(occ)
             for t, share in occupancy_shares(counts, occ).items():
                 ts = self.stats.tenant(t)
                 ts.occ_sum += share
                 ts.occ_n += 1
+                reg.histogram("queue_occupancy", path=self.path,
+                              tenant=str(t)).observe(share)
             if not self.adapt:
                 continue
             if occ < self.occupancy_target:
@@ -540,6 +584,59 @@ class MicroBatchQueue:
                 if self._flush_locked("manual") == 0:
                     break                     # defensive: cannot starve
         self.drain_feedback()
+
+
+@dataclass
+class TenantRow:
+    """One (path, tenant) line of the serving dashboard, rendered from the
+    metrics registry — the single source the per-tenant printout and
+    ``EngineStats.tenants`` both read (no more hand-merged ledger dicts)."""
+    path: str
+    tenant: str
+    submits: int = 0
+    queries: int = 0
+    flushes: int = 0
+    admitted: int = 0
+    deferred: int = 0
+    drops: int = 0
+    wait_mean_us: float = 0.0
+    wait_max_us: float = 0.0
+    occupancy: float = 0.0
+
+
+def tenant_summary(registry=None) -> list:
+    """Render every (path, tenant) series in the registry as
+    :class:`TenantRow` views, sorted by (path, tenant). This is the
+    de-duplicated stats helper: wait moments come from the
+    ``queue_wait_seconds`` histogram, occupancy from ``queue_occupancy``,
+    counts from the queue counter families."""
+    reg = registry if registry is not None else get_registry()
+    keys = set()
+    for name in ("queue_submits", "queue_queries", "queue_drops"):
+        for labels, _ in reg.series(name):
+            if "path" in labels and "tenant" in labels:
+                keys.add((labels["path"], labels["tenant"]))
+    rows = []
+    for path, tenant in sorted(keys):
+        def count(name):
+            m = reg.value(name, path=path, tenant=tenant)
+            return int(m.value) if m is not None else 0
+
+        wait = reg.value("queue_wait_seconds", path=path, tenant=tenant)
+        occ = reg.value("queue_occupancy", path=path, tenant=tenant)
+        rows.append(TenantRow(
+            path=path, tenant=tenant,
+            submits=count("queue_submits"),
+            queries=count("queue_queries"),
+            flushes=count("queue_tenant_flushes"),
+            admitted=count("queue_admitted"),
+            deferred=count("queue_deferred"),
+            drops=count("queue_drops"),
+            wait_mean_us=wait.mean * 1e6 if wait is not None else 0.0,
+            wait_max_us=(wait.max * 1e6
+                         if wait is not None and wait.count else 0.0),
+            occupancy=occ.mean if occ is not None else 0.0))
+    return rows
 
 
 def index_probe_fn(index) -> Callable:

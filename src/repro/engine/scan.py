@@ -43,6 +43,7 @@ into a caller-provided capacity ``K`` per query, with an overflow flag.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, NamedTuple, Optional
 
@@ -53,6 +54,7 @@ import jax.numpy as jnp
 from ..core.util import sentinel_for
 from ..kernels import page_scan as _pscan
 from ..kernels.page_scan import agg_identities
+from ..obs import get_registry, span as _span
 from .schedule import ladder_grid, run_scheduled_multi, span_scan_plan
 
 VALUE_DTYPES = (np.dtype(np.int32), np.dtype(np.float32))
@@ -283,7 +285,9 @@ def make_span_pipeline(span_of: Callable, *, num_pages: int, tile: int,
     def pipeline(lo, hi, kpages, vpages, aux: ScanAux) -> SpanScan:
         q_n = lo.shape[0]
         empty = lo > hi
-        plo, phi = span_of(lo, hi)
+        # named_scope markers: trace-time device-profile attribution only
+        with jax.named_scope("scan/span_of"):
+            plo, phi = span_of(lo, hi)
         single = plo == phi
         # item i scans the lower boundary page: lob stays `lo` even for
         # empty ranges (its below-lo lane output anchors r_lo); the upper
@@ -296,8 +300,9 @@ def make_span_pipeline(span_of: Callable, *, num_pages: int, tile: int,
         hib_b = jnp.where(empty | single, inert_hi, hi)
         item_lo = jnp.concatenate([lo, lob_b])
         item_hi = jnp.concatenate([hib_a, hib_b])
-        g_cap = ladder_grid(2 * q_n, tile, num_pages)
-        _, plan = span_scan_plan(plo, phi, tile, g_cap, num_pages)
+        with jax.named_scope("scan/span_plan"):
+            g_cap = ladder_grid(2 * q_n, tile, num_pages)
+            _, plan = span_scan_plan(plo, phi, tile, g_cap, num_pages)
 
         def body(qbs, step_pages, g):
             return _pscan.page_scan_bucketed(qbs[0], qbs[1], step_pages,
@@ -305,8 +310,9 @@ def make_span_pipeline(span_of: Callable, *, num_pages: int, tile: int,
                                              mask_value=mask_value,
                                              interpret=interpret)
 
-        outs = run_scheduled_multi(
-            plan, (item_lo, item_hi), 2 * q_n, tile, g_cap, body)
+        with jax.named_scope("scan/page_kernel"):
+            outs = run_scheduled_multi(
+                plan, (item_lo, item_hi), 2 * q_n, tile, g_cap, body)
         lt, le = outs[0], outs[1]
         # in-range count per item, derived once per dispatch (not per grid
         # step); the clamp zeroes inert bound pairs
@@ -314,9 +320,10 @@ def make_span_pipeline(span_of: Callable, *, num_pages: int, tile: int,
         cnt = cnt[:q_n] + cnt[q_n:]
         # interior pages (plo, phi) — aggregated, never scanned; for an
         # empty range phi == plo, so the interval is empty by construction
-        a = plo + 1
-        b = phi
-        has = b > a
+        with jax.named_scope("scan/interior"):
+            a = plo + 1
+            b = phi
+            has = b > a
         icnt = jnp.where(has, aux.cum_cnt[b] - aux.cum_cnt[a], 0)
         vsum = vmin = vmax = None
         if mode != "count":
@@ -439,8 +446,14 @@ class TieredScanner:
         mode = self._mode_for(aggs)
         vp = self.vpages if mode != "count" else None
         if materialize is None:
-            cnt, vs, mn, mx, r_lo, r_hi = self.agg_fn(mode)(
-                lo, hi, kp, vp, self.aux)
+            with _span("scan.dispatch", mode=mode):
+                t0 = time.perf_counter()
+                cnt, vs, mn, mx, r_lo, r_hi = self.agg_fn(mode)(
+                    lo, hi, kp, vp, self.aux)
+                reg = get_registry()
+                reg.histogram("engine_op_seconds", path="scan").observe(
+                    time.perf_counter() - t0)
+                reg.counter("engine_ops", path="scan").inc()
             return ScanResult(count=cnt, r_lo=r_lo, r_hi_excl=r_hi,
                               vsum=vs, vmin=mn, vmax=mx)
         # materialize composes with the requested aggregates in the SAME
@@ -470,8 +483,14 @@ class TieredScanner:
                 return (s.count, s.vsum, s.vmin, s.vmax, r_lo, r_hi,
                         ranks, vals, over)
             fn = self._mats[key] = jax.jit(mat)
-        cnt, vs, mn, mx, r_lo, r_hi, ranks, vals, over = fn(
-            lo, hi, kp, vp_mat, self.aux, self.values_dev)
+        with _span("scan.dispatch", mode=mode, materialize=K):
+            t0 = time.perf_counter()
+            cnt, vs, mn, mx, r_lo, r_hi, ranks, vals, over = fn(
+                lo, hi, kp, vp_mat, self.aux, self.values_dev)
+            reg = get_registry()
+            reg.histogram("engine_op_seconds", path="scan").observe(
+                time.perf_counter() - t0)
+            reg.counter("engine_ops", path="scan").inc()
         return ScanResult(count=cnt, r_lo=r_lo, r_hi_excl=r_hi,
                           vsum=vs, vmin=mn, vmax=mx,
                           ranks=ranks, values=vals, overflow=over)

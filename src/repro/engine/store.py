@@ -35,6 +35,7 @@ import dataclasses
 import functools
 import os
 import threading
+import time
 from typing import Any, Optional
 
 import numpy as np
@@ -42,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.util import ceil_to as _ceil_to, sentinel_for
+from ..obs import get_registry, span
 from . import delta as _delta
 from . import tiered
 from .schedule import _next_pow2
@@ -462,9 +464,21 @@ class MutableIndex:
     def _write(self, keys, values, *, delete: bool):
         with self._lock:
             jr = self._journal
+            if jr is not None:
+                # write-ahead for the WHOLE batch, then apply: replay is an
+                # idempotent upsert, so batch-level WAL ordering is
+                # equivalent to per-key interleaving — and it puts the
+                # journal cost in one measured place
+                with span("journal.append", n=int(keys.size)):
+                    t0 = time.perf_counter()
+                    for k, v in zip(keys, values):
+                        jr.append(k, 0 if delete else int(v), delete=delete)
+                    jr.flush()
+                    reg = get_registry()
+                    reg.histogram("engine_op_seconds", path="journal") \
+                        .observe(time.perf_counter() - t0)
+                    reg.counter("engine_ops", path="journal").inc()
             for k, v in zip(keys, values):
-                if jr is not None:               # write-ahead, then apply
-                    jr.append(k, 0 if delete else int(v), delete=delete)
                 if self.delta.full:
                     self._seal()
                 # ---- lower-twin sync + bit derivation (DESIGN.md §6.3):
@@ -497,8 +511,6 @@ class MutableIndex:
                         self.stats["shadowed"] += 1
                 else:
                     self.stats["upserts"] += 1
-            if jr is not None:
-                jr.flush()
             self._rev += 1
 
     def _seal(self):
@@ -507,15 +519,17 @@ class MutableIndex:
         buffer has not been folded yet, fold it now (the only path where
         a writer still pays a merge — sustained pressure with maintenance
         disabled or lagging)."""
-        if self.sealed.count:
-            self.maintain()
-        self.delta, self.sealed = self.sealed, self.delta
-        self.stats["seals"] += 1
-        self._rev += 1
-        if self._mode == "inline":
-            self.maintain()
-        elif self._mode == "thread":
-            self._arm_timer()
+        with span("store.seal"):
+            if self.sealed.count:
+                self.maintain()
+            self.delta, self.sealed = self.sealed, self.delta
+            self.stats["seals"] += 1
+            get_registry().counter("engine_ops", path="seal").inc()
+            self._rev += 1
+            if self._mode == "inline":
+                self.maintain()
+            elif self._mode == "thread":
+                self._arm_timer()
 
     def maintain(self) -> bool:
         """Fold the sealed buffer into the base — the off-hot-path
@@ -530,7 +544,13 @@ class MutableIndex:
             self.stats["maintains"] += 1
             self.stats["merges"] += 1
             self._rev += 1
-            self._fold(dk, dv, dt)
+            with span("store.fold", n=int(dk.size)):
+                t0 = time.perf_counter()
+                self._fold(dk, dv, dt)
+                reg = get_registry()
+                reg.histogram("engine_op_seconds", path="fold").observe(
+                    time.perf_counter() - t0)
+                reg.counter("engine_ops", path="fold").inc()
             self.delta.promote_ss()
             return True
 
@@ -626,12 +646,15 @@ class MutableIndex:
         :meth:`pop_plan_feedback`."""
         from ..core.api import LookupResult
         q = jnp.asarray(queries)
-        with self._lock:
+        with self._lock, span("store.lookup", n=int(q.shape[0])):
             ak, av, asp = self.delta.device_state()
             _, _, atb = self.delta.device_bits()
             sk, sv, ssp = self.sealed.device_state()
             _, _, stb = self.sealed.device_bits()
             tiers = (ak, av, atb, asp, sk, sv, stb, ssp)
+            # dispatch-boundary timer: the jitted call returns as soon as
+            # the dispatch is staged (async), so observing it adds no sync
+            t0 = time.perf_counter()
             if isinstance(self.base, _PagedBase):
                 rank, found, vals, steps = self._fused(
                     q, self.base.dev_keys, self.base.dev_vals, *tiers)
@@ -640,6 +663,10 @@ class MutableIndex:
             else:
                 rank, found, vals, _ = self._fused(q, *tiers)
                 self._last_plan = None
+            reg = get_registry()
+            reg.histogram("engine_op_seconds", path="lookup").observe(
+                time.perf_counter() - t0)
+            reg.counter("engine_ops", path="lookup").inc()
         return LookupResult(rank=rank, found=found, values=vals)
 
     def pop_plan_feedback(self):
@@ -737,7 +764,13 @@ class MutableIndex:
             fn = jits["aggs"].get(mode)
             if fn is None:
                 fn = jits["aggs"][mode] = jax.jit(jits["make_agg"](mode))
-            count, vsum, vmin, vmax, r_lo, r_hi = fn(*args)
+            with span("store.scan", mode=mode):
+                t0 = time.perf_counter()
+                count, vsum, vmin, vmax, r_lo, r_hi = fn(*args)
+                reg = get_registry()
+                reg.histogram("engine_op_seconds", path="scan").observe(
+                    time.perf_counter() - t0)
+                reg.counter("engine_ops", path="scan").inc()
             return _scan.ScanResult(count=count, r_lo=r_lo, r_hi_excl=r_hi,
                                     vsum=vsum, vmin=vmin, vmax=vmax)
         K = int(materialize)
@@ -745,7 +778,14 @@ class MutableIndex:
         fn = jits["mats"].get(key)
         if fn is None:
             fn = jits["mats"][key] = jax.jit(jits["make_mat"](K, mode))
-        count, vsum, vmin, vmax, r_lo, r_hi, ranks, vals, over = fn(*args)
+        with span("store.scan", mode=mode, materialize=K):
+            t0 = time.perf_counter()
+            count, vsum, vmin, vmax, r_lo, r_hi, ranks, vals, over = \
+                fn(*args)
+            reg = get_registry()
+            reg.histogram("engine_op_seconds", path="scan").observe(
+                time.perf_counter() - t0)
+            reg.counter("engine_ops", path="scan").inc()
         return _scan.ScanResult(count=count, r_lo=r_lo, r_hi_excl=r_hi,
                                 vsum=vsum, vmin=vmin, vmax=vmax,
                                 ranks=ranks, values=vals, overflow=over)
@@ -857,7 +897,11 @@ class MutableIndex:
             _, recs = _jr.read_segment(path)
             if recs:
                 seq = recs[-1][0] + 1
-        self._journal = _jr.Journal(path, self._key_dtype, next_seq=seq)
+        self._journal = _jr.Journal(path, self._key_dtype, next_seq=seq,
+                                    fsync=self._fsync_policy())
+
+    def _fsync_policy(self) -> str:
+        return getattr(self.config, "journal_fsync", None) or "rotate"
 
     def save(self, ckpt_dir: Optional[str] = None) -> str:
         """Snapshot the full index state (leaf pages, both delta tiers,
@@ -867,11 +911,12 @@ class MutableIndex:
         previous snapshot + its segment replay reconstruct this exact
         state (DESIGN.md §6.5)."""
         from ..ckpt import checkpoint as _ckpt
-        with self._lock:
+        with self._lock, span("store.snapshot_save"):
             d = ckpt_dir or self._ckpt_dir
             if d is None:
                 raise ValueError("no checkpoint directory: pass ckpt_dir "
                                  "or set IndexConfig.ckpt_dir")
+            t0 = time.perf_counter()
             step = (_ckpt.latest_step(d) or 0) + 1
             tree = {"active": self.delta.state(),
                     "sealed": self.sealed.state()}
@@ -882,17 +927,25 @@ class MutableIndex:
                 tree["flat"] = {"keys": bk.copy(), "vals": bv.copy()}
             path = _ckpt.save(d, step, tree, keep=self._ckpt_keep)
             self._rotate_journal(d, step)
+            reg = get_registry()
+            reg.histogram("engine_op_seconds",
+                          path="snapshot_save").observe(
+                              time.perf_counter() - t0)
+            reg.counter("engine_ops", path="snapshot_save").inc()
             return path
 
     def _rotate_journal(self, ckpt_dir: str, step: int):
         from ..ckpt import checkpoint as _ckpt
         from ..ckpt import journal as _jr
-        old, seq = self._journal, 0
-        if old is not None:
-            seq = old.seq
-            old.close()
-        self._journal = _jr.Journal(_jr.segment_path(ckpt_dir, step),
-                                    self._key_dtype, next_seq=seq)
+        with span("journal.rotate", step=step):
+            old, seq = self._journal, 0
+            if old is not None:
+                seq = old.seq
+                old.close()
+            self._journal = _jr.Journal(_jr.segment_path(ckpt_dir, step),
+                                        self._key_dtype, next_seq=seq,
+                                        fsync=self._fsync_policy())
+            get_registry().counter("journal_rotations").inc()
         self._ckpt_dir = self._ckpt_dir or ckpt_dir
         # GC segments no retained snapshot can replay from
         retained = _ckpt.all_steps(ckpt_dir)
@@ -915,6 +968,14 @@ class MutableIndex:
         from ..ckpt import journal as _jr
         cfg = dataclasses.replace(config, ckpt_dir=None) \
             if getattr(config, "ckpt_dir", None) else config
+        with span("store.snapshot_restore"):
+            return cls._restore(cfg, config, ckpt_dir)
+
+    @classmethod
+    def _restore(cls, cfg, config, ckpt_dir: str) -> "MutableIndex":
+        from ..ckpt import checkpoint as _ckpt
+        from ..ckpt import journal as _jr
+        t_start = time.perf_counter()
         self = cls(cfg)
         try:
             raw, step = _ckpt.restore(ckpt_dir, None)
@@ -945,7 +1006,12 @@ class MutableIndex:
             _jr.truncate_torn(path)
         self._ckpt_dir = ckpt_dir
         self._journal = _jr.Journal(path, self._key_dtype,
-                                    next_seq=last_seq + 1)
+                                    next_seq=last_seq + 1,
+                                    fsync=self._fsync_policy())
+        reg = get_registry()
+        reg.histogram("engine_op_seconds", path="snapshot_restore") \
+            .observe(time.perf_counter() - t_start)
+        reg.counter("engine_ops", path="snapshot_restore").inc()
         return self
 
     def _replay(self, ckpt_dir: str, from_step: int):

@@ -27,6 +27,7 @@ tier fits the VMEM budget check from ``kernels/ops.py``.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 from ..core import kary, nitrogen
 from ..core.util import (as_sorted_numpy, ceil_to as _ceil_to, next_pow,
                          pad_to, sentinel_for)
+from ..obs import get_registry, span as _span
 from ..kernels import ops
 from ..kernels import kary_search as _kary
 from ..kernels import page_search as _page
@@ -147,17 +149,23 @@ def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
     one dispatch, no extra sync."""
 
     def pipeline(q, pages):
+        # named_scope markers are trace-time only (zero runtime cost):
+        # they attribute device-profile time to the pipeline's stages
         q_n = q.shape[0]
-        pids = page_of_raw(q)
-        g_cap = ladder_grid(q_n, tile, num_pages)
-        plan = device_plan(pids, tile, g_cap, num_pages, method=plan_method)
+        with jax.named_scope("tiered/top_descent"):
+            pids = page_of_raw(q)
+        with jax.named_scope("tiered/device_plan"):
+            g_cap = ladder_grid(q_n, tile, num_pages)
+            plan = device_plan(pids, tile, g_cap, num_pages,
+                               method=plan_method)
 
         def body(qb, step_pages, g):
             return _page.page_search_bucketed(
                 qb, step_pages, pages, stride=stride,
                 interpret=interpret)
 
-        out = run_scheduled(plan, q, q_n, tile, g_cap, body)
+        with jax.named_scope("tiered/page_kernel"):
+            out = run_scheduled(plan, q, q_n, tile, g_cap, body)
         out = jnp.minimum(out, clip)
         return (out, plan.steps_used) if with_stats else out
 
@@ -283,7 +291,16 @@ def search(index: TieredIndex, queries, *, plan: str | None = None
         # the fused pipeline donates its query buffer; never eat the caller's
         # (no copy needed when the pipeline was built without donation)
         q = jnp.copy(q)
-    return index.search_fused(q, index.pages)
+    # dispatch-boundary timer (the obs-smoke overhead gate's subject):
+    # search_fused returns once the dispatch is staged — no sync added
+    with _span("tiered.search", n=int(q.shape[0])):
+        t0 = time.perf_counter()
+        out = index.search_fused(q, index.pages)
+        reg = get_registry()
+        reg.histogram("engine_op_seconds", path="search").observe(
+            time.perf_counter() - t0)
+        reg.counter("engine_ops", path="search").inc()
+    return out
 
 
 def searcher(index: TieredIndex) -> Callable:

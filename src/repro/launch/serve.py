@@ -63,15 +63,43 @@ def main():
                     help="warm-start the prefix store from --ckpt-dir "
                          "(newest verifiable snapshot + journal replay) "
                          "before serving")
+    ap.add_argument("--fsync", default="rotate",
+                    choices=["never", "rotate", "always"],
+                    help="WAL durability policy (DESIGN.md §6.5): 'never' "
+                         "= OS page cache only, 'rotate' = fsync at "
+                         "segment rotation, 'always' = fsync every "
+                         "acknowledged write batch")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the metrics registry as Prometheus text "
+                         "at http://127.0.0.1:PORT/metrics for the run "
+                         "(0 = ephemeral port, printed at startup)")
+    ap.add_argument("--metrics-selftest", action="store_true",
+                    help="scrape the Prometheus endpoint once after the "
+                         "run and assert the engine series parse back "
+                         "(the CI obs-smoke check); requires "
+                         "--metrics-port")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record host tracing spans for the whole run and "
+                         "dump Chrome/Perfetto trace_event JSON to FILE")
     args = ap.parse_args()
     if args.restore and not args.ckpt_dir:
         ap.error("--restore requires --ckpt-dir")
+    if args.metrics_selftest and args.metrics_port is None:
+        ap.error("--metrics-selftest requires --metrics-port")
 
     import jax
     from ..configs import get_config
     from ..core import IndexConfig
     from ..models import transformer as T
     from ..serve import SamplerConfig, ServeEngine
+    from .. import obs
+
+    srv = None
+    if args.metrics_port is not None:
+        srv, port = obs.start_http_server(args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{port}/metrics")
+    if args.trace_out:
+        obs.TRACER.enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -90,7 +118,8 @@ def main():
                                  queue_adapt=not args.no_queue_adapt,
                                  queue_max_share=args.queue_max_share,
                                  queue_adaptive_deadline=
-                                 not args.no_adaptive_deadline),
+                                 not args.no_adaptive_deadline,
+                                 journal_fsync=args.fsync),
         decode_batching=not args.no_decode_queue,
         sampler=SamplerConfig(temperature=args.temperature, top_p=args.top_p))
     restore_s = None
@@ -133,13 +162,15 @@ def main():
     if s.decode_flushes:
         print(f"decode queue: {s.decode_flushes} fused inversion batches, "
               f"mean occupancy {s.decode_occupancy:.3f}")
-    for (path, t), ts in sorted(s.tenants.items(),
-                                key=lambda kv: (kv[0][0], str(kv[0][1]))):
-        print(f"  tenant[{path}:{t}]: {ts.queries} queries / "
-              f"{ts.flushes} flushes, admitted {ts.admitted}, "
-              f"deferred {ts.deferred}, drops {ts.drops}, "
-              f"wait mean/max {ts.mean_wait_s*1e6:.0f}/"
-              f"{ts.wait_max_s*1e6:.0f}us, occ share {ts.mean_occ_share:.3f}")
+    # one registry snapshot helper renders every (path, tenant) row —
+    # the same rows EngineStats.tenants exposes (DESIGN.md §9)
+    from ..engine.queue import tenant_summary
+    for row in tenant_summary():
+        print(f"  tenant[{row.path}:{row.tenant}]: {row.queries} queries / "
+              f"{row.flushes} flushes, admitted {row.admitted}, "
+              f"deferred {row.deferred}, drops {row.drops}, "
+              f"wait mean/max {row.wait_mean_us:.0f}/"
+              f"{row.wait_max_us:.0f}us, occ share {row.occupancy:.3f}")
     if eng.store.index_config.mutable:
         print(f"write path:   {eng.store.index_stats}")
     if restore_s is not None:
@@ -148,6 +179,34 @@ def main():
     if args.ckpt_dir:
         path = eng.store.save(args.ckpt_dir)
         print(f"saved prefix store: {len(eng.store.hashes)} pages -> {path}")
+    if args.trace_out:
+        doc = obs.TRACER.export(args.trace_out)
+        print(f"trace: {len(doc['traceEvents'])} events -> {args.trace_out}")
+    if srv is not None:
+        if args.metrics_selftest:
+            _metrics_selftest(srv.server_address[1])
+        srv.shutdown()
+
+
+def _metrics_selftest(port: int):
+    """Scrape our own Prometheus endpoint over TCP and assert the engine
+    series are present and parse — the CI obs-smoke check."""
+    import urllib.request
+    from .. import obs
+    body = urllib.request.urlopen(
+        f"http://127.0.0.1:{port}/metrics", timeout=10).read().decode()
+    parsed = obs.parse_prometheus(body)
+    names = {n for n, _ in parsed}
+    required = ["repro_queue_submits_total", "repro_queue_flushes_total",
+                "repro_engine_op_seconds_bucket",
+                "repro_engine_op_seconds_count"]
+    missing = [n for n in required if n not in names]
+    assert not missing, f"metrics selftest: missing series {missing}"
+    paths = {lab for n, lab in parsed
+             if n == "repro_engine_op_seconds_count"}
+    assert any('path="probe"' in p for p in paths), paths
+    print(f"metrics selftest: {len(parsed)} samples, "
+          f"{len(names)} series ok")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+"""Unified observability subsystem (DESIGN.md §9).
+
+Three pieces, all host-side and sync-free by construction:
+
+* ``obs.metrics`` — a process-wide registry of named counters, gauges and
+  log-bucketed (power-of-√2) latency histograms with labeled series
+  (path / tenant / kind), snapshot-able for benchmarks and exportable as
+  Prometheus text exposition (``start_http_server``).
+* ``obs.trace`` — host-side tracing spans (``with span("queue.flush")``)
+  recorded into a ring buffer and exportable as Chrome/Perfetto
+  ``trace_event`` JSON; enabled spans also enter
+  ``jax.profiler.TraceAnnotation`` so device profiles line up with the
+  host timeline.
+* Device-side attribution rides on ``jax.named_scope`` markers inside the
+  fused pipelines (engine/tiered.py, engine/scan.py) — trace-time only,
+  zero runtime cost.
+
+The hard rule every instrumentation point obeys: **never break the
+one-dispatch / zero-host-sync contract**. Timers wrap dispatch boundaries
+(staging cost of the async dispatch), occupancy and step counts ride the
+existing lazy feedback thunks, and nothing in this package ever calls
+``block_until_ready`` on the hot path (transfer-guard tested).
+"""
+from .metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, Registry, REGISTRY, NULL_REGISTRY,
+    get_registry, set_registry, use_registry, metrics_enabled,
+    start_http_server, parse_prometheus)
+from .trace import TRACER, Tracer, span  # noqa: F401
+
+
+def configure(*, metrics: bool = True, trace: bool = False,
+              trace_capacity: int | None = None):
+    """One-call switchboard: route metric updates to the process registry
+    (or the null sink) and enable/disable span recording. The off posture
+    is what the bench_tiered ``--obs-smoke`` overhead gate compares
+    against."""
+    set_registry(REGISTRY if metrics else NULL_REGISTRY)
+    if trace:
+        TRACER.enable(capacity=trace_capacity)
+    else:
+        TRACER.disable()
+
+
+def snapshot() -> dict:
+    """The active registry's snapshot — what benchmarks embed in their
+    ``BENCH_*.json`` payloads."""
+    return get_registry().snapshot()

@@ -11,7 +11,7 @@ point lookups over a sorted key space, with batch rebuilds on insert.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -20,28 +20,56 @@ import jax.numpy as jnp
 
 from ..core import IndexConfig
 from ..models import transformer as T
+from ..obs import get_registry, span
+from ..engine.queue import tenant_summary
 from . import kv_cache as KV
 from .sampler import SamplerConfig, sample, sample_queued
 
 
 @dataclass
 class EngineStats:
+    """Serving counters. The wall-clock fields are engine-loop-local; the
+    queue-derived fields (probe/decode flushes, occupancy, per-tenant rows)
+    are VIEWS over the metrics registry — the queues write there once and
+    this dataclass reads it back, no parallel bookkeeping (DESIGN.md §9)."""
     prefill_tokens: int = 0
     reused_tokens: int = 0
     decode_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    # store-probe path (the micro-batch queue client, DESIGN.md §7):
     probe_s: float = 0.0          # wall time in batched store probes
-    probe_batches: int = 0        # fused probe dispatches (queue flushes)
-    probe_occupancy: float = 0.0  # mean executed-plan lane occupancy
-    # decode-step batching (DESIGN.md §7.1): CDF inversions through the
-    # decode micro-batch queue — one fused inversion per flush
-    decode_flushes: int = 0
-    decode_occupancy: float = 0.0
-    # per-tenant ledger (engine.admission.TenantStats), merged across the
-    # probe and decode queues; keys are the tenant ids passed to generate
-    tenants: dict = field(default_factory=dict)
+    registry: object = None       # metrics registry (None = process default)
+
+    def _reg(self):
+        return self.registry if self.registry is not None else get_registry()
+
+    @property
+    def probe_batches(self) -> int:
+        """Fused probe dispatches (probe-queue flushes)."""
+        return int(self._reg().total("queue_flushes", path="probe"))
+
+    @property
+    def probe_occupancy(self) -> float:
+        """Mean executed-plan lane occupancy of the probe path."""
+        return self._reg().merged_histogram("queue_flush_occupancy",
+                                            path="probe").mean
+
+    @property
+    def decode_flushes(self) -> int:
+        """Fused CDF-inversion dispatches (decode-queue flushes)."""
+        return int(self._reg().total("queue_flushes", path="decode"))
+
+    @property
+    def decode_occupancy(self) -> float:
+        return self._reg().merged_histogram("queue_flush_occupancy",
+                                            path="decode").mean
+
+    @property
+    def tenants(self) -> dict:
+        """{(path, tenant): TenantRow} across the probe and decode queues,
+        rendered from the registry by ``engine.queue.tenant_summary``."""
+        return {(r.path, r.tenant): r
+                for r in tenant_summary(self._reg())}
 
 
 class ServeEngine:
@@ -49,7 +77,7 @@ class ServeEngine:
                  index_config: Optional[IndexConfig] = None,
                  sampler: SamplerConfig = SamplerConfig(temperature=0.0),
                  decode_batching: bool = True,
-                 compute_dtype=jnp.float32):
+                 compute_dtype=jnp.float32, registry=None):
         self.cfg, self.params = cfg, params
         self.max_len, self.page_size = max_len, page_size
         self.sampler = sampler
@@ -67,7 +95,7 @@ class ServeEngine:
             page_size, index_config or IndexConfig(kind="tiered",
                                                    plan="device",
                                                    mutable=True))
-        self.stats = EngineStats()
+        self.stats = EngineStats(registry=registry)
         self._decode_queue = None
         self._jit_decode = jax.jit(
             lambda p, t, c: T.decode_step(cfg, p, t, c, compute_dtype=compute_dtype))
@@ -90,17 +118,9 @@ class ServeEngine:
                 max_share=c.queue_max_share,
                 adaptive_deadline=c.queue_adaptive_deadline,
                 deadline_floor_s=c.queue_deadline_floor_s,
-                max_backlog=c.queue_max_backlog, timer=False)
+                max_backlog=c.queue_max_backlog, timer=False,
+                path="decode")
         return self._decode_queue
-
-    def _fold_tenants(self, queue, path: str):
-        """Surface a queue's per-tenant ledger in EngineStats.tenants under
-        a per-queue namespace — keys are ``(path, tenant)`` with path in
-        {"probe", "decode"}. The queue's TenantStats objects are cumulative
-        and live, so referencing them (not copying) keeps the engine view
-        always current with zero bookkeeping."""
-        for t, ts in queue.stats.tenants.items():
-            self.stats.tenants[(path, t)] = ts
 
     # ------------------------------------------------------------- prefill
     def prefill_one(self, tokens: np.ndarray, memory=None, probe=None):
@@ -151,15 +171,12 @@ class ServeEngine:
         executed-plan + per-tenant stats into EngineStats."""
         if not self.pageable:
             return [None] * len(prompts)
-        t0 = time.perf_counter()
-        probes = self.store.lookup_batch(
-            [np.asarray(p, np.int32) for p in prompts], tenants=tenants)
-        self.stats.probe_s += time.perf_counter() - t0
-        queue = self.store.probe_queue()
-        queue.drain_feedback()
-        self.stats.probe_batches = queue.stats.flushes
-        self.stats.probe_occupancy = queue.stats.mean_occupancy
-        self._fold_tenants(queue, "probe")
+        with span("serve.probe_batch", n=len(prompts)):
+            t0 = time.perf_counter()
+            probes = self.store.lookup_batch(
+                [np.asarray(p, np.int32) for p in prompts], tenants=tenants)
+            self.stats.probe_s += time.perf_counter() - t0
+            self.store.probe_queue().drain_feedback()
         return probes
 
     # ------------------------------------------------------------- decode
@@ -177,6 +194,10 @@ class ServeEngine:
         if tenants is not None and len(tenants) != len(prompts):
             raise ValueError(f"tenants must have one id per prompt: "
                              f"{len(tenants)} != {len(prompts)}")
+        with span("serve.generate", batch=len(prompts), steps=steps):
+            return self._generate(prompts, steps, rng, memory, tenants)
+
+    def _generate(self, prompts, steps, rng, memory, tenants):
         probes = self._probe_batch(prompts, tenants=tenants)
         revision = self.store.revision
         logits_list, caches = [], []
@@ -189,7 +210,8 @@ class ServeEngine:
                 full = probe[0] >= (len(p) - 1) // self.page_size
                 if not full:
                     probe = None
-            lg, c = self.prefill_one(p, memory=memory, probe=probe)
+            with span("serve.prefill", tokens=len(p)):
+                lg, c = self.prefill_one(p, memory=memory, probe=probe)
             logits_list.append(lg)
             caches.append(c)
         # stack along batch: lengths on axis 0, layer leaves [R, B, ...] on 1
@@ -206,20 +228,18 @@ class ServeEngine:
         dq = self.decode_queue() if use_queue else None
         t0 = time.perf_counter()
         for i in range(steps):
-            rng, k = jax.random.split(rng)
-            if use_queue:
-                nxt = sample_queued(logits, k, self.sampler, dq,
-                                    tenants=tenants)
-            else:
-                nxt = sample(logits, k, self.sampler)
-            toks_out.append(nxt)
-            logits, cache = self._jit_decode(self.params, nxt, cache)
+            with span("serve.decode_step", step=i):
+                rng, k = jax.random.split(rng)
+                if use_queue:
+                    nxt = sample_queued(logits, k, self.sampler, dq,
+                                        tenants=tenants)
+                else:
+                    nxt = sample(logits, k, self.sampler)
+                toks_out.append(nxt)
+                logits, cache = self._jit_decode(self.params, nxt, cache)
         jax.block_until_ready(logits)
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.decode_tokens += steps * len(prompts)
         if dq is not None:
             dq.drain_feedback()
-            self.stats.decode_flushes = dq.stats.flushes
-            self.stats.decode_occupancy = dq.stats.mean_occupancy
-            self._fold_tenants(dq, "decode")
         return jnp.stack(toks_out, axis=1)

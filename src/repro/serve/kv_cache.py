@@ -262,7 +262,7 @@ class PrefixPageStore:
                 max_share=c.queue_max_share,
                 adaptive_deadline=c.queue_adaptive_deadline,
                 deadline_floor_s=c.queue_deadline_floor_s,
-                max_backlog=c.queue_max_backlog)
+                max_backlog=c.queue_max_backlog, path="probe")
         return self._queue
 
     def lookup_batch(self, prompts: list, tenants: Optional[list] = None):
