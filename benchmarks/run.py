@@ -2,10 +2,19 @@
 Prints ``name,us_per_call,derived`` CSV lines.
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only fig5_1,...]``
+
+``--aggregate`` folds every ``BENCH_*.json`` in the working directory
+(the per-module payloads plus the CI jobs' gate artifacts) into one
+``BENCH_aggregate.json`` trajectory summary: per-file headline numbers,
+gate verdicts, and the union of backends seen — the single file a trend
+job diffs across commits instead of re-parsing each payload shape.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
 import time
 import traceback
@@ -14,11 +23,77 @@ MODULES = ["bench_fig5_1", "bench_fig5_2", "bench_fig5_3", "bench_table4_1",
            "bench_serving", "bench_tiered"]
 
 
+def _summarize(name: str, data: dict) -> dict:
+    """Headline numbers for one payload, tolerant of every BENCH_* shape:
+    sweep payloads carry ``results`` rows, gate payloads carry their own
+    verdict fields."""
+    s: dict = {"file": name, "backend": data.get("backend")}
+    rows = data.get("results")
+    if isinstance(rows, list) and rows:
+        s["rows"] = len(rows)
+        timed = [r for r in rows if isinstance(r, dict)
+                 and "us_per_batch" in r]
+        if timed:
+            best = min(timed, key=lambda r: r["us_per_batch"])
+            s["best_us_per_batch"] = best["us_per_batch"]
+            s["best_kind"] = best.get("kind")
+    if "overhead" in data:                     # obs-smoke gate
+        s["obs_overhead"] = data["overhead"]
+        s["ok"] = data["overhead"] <= data.get("gate", 0.03)
+    if "cells" in data:                        # specialize-smoke gate
+        cells = data["cells"]
+        s["cells_ok"] = sum(1 for c in cells if c.get("ok"))
+        s["cells"] = len(cells)
+        s["best_ratio"] = min(c["ratio"] for c in cells)
+        s["ok"] = all(c.get("ok") for c in cells) \
+            and bool(data.get("verify", {}).get("ok"))
+    if "autotune" in data:
+        s["tuned_knobs"] = data["autotune"].get("knobs")
+    return s
+
+
+def aggregate(out: str = "BENCH_aggregate.json") -> dict:
+    files = sorted(f for f in glob.glob("BENCH_*.json")
+                   if os.path.basename(f) != os.path.basename(out))
+    summaries, failures = [], 0
+    for f in files:
+        try:
+            with open(f) as fh:
+                summaries.append(_summarize(os.path.basename(f),
+                                            json.load(fh)))
+        except (OSError, ValueError) as e:
+            failures += 1
+            summaries.append({"file": os.path.basename(f),
+                              "error": str(e)})
+    payload = {"files": len(files),
+               "backends": sorted({s["backend"] for s in summaries
+                                   if s.get("backend")}),
+               "gates_ok": all(s["ok"] for s in summaries if "ok" in s),
+               "summaries": summaries}
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    for s in summaries:
+        print(f"# {s['file']}: " + ", ".join(
+            f"{k}={v}" for k, v in s.items() if k != "file"))
+    print(f"# wrote {out} ({len(files)} payloads, "
+          f"gates_ok={payload['gates_ok']})")
+    if failures:
+        sys.exit(1)
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list of module suffixes (fig5_1,...)")
+    ap.add_argument("--aggregate", action="store_true",
+                    help="fold every BENCH_*.json into one "
+                         "BENCH_aggregate.json trajectory summary "
+                         "instead of running benchmarks")
     args = ap.parse_args()
+    if args.aggregate:
+        aggregate()
+        return
     only = {f"bench_{s.strip()}" for s in args.only.split(",") if s.strip()}
     print("name,us_per_call,derived")
     failures = 0

@@ -1,1 +1,32 @@
+"""Model-architecture configs (``get_config``) + tuned platform profiles.
+
+Alongside the ``.py`` architecture configs, this directory holds the
+autotuner's persisted winners as ``tuned_<platform>.json`` (DESIGN.md
+§10) — written by ``repro.tune.autotune`` / ``bench_tiered
+--specialize-smoke``, loaded by ``IndexConfig.from_tuned(platform)``.
+One profile is a versioned JSON object:
+
+    {
+      "version": 1,
+      "platform": "cpu",            # sanitized key, the filename suffix
+      "backend": "cpu",             # jax.default_backend() at tune time
+      "device_kind": "cpu",         # jax.devices()[0].device_kind
+      "knobs": {                    # the winning sweep point
+        "tile": 128, "leaf_width": null,       # -> IndexConfig fields
+        "histogram_max_pages": 32,  # -> schedule.set_plan_thresholds
+        "queue_min_flush": 64, "queue_deadline_s": 0.002,
+        "specialize": true
+      },
+      "objective": {                # registry-read score of the winner:
+        "lookup"|"scan"|"flush": {"p50","p99","mean","count"},
+        "score": [bucket_score, mean_score]    # lexicographic
+      },
+      "trials": [...],              # every sweep point's knobs+objective
+      "registry": {...}             # winner's obs.Registry snapshot
+    }
+
+Newer ``version`` values are rejected at load (forward-compat guard);
+unknown knob names are ignored so old engines can read newer profiles
+of the same version.
+"""
 from .base import ArchConfig, ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: F401

@@ -34,6 +34,12 @@ class IndexConfig:
     top: str = "auto"            # tiered: top tier ('auto'|'nitrogen'|'kary')
     tile: int = 128              # tiered: queries per bucket / grid step
     plan: str = "device"         # tiered: schedule placement ('device'|'host')
+    # compile the index INTO the program (DESIGN.md §10): the built top
+    # tier, separators, page addresses and layout constants close over the
+    # jitted pipeline as compile-time constants instead of riding as jit
+    # args. Mutable stores re-specialize only at the derive boundary and
+    # fall back to data-as-jit-args between derives.
+    specialize: bool = False
     mutable: bool = False        # delta-merge write path (engine/store.py)
     delta_capacity: int = 1024   # mutable: delta buffer size (rounded to pow2)
     # mutable-store maintenance + durability (DESIGN.md §6.3–§6.5)
@@ -60,6 +66,11 @@ class IndexConfig:
         if self.plan not in ("device", "host"):
             raise ValueError(
                 f"unknown plan mode {self.plan!r}; want 'device' or 'host'")
+        if self.specialize and self.kind == "tiered" and self.plan == "host":
+            raise ValueError(
+                "specialize=True requires the device plan for kind='tiered' "
+                "(the host BucketPlan reads per-batch stats that cannot be "
+                "baked into the executable); use plan='device'")
         if self.mutable and self.delta_capacity <= 0:
             raise ValueError(
                 f"delta_capacity must be positive, got {self.delta_capacity}")
@@ -97,6 +108,26 @@ class IndexConfig:
                 f"queue_max_backlog must be >= 0, got "
                 f"{self.queue_max_backlog}")
 
+    @classmethod
+    def from_tuned(cls, platform: Optional[str] = None, *,
+                   profile_dir: Optional[str] = None,
+                   **overrides) -> "IndexConfig":
+        """Config from a persisted autotuner profile (``repro.tune``):
+        ``tuned_<platform>.json`` under ``src/repro/configs/`` (or
+        ``profile_dir``) supplies tile / leaf_width / queue knobs /
+        specialize; ``platform=None`` resolves to the current jax backend.
+        Module-global plan thresholds the profile carries
+        (``histogram_max_pages``) are applied to ``engine.schedule`` as a
+        side effect — they are machine-wide, not per-config. Keyword
+        ``overrides`` win over the profile's knobs."""
+        from ..tune.profile import load_profile
+        prof = load_profile(platform, profile_dir=profile_dir)
+        kw = prof.config_kwargs()
+        kw.update(overrides)
+        cfg = cls(**kw)
+        prof.apply_thresholds()
+        return cfg
+
 
 @dataclass(frozen=True)
 class LookupResult:
@@ -124,6 +155,17 @@ class Index:
     def search(self, queries) -> jnp.ndarray:
         q = jnp.asarray(queries)
         mod = _module_for(self.config.kind)
+        if self.config.specialize and self.config.kind != "tiered":
+            # specialization for the flat/tree kinds: one jitted closure
+            # with the searcher's arrays captured as compile-time constants
+            # (the tiered kind carries its own specialized pipeline on the
+            # impl — engine/tiered.py). Frozen index, so never stale.
+            fn = getattr(self, "_spec_search", None)
+            if fn is None:
+                impl = self.impl
+                fn = jax.jit(lambda qq: mod.search(impl, qq))
+                object.__setattr__(self, "_spec_search", fn)
+            return fn(q)
         return mod.search(self.impl, q)
 
     def search_range(self, lo, hi) -> tuple:
@@ -292,7 +334,7 @@ def build_index(keys, values=None, config: IndexConfig = IndexConfig()) -> Index
     elif c.kind == "tiered":
         from ..engine import tiered
         impl = tiered.build(srt, leaf_width=c.leaf_width, tile=c.tile,
-                            top=c.top, plan=c.plan)
+                            top=c.top, plan=c.plan, specialize=c.specialize)
     else:  # pragma: no cover
         raise AssertionError
     return Index(config=c, impl=impl, keys_sorted=jnp.asarray(srt),

@@ -390,6 +390,14 @@ class TieredScanner:
         self._span_of = _tiered._make_span_of(index.page_of_raw, kd)
         self._val_dtype = vd
         self._n, self._lw = n, lw
+        # specialization (DESIGN.md §10): on a specialize=True index the
+        # jitted dispatches close over the key/value pages AND the ScanAux
+        # prefixes/sparse tables as compile-time constants — the scan twin
+        # of the point pipeline's const_pages. A frozen index never
+        # mutates, so the constants cannot go stale (the mutable store's
+        # scan keeps aux as jit args precisely because ITS aux changes
+        # per mutation, engine/store.py).
+        self._spec = bool(getattr(index, "specialize", False))
         self._pipes = {}              # mode -> traceable pipeline
         self._aggs = {}               # mode -> jitted aggregate dispatch
         self._mats = {}               # K -> jitted materialize dispatch
@@ -412,13 +420,24 @@ class TieredScanner:
     def agg_fn(self, mode: str) -> Callable:
         """The jitted aggregate dispatch for a static pushdown mode:
         (lo, hi, kpages, vpages, aux) -> (count, vsum, vmin, vmax, r_lo,
-        r_hi_excl) with None members above the mode's depth."""
+        r_hi_excl) with None members above the mode's depth. On a
+        specialized index the signature is just ``(lo, hi)`` — pages and
+        aux are baked into the executable."""
         fn = self._aggs.get(mode)
         if fn is None:
-            def agg(lo, hi, kpages, vpages, aux):
-                s, r_lo, r_hi = self._rank_raw(mode, lo, hi, kpages,
-                                               vpages, aux)
-                return s.count, s.vsum, s.vmin, s.vmax, r_lo, r_hi
+            if self._spec:
+                kp, aux = self.index.pages, self.aux
+                vp = self.vpages if mode != "count" else None
+
+                def agg(lo, hi):
+                    s, r_lo, r_hi = self._rank_raw(mode, lo, hi, kp, vp,
+                                                   aux)
+                    return s.count, s.vsum, s.vmin, s.vmax, r_lo, r_hi
+            else:
+                def agg(lo, hi, kpages, vpages, aux):
+                    s, r_lo, r_hi = self._rank_raw(mode, lo, hi, kpages,
+                                                   vpages, aux)
+                    return s.count, s.vsum, s.vmin, s.vmax, r_lo, r_hi
             fn = self._aggs[mode] = jax.jit(agg)
         return fn
 
@@ -448,8 +467,11 @@ class TieredScanner:
         if materialize is None:
             with _span("scan.dispatch", mode=mode):
                 t0 = time.perf_counter()
-                cnt, vs, mn, mx, r_lo, r_hi = self.agg_fn(mode)(
-                    lo, hi, kp, vp, self.aux)
+                if self._spec:
+                    cnt, vs, mn, mx, r_lo, r_hi = self.agg_fn(mode)(lo, hi)
+                else:
+                    cnt, vs, mn, mx, r_lo, r_hi = self.agg_fn(mode)(
+                        lo, hi, kp, vp, self.aux)
                 reg = get_registry()
                 reg.histogram("engine_op_seconds", path="scan").observe(
                     time.perf_counter() - t0)
@@ -467,7 +489,7 @@ class TieredScanner:
         lw, lwp = self._lw, self.index.lw_pad
         fn = self._mats.get(key)
         if fn is None:
-            def mat(lo, hi, kpages, vpages, aux, flat_vals):
+            def _mat_body(lo, hi, kpages, vpages, aux, flat_vals):
                 s, r_lo, r_hi = self._rank_raw(
                     mode, lo, hi, kpages,
                     vpages if mode != "count" else None, aux)
@@ -482,11 +504,21 @@ class TieredScanner:
                     vals = jnp.where(ranks >= 0, g, 0)
                 return (s.count, s.vsum, s.vmin, s.vmax, r_lo, r_hi,
                         ranks, vals, over)
+            if self._spec:
+                ckp, cvp, caux, cfv = kp, vp_mat, self.aux, self.values_dev
+
+                def mat(lo, hi):
+                    return _mat_body(lo, hi, ckp, cvp, caux, cfv)
+            else:
+                mat = _mat_body
             fn = self._mats[key] = jax.jit(mat)
         with _span("scan.dispatch", mode=mode, materialize=K):
             t0 = time.perf_counter()
-            cnt, vs, mn, mx, r_lo, r_hi, ranks, vals, over = fn(
-                lo, hi, kp, vp_mat, self.aux, self.values_dev)
+            if self._spec:
+                cnt, vs, mn, mx, r_lo, r_hi, ranks, vals, over = fn(lo, hi)
+            else:
+                cnt, vs, mn, mx, r_lo, r_hi, ranks, vals, over = fn(
+                    lo, hi, kp, vp_mat, self.aux, self.values_dev)
             reg = get_registry()
             reg.histogram("engine_op_seconds", path="scan").observe(
                 time.perf_counter() - t0)

@@ -40,6 +40,7 @@ plans, chosen statically per (Q, num_pages) by :func:`plan_method`
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass
 from typing import Callable, NamedTuple
@@ -149,6 +150,17 @@ def ladder_rungs(q_n: int, tile: int, g_cap: int) -> list[int]:
     return rungs
 
 
+def ladder_for(q_n: int, tile: int, num_pages: int) -> tuple[int, list[int]]:
+    """``(g_cap, rungs)`` — the full grid ladder of a Q-query batch over a
+    known page count. The specialization path (engine/tiered.py,
+    ``IndexConfig(specialize=True)``) computes this ONCE from the baked-in
+    layout constants and threads the known ladder through
+    :func:`run_scheduled`, so rung selection closes over a literal list
+    instead of re-deriving it inside every pipeline trace."""
+    g_cap = ladder_grid(q_n, tile, num_pages)
+    return g_cap, ladder_rungs(q_n, tile, g_cap)
+
+
 def select_rung(steps_used, rungs: list[int]):
     """Traced index of the smallest rung >= steps_used (rungs ascending;
     the last rung is the worst-case cap, so the index is always valid)."""
@@ -186,10 +198,13 @@ def occupancy_shares(counts: dict, occupancy: float) -> dict:
 
 
 def run_scheduled_multi(plan: DevicePlan, qs: tuple, q_n: int,
-                        tile: int, g_cap: int, body: Callable) -> tuple:
+                        tile: int, g_cap: int, body: Callable,
+                        rungs: list[int] | None = None) -> tuple:
     """Run a per-(step, lane) ``body`` over a DevicePlan at the ladder rung
     selected on device — the multi-operand, multi-output generalization of
-    :func:`run_scheduled`.
+    :func:`run_scheduled`. ``rungs`` overrides the derived ladder with a
+    known one (:func:`ladder_for`, the specialization path); ``None``
+    derives it from ``(q_n, tile, g_cap)`` as always.
 
     Every array in ``qs`` (each [Q]) is scattered into kernel lanes through
     the same ``dest`` permutation; ``body(qbs, step_pages [g], g)`` receives
@@ -213,7 +228,8 @@ def run_scheduled_multi(plan: DevicePlan, qs: tuple, q_n: int,
         return tuple(jnp.take(o.reshape(-1), plan.dest, mode="clip")
                      for o in outs)
 
-    rungs = ladder_rungs(q_n, tile, g_cap)
+    if rungs is None:
+        rungs = ladder_rungs(q_n, tile, g_cap)
     if len(rungs) == 1:
         return run_rung(rungs[0])
     return jax.lax.switch(select_rung(plan.steps_used, rungs),
@@ -221,7 +237,8 @@ def run_scheduled_multi(plan: DevicePlan, qs: tuple, q_n: int,
 
 
 def run_scheduled(plan: DevicePlan, q: jnp.ndarray, q_n: int,
-                  tile: int, g_cap: int, body: Callable) -> jnp.ndarray:
+                  tile: int, g_cap: int, body: Callable,
+                  rungs: list[int] | None = None) -> jnp.ndarray:
     """Single-operand form of :func:`run_scheduled_multi`:
     ``body(qb [g, tile], step_pages [g], g) -> [g, tile]`` — the bottom-tier
     compute (Pallas page kernel in the dense engine, jnp page compare in the
@@ -229,7 +246,8 @@ def run_scheduled(plan: DevicePlan, q: jnp.ndarray, q_n: int,
     """
     (out,) = run_scheduled_multi(
         plan, (q,), q_n, tile, g_cap,
-        lambda qbs, step_pages, g: (body(qbs[0], step_pages, g),))
+        lambda qbs, step_pages, g: (body(qbs[0], step_pages, g),),
+        rungs=rungs)
     return out
 
 
@@ -313,6 +331,42 @@ HISTOGRAM_MIN_QUERIES = 4096      # never below this batch depth
 HISTOGRAM_MIN_DEPTH = 128         # and require Q >= P * this
 
 PLAN_METHODS = ("sort", "histogram")
+
+
+def set_plan_thresholds(*, max_pages: int | None = None,
+                        min_queries: int | None = None,
+                        min_depth: int | None = None) -> dict:
+    """Override the sort-vs-histogram crossover thresholds (the autotuner's
+    per-platform knob, src/repro/tune/): the defaults above were measured
+    on the CPU backend, and the whole point of the tuner is that real
+    hardware moves them. Returns the PREVIOUS values so callers (and the
+    :func:`plan_thresholds` context manager) can restore. Only affects
+    pipelines traced after the call — already-compiled executables keep the
+    selection they were traced with."""
+    global HISTOGRAM_MAX_PAGES, HISTOGRAM_MIN_QUERIES, HISTOGRAM_MIN_DEPTH
+    prev = {"max_pages": HISTOGRAM_MAX_PAGES,
+            "min_queries": HISTOGRAM_MIN_QUERIES,
+            "min_depth": HISTOGRAM_MIN_DEPTH}
+    if max_pages is not None:
+        if max_pages < 1:
+            raise ValueError(f"max_pages must be >= 1, got {max_pages}")
+        HISTOGRAM_MAX_PAGES = int(max_pages)
+    if min_queries is not None:
+        HISTOGRAM_MIN_QUERIES = int(min_queries)
+    if min_depth is not None:
+        HISTOGRAM_MIN_DEPTH = int(min_depth)
+    return prev
+
+
+@contextlib.contextmanager
+def plan_thresholds(**kw):
+    """Scoped :func:`set_plan_thresholds` — the tuner sweeps candidates
+    under this so a failed trial never leaks its thresholds."""
+    prev = set_plan_thresholds(**kw)
+    try:
+        yield
+    finally:
+        set_plan_thresholds(**prev)
 
 
 def plan_method(q_n: int, num_pages: int | None) -> str:

@@ -87,7 +87,7 @@ class _PagedBase:
     def __init__(self, keys_sorted: np.ndarray, vals_sorted: np.ndarray, *,
                  leaf_width: Optional[int] = None, tile: int = 128,
                  top: str = "auto", vmem_budget: Optional[int] = None,
-                 interpret: bool = True):
+                 interpret: bool = True, specialize: bool = False):
         from ..kernels import ops
         self.dtype = keys_sorted.dtype
         self.sentinel = sentinel_for(self.dtype)
@@ -95,6 +95,7 @@ class _PagedBase:
         self.top_cfg = top
         self.vmem_budget = vmem_budget or ops.VMEM_BUDGET_BYTES
         self.interpret = interpret
+        self.specialize = bool(specialize)
         n = int(keys_sorted.size)
         auto_lw, _, _ = tiered.plan_tiers(n, tile=tile,
                                           vmem_budget=self.vmem_budget)
@@ -161,6 +162,20 @@ class _PagedBase:
             with_stats=True)
         self.dev_keys = jnp.asarray(self.keys)
         self.dev_vals = jnp.asarray(self.vals)
+        # specialized twin (DESIGN.md §10): the freshly-derived key pages
+        # baked in as compile-time constants. Re-built ONLY here — at the
+        # geometrically-rare derive boundary — so the specialized posture
+        # never retraces on the insert hot path. Any scatter that replaces
+        # dev_keys/dev_vals between derives (page-local merge, dirty-row
+        # sync) invalidates the consumer (MutableIndex._spec_fused) because
+        # the donated old buffers are exactly the ones this closure holds.
+        self.pipeline_spec = None
+        if getattr(self, "specialize", False):
+            self.pipeline_spec = tiered._make_pipeline(
+                page_of_raw, num_pages=P, stride=self.lw_pad,
+                tile=self.tile, clip=P * self.lw_pad - 1,
+                interpret=self.interpret, with_stats=True,
+                const_pages=self.dev_keys)
         self.derives += 1
 
     # ---------------------------------------------------------------- merge
@@ -279,7 +294,8 @@ class _PagedBase:
     @classmethod
     def from_state(cls, st: dict, *, top: str = "auto",
                    vmem_budget: Optional[int] = None,
-                   interpret: bool = True) -> "_PagedBase":
+                   interpret: bool = True,
+                   specialize: bool = False) -> "_PagedBase":
         """Adopt snapshot arrays directly (no sort, no chunking) and
         re-derive the compiled top — the restore path's O(pages) build."""
         from ..kernels import ops
@@ -293,6 +309,7 @@ class _PagedBase:
         self.top_cfg = top
         self.vmem_budget = vmem_budget or ops.VMEM_BUDGET_BYTES
         self.interpret = interpret
+        self.specialize = bool(specialize)
         self.lw_pad = keys.shape[1]
         self.keys = keys
         self.vals = np.array(st["vals"], np.int32)
@@ -371,8 +388,9 @@ class MutableIndex:
     def _build_base(self, ks: np.ndarray, vs: np.ndarray):
         c = self.config
         if c.kind == "tiered":
-            self.base = _PagedBase(ks, vs, leaf_width=c.leaf_width,
-                                   tile=c.tile, top=c.top)
+            self.base = _PagedBase(
+                ks, vs, leaf_width=c.leaf_width, tile=c.tile, top=c.top,
+                specialize=bool(getattr(c, "specialize", False)))
             self.stats["top_derives"] = self.base.derives
         else:
             from ..core.api import build_index
@@ -388,8 +406,17 @@ class MutableIndex:
         the sealed tier is consulted, sealed before the base — and a
         tombstone anywhere reads as not-found. ``plan_steps`` is the
         executed device plan's traced step count under a paged base (the
-        queue's occupancy feedback signal) and None otherwise."""
+        queue's occupancy feedback signal) and None otherwise.
+
+        Also (re-)arms ``self._spec_fused``: the specialized twin of the
+        paged-base lookup with the leaf pages closed over as compile-time
+        constants. Armed only here — and _make_lookup is called exactly at
+        the derive boundaries (build, split/repack, base rebuild, restore)
+        — so inserts between derives never retrace it; any scatter that
+        replaces the captured device buffers sets it back to None and the
+        store falls back to the data-as-jit-args posture."""
         probe_full = _delta.probe_full
+        self._spec_fused = None
 
         def overlay(q, bfound, bval, tiers):
             # tiers newest-first: [(dk, dv, dtb, dsp), ...]
@@ -423,6 +450,23 @@ class MutableIndex:
                                      [(ak, av, atb, asp),
                                       (sk, sv, stb, ssp)])
                 return addr, found, val, steps
+            spec_pipe = getattr(self.base, "pipeline_spec", None)
+            if spec_pipe is not None:
+                pages_c = self.base.dev_keys
+                vpages_c = self.base.dev_vals
+
+                def fused_spec(q, ak, av, atb, asp, sk, sv, stb, ssp):
+                    addr, steps = spec_pipe(q)
+                    bval = jnp.take(vpages_c.reshape(-1), addr, axis=0,
+                                    mode="clip")
+                    bfound = (jnp.take(pages_c.reshape(-1), addr, axis=0,
+                                       mode="clip") == q) & \
+                        (bval != TOMBSTONE)
+                    found, val = overlay(q, bfound, bval,
+                                         [(ak, av, atb, asp),
+                                          (sk, sv, stb, ssp)])
+                    return addr, found, val, steps
+                self._spec_fused = jax.jit(fused_spec)
             return jax.jit(fused)
         base = self.base                       # core Index: traceable facade
         def fused(q, ak, av, atb, asp, sk, sv, stb, ssp):
@@ -572,8 +616,13 @@ class MutableIndex:
                 self._dirty_rows.clear()
                 self.stats["splits"] += info["splits"]
                 self._fused = self._make_lookup()
-            # page-local merge: pipeline unchanged, keep the compiled
-            # fused lookup (rows flow in as arguments)
+            else:
+                # page-local merge: pipeline unchanged, keep the compiled
+                # fused lookup (rows flow in as arguments) — but the row
+                # scatter donated the device buffers the specialized twin
+                # captured as constants, so it is dead until the next
+                # derive re-arms it
+                self._spec_fused = None
             return
         # wholesale (non-tiered base): rebuild with upserts + removals
         bk, bv = self._flat
@@ -656,8 +705,12 @@ class MutableIndex:
             # the dispatch is staged (async), so observing it adds no sync
             t0 = time.perf_counter()
             if isinstance(self.base, _PagedBase):
-                rank, found, vals, steps = self._fused(
-                    q, self.base.dev_keys, self.base.dev_vals, *tiers)
+                spec = getattr(self, "_spec_fused", None)
+                if spec is not None:
+                    rank, found, vals, steps = spec(q, *tiers)
+                else:
+                    rank, found, vals, steps = self._fused(
+                        q, self.base.dev_keys, self.base.dev_vals, *tiers)
                 self._last_plan = (int(q.shape[0]), steps, self.base.tile,
                                    self.base.num_pages)
             else:
@@ -719,6 +772,10 @@ class MutableIndex:
                         base.dev_keys, base.dev_vals, jnp.asarray(idx_p),
                         jnp.asarray(base.keys[idx_p]),
                         jnp.asarray(base.vals[idx_p]))
+                    # the donated scatter just deleted the buffers the
+                    # specialized lookup closed over — args posture until
+                    # the next derive
+                    self._spec_fused = None
                     self._dirty_rows.clear()
                 aux = _scan.build_page_aux(base.cnt, base.vals, np.int32,
                                            mask_value=TOMBSTONE)
@@ -942,6 +999,10 @@ class MutableIndex:
             if old is not None:
                 seq = old.seq
                 old.close()
+                # the rotated segment is immutable from here on: collapse
+                # each key's overwrite chain to its last writer before the
+                # segment settles into the replay set
+                _jr.compact_segment(old.path)
             self._journal = _jr.Journal(_jr.segment_path(ckpt_dir, step),
                                         self._key_dtype, next_seq=seq,
                                         fsync=self._fsync_policy())
@@ -990,7 +1051,8 @@ class MutableIndex:
             self._key_dtype = self.delta.dtype
             if "base/keys" in raw:
                 self.base = _PagedBase.from_state(
-                    sub("base"), top=getattr(config, "top", "auto"))
+                    sub("base"), top=getattr(config, "top", "auto"),
+                    specialize=bool(getattr(config, "specialize", False)))
                 self.stats["top_derives"] = self.base.derives
             elif "flat/keys" in raw:
                 self._build_base(np.asarray(raw["flat/keys"]),

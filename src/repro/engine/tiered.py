@@ -42,8 +42,8 @@ from ..obs import get_registry, span as _span
 from ..kernels import ops
 from ..kernels import kary_search as _kary
 from ..kernels import page_search as _page
-from .schedule import (BucketPlan, bucket_plan, device_plan, ladder_grid,
-                       run_scheduled)
+from .schedule import (BucketPlan, bucket_plan, device_plan, ladder_for,
+                       ladder_grid, run_scheduled)
 
 # Tops at or below this page count compile to a NitroGen constant network;
 # larger tops use the k-ary VMEM kernel (trace cost of the constant network
@@ -88,6 +88,9 @@ class TieredIndex:
     donate: bool = True          # search_fused donates its query buffer
     plan: str = "device"         # default schedule placement
     interpret: bool = True
+    specialize: bool = False     # leaf pages baked into the executable
+    search_spec: Any = None      # jitted pipeline closing over the pages
+    #                              (None unless built with specialize=True)
 
     @property
     def tree_bytes(self) -> int:
@@ -129,11 +132,23 @@ def _make_page_of_raw(top_kind: str, top, num_pages: int, *, lane: int,
 def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
                    tile: int, clip: int, interpret: bool,
                    plan_method: str | None = None,
-                   with_stats: bool = False) -> Callable:
+                   with_stats: bool = False,
+                   const_pages: Any = None) -> Callable:
     """The single-dispatch pipeline (DESIGN.md §4) as a plain traceable fn:
     top descent -> device plan at the static worst-case grid -> rung-selected
-    page kernel -> un-permute. `pages` is passed (not closed over) so the
-    leaf storage is not baked into the executable.
+    page kernel -> un-permute. By default `pages` is passed (not closed
+    over) so the leaf storage is not baked into the executable — the
+    data-as-jit-args posture that lets the mutable store swap rows without
+    retracing.
+
+    ``const_pages`` flips that contract (DESIGN.md §10, the NitroGen
+    specialization mode): pass the device leaf array and the returned
+    pipeline takes only ``(q,)``, with the leaf storage, the compiled top
+    (already closed over via ``page_of_raw``), and the layout constants
+    (tile, stride, page count, and the rung ladder — computed here once
+    per batch shape via ``schedule.ladder_for`` instead of re-derived
+    inside the scheduler) all baked into the executable as compile-time
+    constants.
 
     ``stride`` is the per-page rank base fed to the page kernel: the dense
     engine uses ``leaf_width`` (ranks are global searchsorted positions);
@@ -143,10 +158,11 @@ def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
 
     ``plan_method`` picks the device-plan construction (None = static
     per-(Q, num_pages) selection, DESIGN.md §2.1 — deep batches over few
-    pages get the O(Q+P) histogram plan, everything else the packed sort).
-    ``with_stats=True`` additionally returns the plan's traced step count,
-    the executed-occupancy feedback the micro-batch queue consumes — still
-    one dispatch, no extra sync."""
+    pages get the O(Q+P) histogram plan, everything else the packed sort;
+    the thresholds are the autotuner's ``schedule.set_plan_thresholds``
+    knob). ``with_stats=True`` additionally returns the plan's traced step
+    count, the executed-occupancy feedback the micro-batch queue consumes
+    — still one dispatch, no extra sync."""
 
     def pipeline(q, pages):
         # named_scope markers are trace-time only (zero runtime cost):
@@ -155,7 +171,7 @@ def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
         with jax.named_scope("tiered/top_descent"):
             pids = page_of_raw(q)
         with jax.named_scope("tiered/device_plan"):
-            g_cap = ladder_grid(q_n, tile, num_pages)
+            g_cap, rungs = ladder_for(q_n, tile, num_pages)
             plan = device_plan(pids, tile, g_cap, num_pages,
                                method=plan_method)
 
@@ -165,11 +181,18 @@ def _make_pipeline(page_of_raw: Callable, *, num_pages: int, stride: int,
                 interpret=interpret)
 
         with jax.named_scope("tiered/page_kernel"):
-            out = run_scheduled(plan, q, q_n, tile, g_cap, body)
+            out = run_scheduled(plan, q, q_n, tile, g_cap, body,
+                                rungs=rungs)
         out = jnp.minimum(out, clip)
         return (out, plan.steps_used) if with_stats else out
 
-    return pipeline
+    if const_pages is None:
+        return pipeline
+
+    def pipeline_spec(q):
+        return pipeline(q, const_pages)
+
+    return pipeline_spec
 
 
 def build_top(seps: np.ndarray, *, top: str = "auto",
@@ -207,7 +230,7 @@ def build_top(seps: np.ndarray, *, top: str = "auto",
 def build(keys, *, leaf_width: int | None = None, tile: int = 128,
           top: str = "auto", plan: str = "device",
           vmem_budget: int = ops.VMEM_BUDGET_BYTES,
-          interpret: bool = True) -> TieredIndex:
+          interpret: bool = True, specialize: bool = False) -> TieredIndex:
     if plan not in PLAN_MODES:
         raise ValueError(f"unknown plan mode {plan!r}; "
                          f"want one of {PLAN_MODES}")
@@ -228,15 +251,31 @@ def build(keys, *, leaf_width: int | None = None, tile: int = 128,
     pipeline = _make_pipeline(page_of_raw, num_pages=num_pages, stride=lw,
                               tile=int(tile), clip=n, interpret=interpret)
     donate = srt.dtype == np.int32
+    pages_dev = jnp.asarray(pages)
+    search_spec = None
+    if specialize:
+        # specialization mode (DESIGN.md §10): the SAME traceable pipeline,
+        # re-staged with the device leaf array closed over — the jitted
+        # variant takes only the query batch, so the index data rides the
+        # executable (NitroGen's compile-the-index-into-code, jax-style).
+        # The frozen index never mutates, so the constant can never go
+        # stale; the mutable store's re-specialization discipline lives in
+        # engine/store.py.
+        spec_pipe = _make_pipeline(
+            page_of_raw, num_pages=num_pages, stride=lw, tile=int(tile),
+            clip=n, interpret=interpret, const_pages=pages_dev)
+        search_spec = functools.partial(
+            jax.jit, donate_argnums=(0,) if donate else ())(spec_pipe)
     return TieredIndex(
-        pages=jnp.asarray(pages),
+        pages=pages_dev,
         seps=jnp.asarray(seps), n=n, leaf_width=lw, lw_pad=lw_pad,
         num_pages=num_pages, tile=int(tile), top_kind=top_kind, top=top_idx,
         page_of=jax.jit(page_of_raw), page_of_raw=page_of_raw,
         search_raw=pipeline,
         search_fused=functools.partial(
             jax.jit, donate_argnums=(0,) if donate else ())(pipeline),
-        donate=donate, plan=plan, interpret=interpret)
+        donate=donate, plan=plan, interpret=interpret,
+        specialize=specialize, search_spec=search_spec)
 
 
 @functools.partial(jax.jit, static_argnames=("leaf_width", "n", "interpret"))
@@ -292,10 +331,15 @@ def search(index: TieredIndex, queries, *, plan: str | None = None
         # (no copy needed when the pipeline was built without donation)
         q = jnp.copy(q)
     # dispatch-boundary timer (the obs-smoke overhead gate's subject):
-    # search_fused returns once the dispatch is staged — no sync added
+    # search_fused returns once the dispatch is staged — no sync added.
+    # A specialized index (search_spec) dispatches on the query alone:
+    # the leaf pages live inside the executable, not the argument list.
     with _span("tiered.search", n=int(q.shape[0])):
         t0 = time.perf_counter()
-        out = index.search_fused(q, index.pages)
+        if index.search_spec is not None:
+            out = index.search_spec(q)
+        else:
+            out = index.search_fused(q, index.pages)
         reg = get_registry()
         reg.histogram("engine_op_seconds", path="search").observe(
             time.perf_counter() - t0)

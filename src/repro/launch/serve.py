@@ -81,6 +81,15 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="record host tracing spans for the whole run and "
                          "dump Chrome/Perfetto trace_event JSON to FILE")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the platform autotuner micro-sweep first "
+                         "(repro.tune), persist the tuned profile, then "
+                         "serve with it")
+    ap.add_argument("--tuned-profile", default=None, metavar="PLATFORM",
+                    help="serve with the persisted tuned profile for "
+                         "PLATFORM ('auto' = current jax backend); "
+                         "tile/leaf_width/queue knobs and specialize come "
+                         "from the profile, CLI queue flags still win")
     args = ap.parse_args()
     if args.restore and not args.ckpt_dir:
         ap.error("--restore requires --ckpt-dir")
@@ -108,18 +117,44 @@ def main():
     print(f"arch={args.arch} params={T.param_count(params)/1e6:.1f}M "
           f"prefix-index={args.index}")
 
+    if args.tune:
+        from ..tune import autotune
+        prof, ppath = autotune(smoke=True)
+        print(f"autotuned: {prof.knobs} -> {ppath}")
+        if args.tuned_profile is None:
+            args.tuned_profile = prof.platform
+    index_kwargs = dict(kind=args.index, levels=2,
+                        compiled_node_width=3,
+                        mutable=not args.wholesale,
+                        queue_capacity=args.queue_capacity,
+                        queue_deadline_s=args.queue_deadline_us * 1e-6,
+                        queue_adapt=not args.no_queue_adapt,
+                        queue_max_share=args.queue_max_share,
+                        queue_adaptive_deadline=not args.no_adaptive_deadline,
+                        journal_fsync=args.fsync)
+    if args.tuned_profile is not None:
+        platform = None if args.tuned_profile == "auto" else \
+            args.tuned_profile
+        if args.index == "tiered":
+            index_config = IndexConfig.from_tuned(platform, **index_kwargs)
+        else:
+            # non-tiered prefix index: only the kind-agnostic knobs apply
+            from ..tune.profile import load_profile
+            prof = load_profile(platform)
+            kw = {k: v for k, v in prof.config_kwargs().items()
+                  if k in ("queue_min_flush", "queue_deadline_s",
+                           "specialize")}
+            prof.apply_thresholds()
+            index_config = IndexConfig(**dict(kw, **index_kwargs))
+        print(f"tuned profile: tile={index_config.tile} "
+              f"leaf_width={index_config.leaf_width} "
+              f"specialize={index_config.specialize}")
+    else:
+        index_config = IndexConfig(**index_kwargs)
+
     eng = ServeEngine(
         cfg, params, max_len=args.max_len, page_size=args.page_size,
-        index_config=IndexConfig(kind=args.index, levels=2,
-                                 compiled_node_width=3,
-                                 mutable=not args.wholesale,
-                                 queue_capacity=args.queue_capacity,
-                                 queue_deadline_s=args.queue_deadline_us * 1e-6,
-                                 queue_adapt=not args.no_queue_adapt,
-                                 queue_max_share=args.queue_max_share,
-                                 queue_adaptive_deadline=
-                                 not args.no_adaptive_deadline,
-                                 journal_fsync=args.fsync),
+        index_config=index_config,
         decode_batching=not args.no_decode_queue,
         sampler=SamplerConfig(temperature=args.temperature, top_p=args.top_p))
     restore_s = None

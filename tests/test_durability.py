@@ -199,3 +199,74 @@ def test_journal_segment_roundtrip_and_torn_tail(tmp_path):
     _, recs2 = jr.read_segment(p)
     assert len(recs2) == 2 and os.path.getsize(p) == jr.HEADER.size \
         + 2 * jr.RECORD.size
+
+
+# ------------------------------------------------------- segment compaction
+def test_compact_segment_keeps_last_writer_per_key(tmp_path):
+    """Unit contract: N overwrites of a key collapse to the final record
+    (a final tombstone survives as a tombstone), surviving records keep
+    their monotone seqs, and an already-minimal segment is untouched."""
+    p = str(tmp_path / "journal_00000000.log")
+    j = jr.Journal(p, np.dtype(np.int32))
+    for r in range(5):
+        j.append(10, r)                  # overwritten 4x
+    j.append(20, 7)
+    j.append(30, 1)
+    j.append(30, -1, delete=True)        # final writer is the tombstone
+    j.close()
+    assert jr.compact_segment(p) == 5    # 8 records -> 3
+    dtype, recs = jr.read_segment(p)
+    assert [(r[1], r[2], r[3]) for r in recs] == [
+        (jr.OP_INSERT, 10, 4), (jr.OP_INSERT, 20, 7),
+        (jr.OP_DELETE, 30, -1)]
+    seqs = [r[0] for r in recs]
+    assert seqs == sorted(seqs)
+    assert jr.compact_segment(p) == 0    # idempotent / minimal untouched
+    assert os.path.getsize(p) == jr.HEADER.size + 3 * jr.RECORD.size
+
+
+def test_rotation_compacts_upsert_heavy_segment(tmp_path):
+    """An upsert-heavy workload journals far more records than it has
+    keys; rotation compacts the closed segment to last-writer-per-key,
+    and a restore that degrades to the previous snapshot replays the
+    COMPACTED segment bit-identically to the live store."""
+    from repro.obs import Registry, use_registry
+
+    d = str(tmp_path / "ck")
+    rng = np.random.default_rng(17)
+    init = np.sort(rng.choice(1 << 16, 100, replace=False)).astype(np.int32)
+    hot = (np.arange(8, dtype=np.int32) + (1 << 18))
+    with use_registry(Registry()) as reg:
+        idx = build_index(init, np.arange(100, dtype=np.int32),
+                          _cfg(d, capacity=16))
+        idx.save()                                   # step 1
+        for r in range(1, 11):                       # 10 overwrites per key
+            idx.insert(hot, np.full(8, r, np.int32))
+        idx.delete(hot[:2])                          # final writers: tombs
+        idx.save()                                   # step 2: compacts seg 1
+        assert reg.total("journal_compactions") == 1
+        # 80 upserts + 2 deletes on 8 keys -> 74 dropped
+        assert reg.total("journal_compacted_records") == 74
+    seg1 = jr.segment_path(d, 1)
+    _, recs = jr.read_segment(seg1)
+    assert len(recs) == 8                            # one per key
+    seqs = [r[0] for r in recs]
+    assert seqs == sorted(seqs)
+    by_key = {k: (op, v) for _, op, k, v in recs}
+    for k in hot[:2]:
+        assert by_key[int(k)][0] == jr.OP_DELETE
+    for k in hot[2:]:
+        assert by_key[int(k)] == (jr.OP_INSERT, 10)
+
+    probe = np.concatenate([init[::5], hot])
+    want = _snapshot_results(idx, probe)
+    idx.close()
+    # degrade the newest snapshot: restore falls back to step 1 and must
+    # rebuild the hot keys' final state from the compacted segment alone
+    _flip_byte(os.path.join(d, "step_00000002", "arrays.host0.npz"))
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        got = restore_index(d, _cfg())
+    assert got.stats["journal_replayed"] == 8        # compacted, not 82
+    _assert_same(want, _snapshot_results(got, probe))
+    got.close()
