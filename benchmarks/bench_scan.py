@@ -37,7 +37,22 @@ which partition the sweep by where each posture's win structurally lives:
   O(Q) — structurally, via ``jax.eval_shape`` — while the baseline's
   gather buffer grows with the match count.
 
-Run: ``PYTHONPATH=src python -m benchmarks.bench_scan [--full] [--out F]``
+``--groups`` sweeps the grouped-analytics subsystem (DESIGN.md §8.3):
+``scan_groups`` — all G buckets in ONE fused dispatch — against the
+pre-subsystem posture of G independent ``scan_range`` dispatches over the
+per-bucket sub-ranges, across group count (1..4096; the linear-in-G
+baseline loop is measured up to G=256, larger G report the fused posture
+only, at a batch scaled down to hold the Q*(G+1) lane count constant —
+interpret-mode kernels walk the grid in Python) x selectivity,
+cross-checked cell-by-cell against both the stacked per-bucket scans and
+numpy.
+``--groups-smoke`` runs the small sweep and asserts the trend gate (the
+CI ``scan-groups-smoke`` job): the fused grouped dispatch must win at
+every G >= 8 (below that the G-dispatch overhead may not dominate;
+reported ungated). Emits ``BENCH_scan_groups.json``.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_scan [--full] [--groups]
+[--out F]``
 """
 from __future__ import annotations
 
@@ -58,6 +73,20 @@ SELECTIVITIES = (1e-5, 1e-4, 1e-3, 1e-2, 0.1, 0.5)
 COUNT_GATE_MAX_SEL = 0.1
 SUM_GATE_MIN_SEL = 0.01
 MAT_K = 64
+
+GROUP_COUNTS = (4, 8, 16, 64)
+GROUP_COUNTS_FULL = (1, 4, 8, 16, 64, 256, 1024, 4096)
+GROUP_SELECTIVITIES = (1e-3, 1e-2, 0.1)
+GROUPS_GATE_MIN_G = 8
+# the per-range-loop baseline costs G dispatches — linear in G; above
+# this it would dominate the sweep's wall time for no extra signal, so
+# larger G report the fused posture only (ungated)
+GROUPS_BASELINE_MAX_G = 256
+# above this G the full sweep scales the batch down to hold the lane
+# count Q*(G+1) roughly constant — interpret-mode kernels walk the
+# (G+1,)-grid in Python, so full-batch G=4096 cells are wall-clock
+# infeasible on CI while the structural comparison is unchanged
+GROUPS_FULL_BATCH_MAX_G = 256
 
 INT_MIN, INT_MAX = np.iinfo(np.int32).min, np.iinfo(np.int32).max
 
@@ -266,19 +295,154 @@ def _assert_scan_trend(payload: dict, deep_batch: int):
           f"{big['baseline_gathered_elems']} at sel={big['selectivity']:g}")
 
 
+def run_groups_cell(idx, ks: np.ndarray, vs: np.ndarray, sel: float,
+                    batch: int, num_groups: int, seed: int,
+                    warmup: int = 2, iters: int = 9) -> dict:
+    """One (G, selectivity) cell: ``scan_groups`` (ONE fused dispatch for
+    all G buckets) vs the pre-subsystem posture — G independent
+    ``scan_range`` dispatches over the per-bucket sub-ranges."""
+    from repro.engine import groupby as _gb
+    G = num_groups
+    lo_h, hi_h, w = make_ranges(ks, sel, batch, seed)
+    lo, hi = jnp.asarray(lo_h), jnp.asarray(hi_h)
+
+    def grouped():
+        g = idx.scan_groups(lo, hi, G, aggs=("count", "sum"))
+        jax.block_until_ready((g.count, g.vsum))
+
+    grouped_us = time_min(grouped, warmup=warmup, iters=iters)
+
+    # numpy cross-check over the bit-identical host edge twin
+    e = _gb.group_edges_host(lo_h, hi_h, G)
+    g = idx.scan_groups(lo, hi, G, aggs=("count", "sum"))
+    re = np.searchsorted(ks, e, "left")
+    assert np.array_equal(np.asarray(g.count), np.diff(re, axis=1))
+
+    base_us = None
+    if G <= GROUPS_BASELINE_MAX_G:
+        # the per-range loop baseline scans bucket j's inclusive
+        # sub-range [e_j, e_{j+1} - 1]; bounds pre-staged so the loop
+        # times dispatches, not uploads
+        blo = [jnp.asarray(e[:, j]) for j in range(G)]
+        bhi = [jnp.asarray(e[:, j + 1] - 1) for j in range(G)]
+
+        def baseline():
+            outs = [idx.scan_range(blo[j], bhi[j], aggs=("count", "sum"))
+                    for j in range(G)]
+            jax.block_until_ready([(r.count, r.vsum) for r in outs])
+
+        base_us = time_min(baseline, warmup=warmup, iters=iters)
+        per = [idx.scan_range(blo[j], bhi[j], aggs=("count", "sum"))
+               for j in range(G)]
+        assert np.array_equal(
+            np.asarray(g.count),
+            np.stack([np.asarray(r.count) for r in per], 1))
+        assert np.array_equal(
+            np.asarray(g.vsum),
+            np.stack([np.asarray(r.vsum) for r in per], 1))
+
+    gated = base_us is not None and G >= GROUPS_GATE_MIN_G
+    ok = base_us is None or grouped_us <= base_us
+    rec = {
+        "num_groups": G, "selectivity": sel, "batch": batch,
+        "matches_per_query": w,
+        "grouped_us": round(grouped_us, 1),
+        "baseline_us": None if base_us is None else round(base_us, 1),
+        "speedup": None if base_us is None else
+            round(base_us / max(grouped_us, 1e-9), 3),
+        "gated": gated, "ok": ok,
+    }
+    emit(f"scan_groups/G{G}/sel{sel:g}/b{batch}", grouped_us,
+         "fused-only" if base_us is None else
+         f"base={base_us:.0f}us;x{rec['speedup']}")
+    return rec
+
+
+def run_groups(n: int, batch: int, out: str, assert_trend: bool = False,
+               group_counts=GROUP_COUNTS) -> dict:
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.integers(0, 2**30, int(n * 1.2)).astype(np.int32))
+    keys = keys[:n]
+    vals = rng.integers(-1000, 1000, keys.size).astype(np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind="tiered"))
+    ks = np.sort(keys)
+    vs = vals[np.argsort(keys, kind="stable")]
+    results = []
+    for G in group_counts:
+        cell_batch = batch if G <= GROUPS_FULL_BATCH_MAX_G else \
+            max(batch * GROUPS_FULL_BATCH_MAX_G // G, 32)
+        warmup, iters = (2, 9) if G < 128 else (1, 5)
+        for sel in GROUP_SELECTIVITIES:
+            seed = (G * 17 + int(sel * 1e6)) % 2**31
+            results.append(run_groups_cell(idx, ks, vs, sel, cell_batch,
+                                           G, seed=seed, warmup=warmup,
+                                           iters=iters))
+    payload = {"backend": jax.default_backend(),
+               "interpret_kernels": jax.default_backend() == "cpu",
+               "n": int(keys.size), "batch": batch,
+               "gate_min_groups": GROUPS_GATE_MIN_G,
+               "results": results,
+               "ok": all(r["ok"] for r in results if r["gated"]),
+               "obs": obs.snapshot()}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out} ({len(results)} rows)")
+    if assert_trend:
+        _assert_groups_trend(payload)
+    return payload
+
+
+def _assert_groups_trend(payload: dict):
+    """CI gate (the ``scan-groups-smoke`` job): one fused grouped dispatch
+    must beat G independent ``scan_range`` dispatches at every gated cell
+    (G >= GROUPS_GATE_MIN_G, every swept selectivity). Below the gate the
+    G-dispatch overhead may not dominate yet; those cells report
+    ungated."""
+    for r in payload["results"]:
+        verdict = "ok" if r["ok"] else (
+            "REGRESSION" if r["gated"] else "ungated cell")
+        base = ("fused-only" if r["baseline_us"] is None
+                else f"baseline={r['baseline_us']}us")
+        print(f"# trend groups G={r['num_groups']} "
+              f"sel={r['selectivity']:g}: grouped={r['grouped_us']}us "
+              f"{base} ({verdict})")
+        if r["gated"]:
+            assert r["ok"], (
+                f"fused scan_groups slower than {r['num_groups']} "
+                f"independent scan_range dispatches at selectivity "
+                f"{r['selectivity']}: {r['grouped_us']}us vs "
+                f"{r['baseline_us']}us")
+    assert payload["ok"]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="bigger store + both batch depths")
     ap.add_argument("--smoke", action="store_true",
                     help="small sweep + trend gate (the CI scan-smoke job)")
-    ap.add_argument("--out", default="BENCH_scan.json")
+    ap.add_argument("--groups", action="store_true",
+                    help="grouped-analytics sweep: scan_groups vs G "
+                         "independent scan_range dispatches")
+    ap.add_argument("--groups-smoke", action="store_true",
+                    help="small grouped sweep + trend gate (the CI "
+                         "scan-groups-smoke job)")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.groups or args.groups_smoke:
+        out = args.out or "BENCH_scan_groups.json"
+        if args.groups_smoke:
+            run_groups(n=2**15, batch=512, out=out, assert_trend=True)
+        else:
+            run_groups(n=2**16, batch=1024, out=out, assert_trend=True,
+                       group_counts=GROUP_COUNTS_FULL)
+        return
+    out = args.out or "BENCH_scan.json"
     if args.smoke:
-        run(n=2**15, batches=(2048,), out=args.out, assert_trend=True)
+        run(n=2**15, batches=(2048,), out=out, assert_trend=True)
         return
     n = 2**17 if args.full else 2**16
-    run(n=n, batches=(256, 4096), out=args.out, assert_trend=True)
+    run(n=n, batches=(256, 4096), out=out, assert_trend=True)
 
 
 if __name__ == "__main__":

@@ -47,6 +47,15 @@ def _summarize(name: str, data: dict) -> dict:
         s["best_ratio"] = min(c["ratio"] for c in cells)
         s["ok"] = all(c.get("ok") for c in cells) \
             and bool(data.get("verify", {}).get("ok"))
+    if "gate_min_groups" in data:              # scan-groups-smoke gate
+        gated = [r for r in (rows or []) if isinstance(r, dict)
+                 and r.get("gated")]
+        s["groups_gated_ok"] = sum(1 for r in gated if r.get("ok"))
+        s["groups_gated"] = len(gated)
+        if gated:
+            s["best_groups_speedup"] = max(r.get("speedup", 0.0)
+                                           for r in gated)
+        s["ok"] = bool(data.get("ok"))
     if "autotune" in data:
         s["tuned_knobs"] = data["autotune"].get("knobs")
     return s

@@ -112,3 +112,34 @@ print("first ranks of range 0:", np.asarray(m.ranks[0]).tolist(),
 rm = m_idx.scan_range(lo[:64], hi[:64])
 assert int(np.asarray(rm.count).sum()) >= 0     # exact merged counts
 print("mutable store answers ranges delta-aware — OK")
+
+# grouped analytics (DESIGN.md §8.3): GROUP BY bucket(order_id) — each
+# range splits into equal-width id buckets, per-bucket revenue histogram
+# in the same single fused dispatch (count/sum ride the edge-prefix
+# pipeline; interior pages are never scanned)
+G = 16
+g = t_idx.scan_groups(lo[:32], hi[:32], G, aggs=("count", "sum"))
+q = int(np.argmax(np.asarray(g.count).sum(axis=1)))
+row_c = np.asarray(g.count[q]); row_s = np.asarray(g.vsum[q])
+a, b = np.searchsorted(ks, lo[q]), np.searchsorted(ks, hi[q], "right")
+assert int(row_c.sum()) == b - a                 # buckets tile the range
+assert int(row_s.sum(dtype=np.int32)) == int(vs[a:b].sum(dtype=np.int32))
+peak = int(np.argmax(row_c))
+print(f"\nGROUP BY bucket(order_id) x{G} over range {q}: "
+      f"{int(row_c.sum()):,} orders, busiest bucket #{peak} -> "
+      f"{int(row_c[peak]):,} orders / {int(row_s[peak]):,} cents")
+
+# per-bucket top-K: the K largest revenue values inside every bucket,
+# compacted on device (overflow flags buckets wider than `candidates`)
+tk = t_idx.scan_groups(lo[:4], hi[:4], 8, top_k=3, candidates=64)
+busiest = int(np.argmax(np.asarray(tk.count[0])))
+print(f"top-3 revenue in busiest bucket of range 0:",
+      np.asarray(tk.topk_values[0, busiest]).tolist())
+
+# composite predicates: revenue across an IN-list of disjoint id ranges
+# (union) — one dispatch, not R scan_range calls
+R = 4
+mlo = rng.integers(1, 2**31 - 2 - span, (8, R)).astype(np.int32)
+ranges = np.stack([mlo, mlo + span // 4], axis=-1)       # [Q, R, 2]
+u = t_idx.scan_multi(ranges, op="union")
+print(f"IN-list of {R} ranges (union): counts {np.asarray(u.count).tolist()}")

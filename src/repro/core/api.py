@@ -8,6 +8,7 @@ the interface the paper-figure benchmarks drive.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -237,6 +238,123 @@ class Index:
         return _scan.ScanResult(count=cnt, r_lo=r_lo, r_hi_excl=r_hi_excl,
                                 vsum=vsum, vmin=vmin, vmax=vmax,
                                 ranks=ranks, values=vals, overflow=over)
+
+    def _flat_agg(self):
+        fa = getattr(self, "_flat_aggregator", None)
+        if fa is None:
+            from ..engine import scan as _scan
+            fa = _scan.FlatAggregator(np.asarray(self.values_sorted))
+            object.__setattr__(self, "_flat_aggregator", fa)
+        return fa
+
+    def scan_groups(self, lo, hi, num_groups, *, aggs=None,
+                    top_k: Optional[int] = None,
+                    candidates: Optional[int] = None):
+        """Grouped range analytics (DESIGN.md §8.3): each ``(lo, hi)``
+        range splits into ``num_groups`` equal-width key buckets with
+        per-bucket count / sum / min / max pushdown (``aggs`` caps the
+        depth) and optional per-bucket ``top_k`` values (``candidates``
+        bounds the materialized window per bucket). ``kind='tiered'``
+        answers in ONE fused dispatch — count/sum ride a (G+1)-edge
+        prefix pipeline that never scans interior pages; other kinds
+        fall back to G+1 searches + O(1) rank-interval aggregates.
+        Returns ``engine.groupby.GroupScanResult``."""
+        from ..engine import scan as _scan
+        from ..engine import groupby as _gb
+        if self.config.kind == "tiered":
+            return _scan.scanner_for(self.impl, self.values_sorted) \
+                .scan_groups(lo, hi, num_groups, aggs=aggs, top_k=top_k,
+                             candidates=candidates)
+        mode = _scan.mode_for_aggs(aggs)
+        kd = np.dtype(self.keys_sorted.dtype)
+        lo = jnp.asarray(lo, kd)
+        hi = jnp.asarray(hi, kd)
+        G = int(num_groups)
+        if not 1 <= G <= _gb.MAX_GROUPS:
+            raise ValueError(f"num_groups must be in [1, {_gb.MAX_GROUPS}]"
+                             f", got {num_groups}")
+        K = C = None
+        if top_k is not None:
+            K = int(top_k)
+            if K < 1:
+                raise ValueError(f"top_k must be positive, got {top_k}")
+            if self.values_sorted is None:
+                raise ValueError("top_k needs an index built with values")
+            C = max(int(candidates) if candidates is not None
+                    else max(2 * K, 32), K)
+        # the bucket edges are searchsorted-left probes by construction
+        # (bucket g = [e_g, e_{g+1})), so G+1 point searches give every
+        # r_edge; counts and aggregates are adjacent-edge differences
+        edges = _gb.group_edges(lo, hi, G, kd)
+        r_edge = self.search(edges.reshape(-1)).astype(jnp.int32) \
+            .reshape(-1, G + 1)
+        cnt = jnp.diff(r_edge, axis=1)
+        vsum = vmin = vmax = None
+        if mode != "count" and self.values_sorted is not None:
+            fa = self._flat_agg()
+            if fa.ok:
+                vs, mn, mx = fa(r_edge[:, :-1].reshape(-1),
+                                r_edge[:, 1:].reshape(-1))
+                vsum = vs.reshape(-1, G)
+                if mode == "full":
+                    vmin = mn.reshape(-1, G)
+                    vmax = mx.reshape(-1, G)
+        res = _gb.GroupScanResult(count=cnt, edges=edges, r_edge=r_edge,
+                                  vsum=vsum, vmin=vmin, vmax=vmax)
+        if K is None:
+            return res
+        ranks, vals, over = _scan.materialize_interval(
+            r_edge[:, :-1].reshape(-1), cnt.reshape(-1),
+            self.values_sorted, K=C)
+        topv, topr = _gb.masked_topk(vals, ranks, cnt.reshape(-1), K)
+        return dataclasses.replace(
+            res, topk_values=topv.reshape(-1, G, K),
+            topk_ranks=topr.reshape(-1, G, K),
+            overflow=over.reshape(-1, G))
+
+    def scan_multi(self, ranges, *, op: str = "union", aggs=None):
+        """Composite multi-range predicates: ``ranges`` is [Q, R, 2]
+        inclusive (lo, hi) pairs per query, combined as a union (IN-list
+        of ranges) or intersection (conjunctive predicate). The
+        coverage-count decomposition canonicalizes each predicate into
+        at most R disjoint ranges; ``kind='tiered'`` aggregates them in
+        ONE fused dispatch, other kinds fall back to the rank-interval
+        machinery. Returns ``engine.scan.ScanResult`` whose
+        r_lo/r_hi_excl are the rank hull of the matching set."""
+        from ..engine import scan as _scan
+        from ..engine import groupby as _gb
+        if self.config.kind == "tiered":
+            return _scan.scanner_for(self.impl, self.values_sorted) \
+                .scan_multi(ranges, op=op, aggs=aggs)
+        if op not in _gb.MULTI_OPS:
+            raise ValueError(f"unknown multi-range op {op!r}; "
+                             f"want one of {_gb.MULTI_OPS}")
+        kd = np.dtype(self.keys_sorted.dtype)
+        r = jnp.asarray(ranges, kd)
+        if r.ndim != 3 or r.shape[-1] != 2:
+            raise ValueError(f"ranges must be [Q, R, 2], got {r.shape}")
+        R = int(r.shape[1])
+        if R < 1:
+            raise ValueError("ranges needs at least one range per query")
+        mode = _scan.mode_for_aggs(aggs)
+        slo, shi = _gb.coverage_ranges(r[..., 0], r[..., 1], op=op,
+                                       key_dtype=kd)
+        r_lo, r_hi, cnt = self.search_range(slo.reshape(-1),
+                                            shi.reshape(-1))
+        r_lo = r_lo.astype(jnp.int32)
+        r_hi = r_hi.astype(jnp.int32)
+        cnt = cnt.astype(jnp.int32)
+        vs = mn = mx = None
+        mode_eff = "count"
+        if mode != "count" and self.values_sorted is not None:
+            fa = self._flat_agg()
+            if fa.ok:
+                vs, mn, mx = fa(r_lo, r_hi)
+                mode_eff = mode
+        count, vsum, vmin, vmax, hlo, hhi = _gb._multi_reduce(
+            R, mode_eff, cnt, vs, mn, mx, r_lo, r_hi)
+        return _scan.ScanResult(count=count, r_lo=hlo, r_hi_excl=hhi,
+                                vsum=vsum, vmin=vmin, vmax=vmax)
 
     def lookup(self, queries) -> LookupResult:
         q = jnp.asarray(queries)

@@ -134,9 +134,32 @@ class AdmissionPolicy:
         return self._weights.get(tenant, self.default_weight)
 
     def set_weight(self, tenant: Tenant, weight: float):
+        """Live weight reconfiguration. The tenant's carried DRR deficit
+        is rescaled by the weight ratio so accumulated credit keeps its
+        *rounds-of-service* meaning (credit earned at weight w and spent
+        at weight 2w would otherwise be worth half the service it was
+        granted for), then re-clamped to the share cap."""
         if weight <= 0:
             raise ValueError(f"weight must be positive, got {weight}")
+        old = self.weight(tenant)
         self._weights[tenant] = float(weight)
+        if tenant in self._deficit:
+            self._deficit[tenant] = min(
+                self._deficit[tenant] * (float(weight) / old),
+                float(self.cap_queries))
+
+    def set_max_share(self, max_share: float):
+        """Live share-cap reconfiguration: every carried deficit is
+        re-clamped to the new cap immediately, so a cap reduction takes
+        full effect on the very next ``plan()`` (no tenant spends credit
+        hoarded under the old, looser cap)."""
+        if not (0.0 < max_share <= 1.0):
+            raise ValueError(
+                f"max_share must be in (0, 1], got {max_share}")
+        self.max_share = float(max_share)
+        cap = float(self.cap_queries)
+        for t in self._deficit:
+            self._deficit[t] = min(self._deficit[t], cap)
 
     def _rotation(self, pending: Mapping[Tenant, Sequence[int]]
                   ) -> List[Tenant]:

@@ -1,0 +1,504 @@
+"""Grouped & composite analytics subsystem (DESIGN.md §8.3): GROUP BY
+bucket(key) aggregates, per-group top-K, and multi-range set predicates
+(IN-lists as unions, conjunctive predicates as intersections) in the same
+single zero-host-sync fused dispatch the scan subsystem uses.
+
+Three constructions, all trace-time static in shape:
+
+* **Group edges** (:func:`group_edges`) — Q ``(lo, hi)`` ranges each split
+  into ``G`` equal-width buckets by G+1 edge values, computed on device
+  with exact integer semantics (``e_g = min(lo + g * width, succ(hi))``,
+  ``width = floor((hi - lo) / G) + 1``) so a numpy int64 twin is
+  bit-identical; float edges use the same float32 ops as the oracle.
+
+* **Edge-prefix reduction** (:func:`make_edge_prefix`) — count/sum bucket
+  aggregates need only the *prefix* at each edge: one single-ended kernel
+  lane per edge (``kernels.page_scan.page_prefix_bucketed`` — in-page
+  count/masked-sum of keys strictly below the edge) plus the ``ScanAux``
+  prefix arrays gives the global prefix ``cum_cnt[p] + lt`` /
+  ``cum_sum[p] + psum``; bucket aggregates are adjacent-edge differences.
+  That is Q·(G+1) lanes instead of the 2·Q·G a per-bucket span expansion
+  would cost — interior pages still never get scanned. min/max are not
+  prefix-invertible, so "full" mode falls back to the Q·G span expansion
+  through the existing pipeline (sparse tables serve the interiors).
+
+* **Coverage-count composition** (:func:`coverage_ranges`) — an R-range
+  predicate contributes 2R endpoint events per query (``+1`` at lo,
+  ``-1`` at succ(hi); empty ranges are weight-0). A stable value-sort +
+  running coverage count marks the key domain where coverage reaches the
+  op threshold (1 = union, R = intersect); the rise/fall boundaries
+  scatter into at most R disjoint canonical ranges (inert-padded), which
+  flatten through the unchanged span machinery and reduce back per query.
+
+Over the mutable store the same dispatches are delta-aware: the tier
+prefix terms (:func:`_tier_prefix_terms`) apply the shadowed-slot
+duplicate-correction algebra of DESIGN.md §6.3 to each edge's prefix, and
+the composite/full paths reuse ``scan.make_paged_scan_fns`` verbatim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels import page_scan as _pscan
+from ..kernels.page_scan import agg_identities
+from . import scan as _scan
+from .schedule import edge_scan_plan, ladder_grid, run_scheduled_multi
+
+MAX_GROUPS = 65536     # keeps the uint32 edge arithmetic wrap-detectable
+
+
+# ----------------------------------------------------------------- results
+@dataclass(frozen=True)
+class GroupScanResult:
+    """Batched grouped-scan result; [Q, G] per-bucket unless noted.
+
+    count    int32 live matches per bucket (delta-aware over the mutable
+             store)
+    edges    [Q, G+1] the bucket edge values: bucket g covers keys in
+             ``[edges[g], edges[g+1])``; ``edges[0] = lo``,
+             ``edges[G] = succ(hi)``, interior edges
+             ``min(lo + g*width, succ(hi))`` with
+             ``width = floor((hi-lo)/G) + 1`` (floats:
+             ``(hi-lo) * (1/G)``, mantissa-truncated for exact
+             products) — trailing buckets may be empty when the range
+             is narrower than G. An empty query (lo > hi) pins every
+             edge to lo (all buckets empty).
+    r_edge   [Q, G+1] int32 searchsorted-left rank of each edge among the
+             live keys (merged and shadow-corrected over the mutable
+             store) — ``count[g] = r_edge[g+1] - r_edge[g]``.
+    vsum/vmin/vmax  per-bucket pushed-down aggregates (None above the
+             requested depth / on value-less indexes); empty buckets
+             report 0 / dtype-max / dtype-min, int32 sums wrap.
+    topk_values  [Q, G, K] the top-K values per bucket, descending
+             (0 past the bucket's min(count, K)); None unless top_k asked.
+    topk_ranks   [Q, G, K] their locators — global ranks for the
+             immutable index, flat slot addresses for the gapped mutable
+             store (-1 past count).
+    overflow bool [Q, G] — the bucket held more than the candidate
+             capacity, so its top-K was taken over a truncated (first-C
+             by key order) candidate window.
+    """
+    count: jnp.ndarray
+    edges: jnp.ndarray
+    r_edge: jnp.ndarray
+    vsum: Optional[jnp.ndarray] = None
+    vmin: Optional[jnp.ndarray] = None
+    vmax: Optional[jnp.ndarray] = None
+    topk_values: Optional[jnp.ndarray] = None
+    topk_ranks: Optional[jnp.ndarray] = None
+    overflow: Optional[jnp.ndarray] = None
+
+
+MULTI_OPS = ("union", "intersect")
+
+
+# ------------------------------------------------------------- group edges
+def _succ_of(x, kd):
+    if np.issubdtype(kd, np.floating):
+        return jnp.nextafter(x, kd.type(np.inf))
+    return x + 1
+
+
+def _pred_of(x, kd):
+    if np.issubdtype(kd, np.floating):
+        return jnp.nextafter(x, kd.type(-np.inf))
+    return x - 1
+
+
+def _width_drop_bits(G: int, kd) -> int:
+    """Mantissa bits to truncate from a float bucket width so that every
+    product ``g * width`` (g <= G) is EXACT in key precision. An exact
+    product makes ``lo + g * width`` a single rounding whether or not the
+    backend contracts it into an FMA — without this, XLA's fused
+    multiply-add perturbs jitted edges by an ULP relative to the eager /
+    numpy twins and the bit-identical host-oracle contract breaks."""
+    return int(G).bit_length()
+
+
+def _trunc_mantissa(w, drop: int):
+    it = np.int32 if w.dtype == jnp.float32 else np.int64
+    wi = jax.lax.bitcast_convert_type(w, it)
+    return jax.lax.bitcast_convert_type(wi & it(~((1 << drop) - 1)),
+                                        w.dtype)
+
+
+def group_edges(lo, hi, num_groups: int, key_dtype) -> jnp.ndarray:
+    """Traceable [Q, G+1] bucket edges for Q ``(lo, hi)`` ranges.
+
+    Integer keys: exactly ``e_g = min(lo + g * width, hi + 1)`` with
+    ``width = (hi - lo) // G + 1`` — evaluated wrap-free in the unsigned
+    domain (the span ``hi - lo`` always fits) so no 64-bit arithmetic is
+    needed and a numpy int64 twin matches bit-for-bit. Floats:
+    ``e_g = min(lo + g * width, nextafter(hi))`` where ``width`` is
+    ``(hi - lo) * (1/G)`` with its mantissa truncated so ``g * width``
+    is exact (see :func:`_width_drop_bits` — this is what makes the
+    edges bit-identical across eager / jitted / numpy evaluation),
+    endpoints pinned exactly. Empty queries (lo > hi) pin all edges to
+    lo.
+    """
+    G = int(num_groups)
+    kd = np.dtype(key_dtype)
+    empty = (lo > hi)[:, None]
+    if np.issubdtype(kd, np.floating):
+        succ = _succ_of(hi, kd)[:, None]
+        g = jnp.arange(G + 1, dtype=kd)[None, :]
+        # reciprocal multiply, NOT division: XLA strength-reduces
+        # float division by a constant into a reciprocal multiply with
+        # different rounding, so a jitted /G would diverge from the
+        # eager/numpy twins — write the multiply ourselves on all sides
+        width = _trunc_mantissa((hi - lo) * kd.type(1.0 / G),
+                                _width_drop_bits(G, kd))[:, None]
+        e = jnp.minimum(lo[:, None] + g * width, succ)
+        # lo = -inf with an infinite width makes interior edges NaN
+        # (-inf + inf): bucket 0 takes the whole range then
+        e = jnp.where(jnp.isnan(e), succ, e)
+        # endpoints pinned exactly (also kills the 0 * inf NaN when the
+        # span overflows to an infinite width)
+        e = jnp.where(g == 0, lo[:, None], e)
+        e = jnp.where(g == G, succ, e)
+    else:
+        # unsigned-domain exact arithmetic: the span s = hi - lo always
+        # fits the unsigned counterpart, width = s // G + 1, and
+        # off = g * width wraps at most once with a residue < G < width
+        # (G is capped at MAX_GROUPS), so `off < width` detects it
+        lo32 = lo.astype(jnp.int32)
+        hi32 = hi.astype(jnp.int32)
+        lo_u = lo32.astype(jnp.uint32)[:, None]
+        s = (hi32.astype(jnp.uint32) - lo_u[:, 0])[:, None]
+        width = s // jnp.uint32(G) + jnp.uint32(1)
+        g = jnp.arange(G + 1, dtype=jnp.uint32)[None, :]
+        off = g * width
+        wrapped = (g > 0) & (off < width)
+        use_succ = wrapped | (off > s) | (g == G)
+        e = jnp.where(use_succ, (hi32 + 1)[:, None],
+                      (lo_u + off).astype(jnp.int32)).astype(kd)
+    return jnp.where(empty, lo[:, None], e)
+
+
+def group_edges_host(lo, hi, num_groups: int) -> np.ndarray:
+    """Numpy twin of :func:`group_edges` (bit-identical): int64 exact math
+    for integer keys, the same key-precision float ops for floats."""
+    lo = np.asarray(lo)
+    hi = np.asarray(hi)
+    G = int(num_groups)
+    kd = lo.dtype
+    if np.issubdtype(kd, np.floating):
+        succ = np.nextafter(hi, kd.type(np.inf))[:, None]
+        g = np.arange(G + 1, dtype=kd)[None, :]
+        it = np.int32 if kd == np.float32 else np.int64
+        drop = _width_drop_bits(G, kd)
+        width = ((hi - lo) * kd.type(1.0 / G)).view(it)
+        width = (width & it(~((1 << drop) - 1))).view(kd)[:, None]
+        with np.errstate(invalid="ignore"):
+            e = np.minimum(lo[:, None] + g * width, succ)
+            e = np.where(np.isnan(e), succ, e)
+        e[:, 0] = lo
+        e[:, -1] = succ[:, 0]
+        e = e.astype(kd)
+    else:
+        l64 = lo.astype(np.int64)[:, None]
+        s = hi.astype(np.int64)[:, None] - l64
+        width = s // G + 1
+        g = np.arange(G + 1, dtype=np.int64)[None, :]
+        e = np.minimum(l64 + g * width, l64 + s + 1).astype(kd)
+    return np.where((lo > hi)[:, None], lo[:, None], e)
+
+
+# ------------------------------------------------- coverage-count composite
+def coverage_ranges(lo_r, hi_r, *, op: str, key_dtype):
+    """Traceable canonical decomposition of Q R-range predicates into at
+    most R disjoint ascending ranges each ([Q, R] ``slo``/``shi``,
+    inert-padded).
+
+    2R endpoint events per query (+1 at lo, -1 at succ(hi); empty ranges
+    weight 0) are stably sorted by value — starts occupy the lower source
+    columns, so a start at the same value as an end sorts first and
+    touching/adjacent covered segments merge instead of dipping. A running
+    coverage sum marks where at least 1 (union) / all R (intersect) ranges
+    cover the domain; each covered segment's rise scatters its start value
+    and its fall scatters ``pred(value)`` into the j-th output slot. Every
+    rise consumes a distinct +1 event, so at most R segments exist and the
+    scatter never overflows (non-boundary events drop at index R).
+    """
+    if op not in MULTI_OPS:
+        raise ValueError(f"unknown multi-range op {op!r}; "
+                         f"want one of {MULTI_OPS}")
+    kd = np.dtype(key_dtype)
+    _, _, inert_lo, inert_hi = _scan._domain_consts(kd)
+    Qn, R = lo_r.shape
+    emptyr = lo_r > hi_r
+    vals = jnp.concatenate([lo_r, _succ_of(hi_r, kd)], axis=1)
+    one = jnp.ones((), jnp.int32)
+    deltas = jnp.concatenate(
+        [jnp.where(emptyr, 0, one), jnp.where(emptyr, 0, -one)], axis=1)
+    order = jnp.argsort(vals, axis=1, stable=True)
+    sv = jnp.take_along_axis(vals, order, axis=1)
+    sd = jnp.take_along_axis(deltas, order, axis=1)
+    cov = jnp.cumsum(sd, axis=1)
+    thresh = 1 if op == "union" else R
+    covered = cov >= thresh
+    prev = jnp.pad(covered[:, :-1], ((0, 0), (1, 0)))
+    rise = covered & ~prev
+    fall = ~covered & prev
+    qq = jnp.broadcast_to(jnp.arange(Qn, dtype=jnp.int32)[:, None],
+                          (Qn, 2 * R))
+    ridx = jnp.where(rise, jnp.cumsum(rise, axis=1) - 1, R)
+    fidx = jnp.where(fall, jnp.cumsum(fall, axis=1) - 1, R)
+    slo = jnp.full((Qn, R), inert_lo, kd).at[qq, ridx].set(
+        sv, mode="drop")
+    shi = jnp.full((Qn, R), inert_hi, kd).at[qq, fidx].set(
+        _pred_of(sv, kd), mode="drop")
+    return slo, shi
+
+
+# -------------------------------------------------- edge-prefix reduction
+def make_edge_prefix(page_of_raw: Callable, *, num_pages: int, tile: int,
+                     interpret: bool, with_sum: bool,
+                     mask_value=None) -> Callable:
+    """The fused edge-prefix pass: ``prefix(e, kpages, vpages, aux) ->
+    (pcnt, psum)`` over N flat edge values — each edge descends the top
+    tier to its page, one single-ended kernel lane counts (and, with
+    ``with_sum``, sums) the in-page keys strictly below it, and the
+    ``ScanAux`` prefixes supply everything in earlier pages. ``psum`` is
+    None without ``with_sum`` (the value pages are never streamed)."""
+
+    def prefix(e, kpages, vpages, aux: _scan.ScanAux):
+        n_items = e.shape[0]
+        with jax.named_scope("groupby/edge_of"):
+            pids = page_of_raw(e).astype(jnp.int32)
+        with jax.named_scope("groupby/edge_plan"):
+            g_cap = ladder_grid(n_items, tile, num_pages)
+            plan = edge_scan_plan(pids, tile, g_cap, num_pages)
+
+        def body(qbs, step_pages, g):
+            outs = _pscan.page_prefix_bucketed(
+                qbs[0], step_pages, kpages,
+                vpages if with_sum else None,
+                mask_value=mask_value, interpret=interpret)
+            return outs if with_sum else (outs,)
+
+        with jax.named_scope("groupby/page_prefix"):
+            outs = run_scheduled_multi(plan, (e,), n_items, tile, g_cap,
+                                       body)
+        pcnt = aux.cum_cnt[pids] + outs[0]
+        psum = aux.cum_sum[pids] + outs[1] if with_sum else None
+        return pcnt, psum
+
+    return prefix
+
+
+def _tier_prefix_terms(e, fk, fv, fsb, fss, ftomb):
+    """Per-edge prefix terms of one flattened delta tier — the strictly-
+    below half of ``scan._tier_terms`` under the same three-tier shadow
+    algebra (DESIGN.md §6.3): live keys below the edge, the sb/ss count
+    correction (each such entry's base/sealed twin is physically counted
+    below the same edge), and the matching value sums (tomb entries'
+    lower twins are value-masked, so only live sb/ss values subtract)."""
+    blw = fk[None, :] < e[:, None]
+    live = ~ftomb[None, :]
+    corr = fsb[None, :] | (fss[None, :] & live)
+    vcorr = (fsb[None, :] | fss[None, :]) & live
+    return dict(
+        below=jnp.sum(blw & live, -1).astype(jnp.int32),
+        below_sub=jnp.sum(blw & corr, -1).astype(jnp.int32),
+        below_vsum=jnp.sum(jnp.where(blw & live, fv, 0), -1),
+        below_sub_vsum=jnp.sum(jnp.where(blw & vcorr, fv, 0), -1),
+    )
+
+
+# ------------------------------------------------------------ top-K select
+def masked_topk(vals, ranks, count, K: int):
+    """[N, C] candidate windows (each row's valid candidates are the
+    prefix of length ``min(count, C)``, in ascending key order) -> top-K
+    by value, descending: ``(values [N, K], locators [N, K])`` with 0/-1
+    past each row's ``min(count, C, K)``. Invalid lanes score the value
+    dtype's minimum; ``lax.top_k`` breaks ties toward lower indices, and
+    valid candidates are a prefix, so a *valid* minimum-valued candidate
+    always wins the tie against padding."""
+    C = vals.shape[1]
+    _, low = agg_identities(vals.dtype)      # the dtype's minimum (-inf)
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < count[:, None]
+    score = jnp.where(valid, vals, low)
+    topv, tidx = jax.lax.top_k(score, K)
+    topr = jnp.take_along_axis(ranks, tidx, axis=1)
+    kvalid = jnp.arange(K, dtype=jnp.int32)[None, :] < \
+        jnp.minimum(count, C)[:, None]
+    return jnp.where(kvalid, topv, 0), jnp.where(kvalid, topr, -1)
+
+
+# --------------------------------------------------------- generic makers
+def _rs(x, *shape):
+    return None if x is None else x.reshape(*shape)
+
+
+def _multi_reduce(R: int, mode: str, cnt, vs, mn, mx, rlo, rhi):
+    """Fold the [Q*R] per-subrange aggregates of a coverage decomposition
+    back to [Q]: counts/sums add, min/max combine (empty subranges carry
+    identities), hull ranks span the nonempty subranges ((0, 0) when the
+    whole predicate is empty)."""
+    cnt = cnt.reshape(-1, R)
+    count = jnp.sum(cnt, axis=1).astype(jnp.int32)
+    nz = cnt > 0
+    imax = np.iinfo(np.int32).max
+    r_lo = jnp.where(count > 0,
+                     jnp.min(jnp.where(nz, rlo.reshape(-1, R), imax), 1),
+                     0).astype(jnp.int32)
+    r_hi = jnp.where(count > 0,
+                     jnp.max(jnp.where(nz, rhi.reshape(-1, R), -1), 1),
+                     0).astype(jnp.int32)
+    vsum = jnp.sum(vs.reshape(-1, R), axis=1) if mode != "count" else None
+    vmin = jnp.min(mn.reshape(-1, R), axis=1) if mode == "full" else None
+    vmax = jnp.max(mx.reshape(-1, R), axis=1) if mode == "full" else None
+    return count, vsum, vmin, vmax, r_lo, r_hi
+
+
+def make_group_makers(make_agg: Callable, make_mat: Optional[Callable],
+                      key_dtype, *, prefix_path: Callable = None):
+    """Assemble the grouped/composite traceables from a scan-fn family.
+
+    * ``make_agg(mode) -> agg(lo, hi, *rest) -> (count, vsum, vmin, vmax,
+      below, above)`` — any of the repo's scan aggregate families fits
+      this contract verbatim (immutable ``TieredScanner``, paged
+      ``make_paged_scan_fns``, base-less ``make_delta_scan_fns``).
+    * ``make_mat(C, mode) -> mat(lo, hi, *rest) -> (..., ranks, vals,
+      over)`` — the matching materialize family (top-K candidates); None
+      disables ``make_gtopk``.
+    * ``prefix_path(with_sum) -> prefix(e, kpages, vpages, aux)`` enables
+      the (G+1)-edge count/sum fast path; ``rest[:3]`` must then be
+      ``(kpages, vpages, aux)`` and any *groups of five* trailing
+      operands are delta tiers for :func:`_tier_prefix_terms` (a
+      non-multiple-of-5 tail, e.g. the immutable scanner's flat values,
+      is ignored).
+
+    Returns ``(make_gagg, make_gtopk, make_magg)``:
+
+    * ``make_gagg(G, mode) -> gagg(lo, hi, *rest) -> (edges [Q, G+1],
+      r_edge [Q, G+1], count [Q, G], vsum, vmin, vmax)``
+    * ``make_gtopk(G, mode, K, C) -> gtopk(lo, hi, *rest) -> (edges,
+      r_edge, count, vsum, vmin, vmax, topv [Q,G,K], topr, overflow)``
+    * ``make_magg(R, op, mode) -> magg(lo_r [Q,R], hi_r [Q,R], *rest) ->
+      (count [Q], vsum, vmin, vmax, r_lo, r_hi_excl)``
+    """
+    kd = np.dtype(key_dtype)
+    _, _, inert_lo, inert_hi = _scan._domain_consts(kd)
+
+    def _bucket_bounds(lo, hi, G):
+        """Per-bucket inclusive bound pairs [(e_g, pred(e_{g+1}))]; empty
+        queries keep lo as the (inert) lower bound so rank anchors match
+        scan_range's empty normalization, and pred never wraps (e_{g+1}
+        > domain minimum on every non-empty query)."""
+        edges = group_edges(lo, hi, G, kd)
+        glo = edges[:, :-1]
+        ghi = jnp.where((lo > hi)[:, None], inert_hi,
+                        _pred_of(edges[:, 1:], kd))
+        return edges, glo.reshape(-1), ghi.reshape(-1)
+
+    def _expand(agg, G, lo, hi, rest):
+        edges, glo, ghi = _bucket_bounds(lo, hi, G)
+        count, vsum, vmin, vmax, below, above = agg(glo, ghi, *rest)
+        r_edge = jnp.concatenate(
+            [below.reshape(-1, G),
+             above.reshape(-1, G)[:, -1:]], axis=1)
+        return (edges, r_edge, count.reshape(-1, G), _rs(vsum, -1, G),
+                _rs(vmin, -1, G), _rs(vmax, -1, G))
+
+    def make_gagg(G: int, mode: str):
+        if prefix_path is not None and mode in ("count", "sum"):
+            pf = prefix_path(mode == "sum")
+
+            def gagg(lo, hi, *rest):
+                kpages, vpages, aux = rest[:3]
+                tier_args = rest[3:]
+                edges = group_edges(lo, hi, G, kd)
+                ef = edges.reshape(-1)
+                pcnt, psum = pf(ef, kpages, vpages, aux)
+                for i in range(0, 5 * (len(tier_args) // 5), 5):
+                    dk, dv, dsb, dss, dtb = tier_args[i:i + 5]
+                    t = _tier_prefix_terms(
+                        ef, dk.reshape(-1), dv.reshape(-1),
+                        dsb.reshape(-1), dss.reshape(-1), dtb.reshape(-1))
+                    pcnt = pcnt + t["below"] - t["below_sub"]
+                    if psum is not None:
+                        psum = psum + t["below_vsum"] - t["below_sub_vsum"]
+                r_edge = pcnt.reshape(-1, G + 1)
+                count = jnp.diff(r_edge, axis=1)
+                vsum = None if psum is None else \
+                    jnp.diff(psum.reshape(-1, G + 1), axis=1)
+                return edges, r_edge, count, vsum, None, None
+            return gagg
+        agg = make_agg(mode)
+
+        def gagg(lo, hi, *rest):
+            return _expand(agg, G, lo, hi, rest)
+        return gagg
+
+    def make_gtopk(G: int, mode: str, K: int, C: int):
+        if make_mat is None:
+            raise ValueError("top_k needs a materialize family")
+        mat = make_mat(C, mode)
+
+        def gtopk(lo, hi, *rest):
+            edges, glo, ghi = _bucket_bounds(lo, hi, G)
+            out = mat(glo, ghi, *rest)
+            count, vsum, vmin, vmax, below, above = out[:6]
+            ranks, vals, over = out[6:9]
+            topv, topr = masked_topk(vals, ranks, count, K)
+            r_edge = jnp.concatenate(
+                [below.reshape(-1, G), above.reshape(-1, G)[:, -1:]],
+                axis=1)
+            return (edges, r_edge, count.reshape(-1, G),
+                    _rs(vsum, -1, G), _rs(vmin, -1, G), _rs(vmax, -1, G),
+                    topv.reshape(-1, G, K), topr.reshape(-1, G, K),
+                    over.reshape(-1, G))
+        return gtopk
+
+    def make_magg(R: int, op: str, mode: str):
+        agg = make_agg(mode)
+
+        def magg(lo_r, hi_r, *rest):
+            slo, shi = coverage_ranges(lo_r, hi_r, op=op, key_dtype=kd)
+            cnt, vs, mn, mx, rlo, rhi = agg(slo.reshape(-1),
+                                            shi.reshape(-1), *rest)
+            return _multi_reduce(R, mode, cnt, vs, mn, mx, rlo, rhi)
+        return magg
+
+    return make_gagg, make_gtopk, make_magg
+
+
+def make_paged_group_fns(span_of: Callable, page_of_raw: Callable, *,
+                         num_pages: int, lw_pad: int, tile: int,
+                         interpret: bool, key_dtype, mask_value=None):
+    """The mutable paged store's grouped/composite family: the 15-operand
+    ``(lo, hi, kpages, vpages, aux, <sealed x5>, <active x5>)`` contract
+    of ``scan.make_paged_scan_fns``, with the count/sum grouped path on
+    the (G+1)-edge prefix pipeline + per-tier prefix corrections."""
+    make_agg, make_mat = _scan.make_paged_scan_fns(
+        span_of, num_pages=num_pages, lw_pad=lw_pad, tile=tile,
+        interpret=interpret, key_dtype=key_dtype, mask_value=mask_value)
+    prefixes = {}
+
+    def prefix_path(with_sum: bool):
+        p = prefixes.get(with_sum)
+        if p is None:
+            p = prefixes[with_sum] = make_edge_prefix(
+                page_of_raw, num_pages=num_pages, tile=tile,
+                interpret=interpret, with_sum=with_sum,
+                mask_value=mask_value)
+        return p
+
+    return make_group_makers(make_agg, make_mat, key_dtype,
+                             prefix_path=prefix_path)
+
+
+def make_delta_group_fns(key_dtype):
+    """Base-less twin (mutable store before its first fold): the same
+    grouped/composite makers over ``scan.make_delta_scan_fns``'s
+    10-operand tier contract — the delta scan is cheap jnp, so every path
+    goes through the per-bucket expansion."""
+    make_agg, make_mat = _scan.make_delta_scan_fns(key_dtype)
+    return make_group_makers(make_agg, make_mat, key_dtype)

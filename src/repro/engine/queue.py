@@ -263,10 +263,23 @@ class MicroBatchQueue:
         self.stats = QueueStats(flush_at=self.flush_at)
 
     # ------------------------------------------------------------- tenants
-    def set_weight(self, tenant, weight: float):
-        """Round-robin weight for a tenant (default 1.0): under contention
-        a weight-w tenant earns admission credit w times as fast."""
-        self.admission.set_weight(tenant, weight)
+    def set_tenant_weight(self, tenant, weight: float):
+        """Live round-robin weight reconfiguration (default 1.0): under
+        contention a weight-w tenant earns admission credit w times as
+        fast. Taken under the queue lock — flushes hold the same lock, so
+        the rescaled deficit can never be observed mid-``plan()``."""
+        with self._lock:
+            self.admission.set_weight(tenant, weight)
+
+    # legacy spelling
+    set_weight = set_tenant_weight
+
+    def set_max_share(self, max_share: float):
+        """Live per-flush share-cap reconfiguration: carried deficits are
+        re-clamped under the queue lock, so a tightened cap binds from
+        the very next flush."""
+        with self._lock:
+            self.admission.set_max_share(max_share)
 
     def effective_deadline(self) -> float:
         """The flush window currently in force: ``deadline_s`` scaled by

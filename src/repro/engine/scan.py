@@ -401,6 +401,9 @@ class TieredScanner:
         self._pipes = {}              # mode -> traceable pipeline
         self._aggs = {}               # mode -> jitted aggregate dispatch
         self._mats = {}               # K -> jitted materialize dispatch
+        self._gfns = {}               # grouped/composite jitted dispatches
+        self._gmk = None              # lazily-built groupby makers
+        self._eprefixes = {}          # with_sum -> edge-prefix pipeline
 
     def _pipe(self, mode: str) -> Callable:
         pipe = self._pipes.get(mode)
@@ -533,6 +536,163 @@ class TieredScanner:
         empty-normalized; the value pages are never streamed)."""
         r = self.scan_range(lo, hi, aggs=("count",))
         return r.r_lo, r.r_hi_excl, r.count
+
+    # ------------------------------------ grouped / composite (DESIGN §8.3)
+    def _group_makers(self):
+        """The grouped/composite maker family over this scanner's fused
+        aggregate pipeline. The immutable operand convention is
+        ``rest = (kpages, vpages, aux, flat_vals)`` — the trailing flat
+        values (non-pushdown dtypes' materialize source) are not a tier
+        quintuple, so the prefix path's tier loop skips them."""
+        gm = self._gmk
+        if gm is None:
+            from . import groupby as _gb
+            idx = self.index
+            lw, lwp = self._lw, idx.lw_pad
+
+            def agg_factory(mode):
+                def agg(lo, hi, kpages, vpages, aux, flat_vals):
+                    s, r_lo, r_hi = self._rank_raw(
+                        mode, lo, hi, kpages,
+                        vpages if mode != "count" else None, aux)
+                    return s.count, s.vsum, s.vmin, s.vmax, r_lo, r_hi
+                return agg
+
+            def mat_factory(C, mode):
+                def mat(lo, hi, kpages, vpages, aux, flat_vals):
+                    s, r_lo, r_hi = self._rank_raw(
+                        mode, lo, hi, kpages,
+                        vpages if mode != "count" else None, aux)
+                    ranks, vals, over = _materialize_interval(
+                        r_lo, s.count, flat_vals, K=C)
+                    if vals is None:
+                        rr = jnp.clip(ranks, 0, None)
+                        addr = (rr // lw) * lwp + rr % lw
+                        g = jnp.take(vpages.reshape(-1), addr, mode="clip")
+                        vals = jnp.where(ranks >= 0, g, 0)
+                    return (s.count, s.vsum, s.vmin, s.vmax, r_lo, r_hi,
+                            ranks, vals, over)
+                return mat
+
+            def prefix_path(with_sum):
+                p = self._eprefixes.get(with_sum)
+                if p is None:
+                    p = self._eprefixes[with_sum] = _gb.make_edge_prefix(
+                        idx.page_of_raw, num_pages=idx.num_pages,
+                        tile=idx.tile, interpret=idx.interpret,
+                        with_sum=with_sum)
+                return p
+
+            gm = self._gmk = _gb.make_group_makers(
+                agg_factory, mat_factory, self.key_dtype,
+                prefix_path=prefix_path)
+        return gm
+
+    def _group_dispatch(self, key, build, lo_args, path, **labels):
+        """Shared jit-cache + obs boundary for the grouped/composite
+        dispatches: build (and wrap for specialization) on miss, run as
+        ONE fused dispatch, record the op at the boundary."""
+        fn = self._gfns.get(key)
+        if fn is None:
+            body = build()
+            if self._spec:
+                ckp, cvp = self.index.pages, self.vpages
+                caux, cfv = self.aux, self.values_dev
+
+                def wrapped(*qs):
+                    return body(*qs, ckp, cvp, caux, cfv)
+            else:
+                wrapped = body
+            fn = self._gfns[key] = jax.jit(wrapped)
+        with _span("scan.dispatch", **labels):
+            t0 = time.perf_counter()
+            if self._spec:
+                out = fn(*lo_args)
+            else:
+                out = fn(*lo_args, self.index.pages, self.vpages,
+                         self.aux, self.values_dev)
+            reg = get_registry()
+            reg.histogram("engine_op_seconds", path=path).observe(
+                time.perf_counter() - t0)
+            reg.counter("engine_ops", path=path).inc()
+        return out
+
+    def scan_groups(self, lo, hi, num_groups: int, *, aggs=None,
+                    top_k: Optional[int] = None,
+                    candidates: Optional[int] = None):
+        """Equal-width GROUP BY bucket(key) aggregates over [lo, hi]:
+        G buckets per query, count/sum via the (G+1)-edge prefix pipeline,
+        min/max via the per-bucket span expansion, optional per-bucket
+        top-K by value (``top_k``; ``candidates`` bounds the materialized
+        window, default max(2K, 32)) — ONE fused dispatch either way.
+        Returns :class:`groupby.GroupScanResult`."""
+        from . import groupby as _gb
+        lo, hi = self._coerce(lo, hi)
+        G = int(num_groups)
+        if not 1 <= G <= _gb.MAX_GROUPS:
+            raise ValueError(f"num_groups must be in [1, {_gb.MAX_GROUPS}]"
+                             f", got {num_groups}")
+        mode = self._mode_for(aggs)
+        K = C = None
+        if top_k is not None:
+            K = int(top_k)
+            if K < 1:
+                raise ValueError(f"top_k must be positive, got {top_k}")
+            if not self.has_values and self.values_dev is None:
+                raise ValueError("top_k needs an index built with values")
+            C = max(int(candidates) if candidates is not None
+                    else max(2 * K, 32), K)
+
+        def build():
+            mk_gagg, mk_gtopk, _ = self._group_makers()
+            return (mk_gagg(G, mode) if K is None
+                    else mk_gtopk(G, mode, K, C))
+
+        out = self._group_dispatch(("g", G, mode, K, C), build, (lo, hi),
+                                   "scan_groups", mode=mode, groups=G)
+        edges, r_edge, count, vsum, vmin, vmax = out[:6]
+        res = _gb.GroupScanResult(count=count, edges=edges, r_edge=r_edge,
+                                  vsum=vsum, vmin=vmin, vmax=vmax)
+        if K is not None:
+            topv, topr, over = out[6:9]
+            res = _gb.GroupScanResult(
+                count=count, edges=edges, r_edge=r_edge, vsum=vsum,
+                vmin=vmin, vmax=vmax, topk_values=topv, topk_ranks=topr,
+                overflow=over)
+        return res
+
+    def scan_multi(self, ranges, *, op: str = "union", aggs=None):
+        """Composite R-range predicates: ``ranges`` is [Q, R, 2] inclusive
+        (lo, hi) pairs per query, combined as a union (IN-list) or
+        intersection (conjunctive predicate) via the coverage-count
+        decomposition, aggregated in ONE fused dispatch. Returns a
+        :class:`ScanResult` whose r_lo/r_hi_excl are the rank hull of the
+        matching set ((0, 0) when empty)."""
+        from . import groupby as _gb
+        if op not in _gb.MULTI_OPS:
+            raise ValueError(f"unknown multi-range op {op!r}; "
+                             f"want one of {_gb.MULTI_OPS}")
+        r = jnp.asarray(ranges, self.key_dtype)
+        if r.ndim != 3 or r.shape[-1] != 2:
+            raise ValueError(f"ranges must be [Q, R, 2], got {r.shape}")
+        R = int(r.shape[1])
+        if R < 1:
+            raise ValueError("ranges needs at least one range per query")
+        mode = self._mode_for(aggs)
+
+        def build():
+            _, _, mk_magg = self._group_makers()
+            magg = mk_magg(R, op, mode)
+
+            def body(rr, *rest):
+                return magg(rr[..., 0], rr[..., 1], *rest)
+            return body
+
+        out = self._group_dispatch(("m", R, op, mode), build, (r,),
+                                   "scan_multi", mode=mode, op=op)
+        count, vsum, vmin, vmax, r_lo, r_hi = out
+        return ScanResult(count=count, r_lo=r_lo, r_hi_excl=r_hi,
+                          vsum=vsum, vmin=vmin, vmax=vmax)
 
 
 def scanner_for(index, values=None) -> TieredScanner:

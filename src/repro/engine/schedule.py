@@ -268,6 +268,19 @@ def span_scan_plan(page_lo: jnp.ndarray, page_hi: jnp.ndarray, tile: int,
     return pages, device_plan(pages, tile, grid, num_pages, method=method)
 
 
+def edge_scan_plan(pages: jnp.ndarray, tile: int, grid: int,
+                   num_pages: int | None = None,
+                   method: str | None = None):
+    """Single-ended twin of :func:`span_scan_plan` for the grouped-scan
+    edge pipeline (DESIGN.md §8.3): each of the N items is one *edge* —
+    a prefix boundary targeting exactly one page — so the plan is the
+    point-lookup device plan verbatim, at the static grid ``grid`` (use
+    ``ladder_grid(N, tile, num_pages)``). Kept as a named entry point so
+    the grouped pipeline reads symmetrically with the span one."""
+    return device_plan(pages.astype(jnp.int32), tile, grid, num_pages,
+                       method=method)
+
+
 def _empty_plan(tile: int) -> BucketPlan:
     # Q == 0: one fully-masked step on page 0 keeps every downstream shape
     # non-degenerate (the page kernel still launches; all lanes drop).

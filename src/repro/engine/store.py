@@ -746,17 +746,34 @@ class MutableIndex:
         from . import scan as _scan
         key = -1 if base is None else base.derives
         if self._scan_jit is None or self._scan_jit["key"] != key:
+            from . import groupby as _gb
             if base is None:
                 make_agg, make_mat = _scan.make_delta_scan_fns(
                     self._key_dtype)
+                gmk = _gb.make_group_makers(make_agg, make_mat,
+                                            self._key_dtype)
             else:
                 span_of = tiered._make_span_of(base.page_of_raw, base.dtype)
                 make_agg, make_mat = _scan.make_paged_scan_fns(
                     span_of, num_pages=base.num_pages, lw_pad=base.lw_pad,
                     tile=base.tile, interpret=base.interpret,
                     key_dtype=base.dtype, mask_value=TOMBSTONE)
+                prefixes = {}
+
+                def prefix_path(with_sum, base=base, prefixes=prefixes):
+                    p = prefixes.get(with_sum)
+                    if p is None:
+                        p = prefixes[with_sum] = _gb.make_edge_prefix(
+                            base.page_of_raw, num_pages=base.num_pages,
+                            tile=base.tile, interpret=base.interpret,
+                            with_sum=with_sum, mask_value=TOMBSTONE)
+                    return p
+
+                gmk = _gb.make_group_makers(make_agg, make_mat, base.dtype,
+                                            prefix_path=prefix_path)
             self._scan_jit = {"key": key, "make_agg": make_agg,
-                              "aggs": {}, "make_mat": make_mat, "mats": {}}
+                              "aggs": {}, "make_mat": make_mat, "mats": {},
+                              "gmk": gmk, "gfns": {}}
         if self._scan_aux is None or self._scan_aux[0] != self._rev:
             aux = None
             if base is not None:
@@ -857,20 +874,135 @@ class MutableIndex:
         r = self.scan_range(lo, hi, aggs=("count",))
         return r.r_lo, r.r_hi_excl, r.count
 
-    def _scan_host(self, lo, hi, mode, materialize):
-        """Host-path scan for non-tiered mutable bases (the fused span
-        machinery is the paged store's contract): merge the base + delta
-        snapshots in numpy. O(n + Q·matches) — a compatibility path, not a
-        fast path."""
+    def _group_args(self):
+        """Snapshot the fused-dispatch operands under the lock: (scan
+        state or None, aux, tier operands, base). Shared by the grouped
+        and composite dispatch paths."""
+        with self._lock:
+            st = self._ensure_scan()
+            if st is None:
+                return None, None, None, self.base
+            jits, aux = st
+            tiers = (*self._tier_scan_ops(self.sealed),
+                     *self._tier_scan_ops(self.delta))
+            return jits, aux, tiers, self.base
+
+    def scan_groups(self, lo, hi, num_groups, *, aggs=None, top_k=None,
+                    candidates=None):
+        """Delta-aware GROUP BY bucket(key) over [lo, hi] (DESIGN.md
+        §8.3): G equal-width buckets per query; count/sum ride the
+        (G+1)-edge prefix pipeline with per-tier shadow corrections,
+        min/max the per-bucket span expansion, optional per-bucket
+        ``top_k`` by value over a ``candidates``-bounded merged window —
+        ONE fused dispatch under a paged base. Returns
+        ``engine.groupby.GroupScanResult`` (topk_ranks are flat slot
+        addresses, like materialize). Non-tiered bases take a host
+        path."""
         from . import scan as _scan
-        from ..kernels.page_scan import agg_identities
+        from . import groupby as _gb
+        mode = _scan.mode_for_aggs(aggs)
+        lo = jnp.asarray(lo, self._key_dtype)
+        hi = jnp.asarray(hi, self._key_dtype)
+        G = int(num_groups)
+        if not 1 <= G <= _gb.MAX_GROUPS:
+            raise ValueError(f"num_groups must be in [1, {_gb.MAX_GROUPS}]"
+                             f", got {num_groups}")
+        K = C = None
+        if top_k is not None:
+            K = int(top_k)
+            if K < 1:
+                raise ValueError(f"top_k must be positive, got {top_k}")
+            C = max(int(candidates) if candidates is not None
+                    else max(2 * K, 32), K)
+        jits, aux, tiers, base = self._group_args()
+        if jits is None:
+            return self._scan_groups_host(np.asarray(lo), np.asarray(hi),
+                                          G, mode, K, C)
+        if base is None:
+            args = (lo, hi, *tiers)
+        else:
+            args = (lo, hi, base.dev_keys, base.dev_vals, aux, *tiers)
+        key = ("g", G, mode, K, C)
+        fn = jits["gfns"].get(key)
+        if fn is None:
+            mk_gagg, mk_gtopk, _ = jits["gmk"]
+            fn = jits["gfns"][key] = jax.jit(
+                mk_gagg(G, mode) if K is None else mk_gtopk(G, mode, K, C))
+        with span("store.scan", mode=mode, groups=G):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            reg = get_registry()
+            reg.histogram("engine_op_seconds",
+                          path="scan_groups").observe(
+                time.perf_counter() - t0)
+            reg.counter("engine_ops", path="scan_groups").inc()
+        edges, r_edge, count, vsum, vmin, vmax = out[:6]
+        if K is None:
+            return _gb.GroupScanResult(count=count, edges=edges,
+                                       r_edge=r_edge, vsum=vsum,
+                                       vmin=vmin, vmax=vmax)
+        topv, topr, over = out[6:9]
+        return _gb.GroupScanResult(count=count, edges=edges,
+                                   r_edge=r_edge, vsum=vsum, vmin=vmin,
+                                   vmax=vmax, topk_values=topv,
+                                   topk_ranks=topr, overflow=over)
+
+    def scan_multi(self, ranges, *, op="union", aggs=None):
+        """Delta-aware composite R-range predicates ([Q, R, 2] inclusive
+        pairs, union = IN-list / intersect = conjunction) via the
+        coverage-count decomposition, aggregated in ONE fused dispatch
+        under a paged base. Returns ``engine.scan.ScanResult`` whose
+        r_lo/r_hi_excl are the merged-rank hull of the matching set
+        ((0, 0) when empty). Non-tiered bases take a host path."""
+        from . import scan as _scan
+        from . import groupby as _gb
+        if op not in _gb.MULTI_OPS:
+            raise ValueError(f"unknown multi-range op {op!r}; "
+                             f"want one of {_gb.MULTI_OPS}")
+        r = jnp.asarray(ranges, self._key_dtype)
+        if r.ndim != 3 or r.shape[-1] != 2:
+            raise ValueError(f"ranges must be [Q, R, 2], got {r.shape}")
+        R = int(r.shape[1])
+        if R < 1:
+            raise ValueError("ranges needs at least one range per query")
+        mode = _scan.mode_for_aggs(aggs)
+        jits, aux, tiers, base = self._group_args()
+        if jits is None:
+            return self._scan_multi_host(np.asarray(r), op, mode)
+        if base is None:
+            args = (r, *tiers)
+        else:
+            args = (r, base.dev_keys, base.dev_vals, aux, *tiers)
+        key = ("m", R, op, mode)
+        fn = jits["gfns"].get(key)
+        if fn is None:
+            _, _, mk_magg = jits["gmk"]
+            magg = mk_magg(R, op, mode)
+
+            def body(rr, *rest):
+                return magg(rr[..., 0], rr[..., 1], *rest)
+            fn = jits["gfns"][key] = jax.jit(body)
+        with span("store.scan", mode=mode, op=op):
+            t0 = time.perf_counter()
+            count, vsum, vmin, vmax, r_lo, r_hi = fn(*args)
+            reg = get_registry()
+            reg.histogram("engine_op_seconds",
+                          path="scan_multi").observe(
+                time.perf_counter() - t0)
+            reg.counter("engine_ops", path="scan_multi").inc()
+        return _scan.ScanResult(count=count, r_lo=r_lo, r_hi_excl=r_hi,
+                                vsum=vsum, vmin=vmin, vmax=vmax)
+
+    def _merged_host(self):
+        """Numpy snapshot of the LIVE sorted (keys, values) view: base +
+        delta tiers overlaid newest-last (active wins over sealed wins
+        over base; a tombstone anywhere above the base deletes the key).
+        The compatibility substrate for every host-path scan family."""
         if self.base is not None:
             bk, bv = self._flat
         else:
             bk = np.empty(0, self._key_dtype)
             bv = np.empty(0, np.int32)
-        # overlay newest-last: active wins over sealed wins over base;
-        # a tombstone anywhere above the base deletes the key
         ov = {}
         for buf in (self.sealed, self.delta):
             k, v, _, _, tb = buf.entries()
@@ -889,6 +1021,16 @@ class MutableIndex:
             mk, mv = mk[order], mv[order]
         else:
             mk, mv = bk, bv
+        return mk, mv
+
+    def _scan_host(self, lo, hi, mode, materialize):
+        """Host-path scan for non-tiered mutable bases (the fused span
+        machinery is the paged store's contract): merge the base + delta
+        snapshots in numpy. O(n + Q·matches) — a compatibility path, not a
+        fast path."""
+        from . import scan as _scan
+        from ..kernels.page_scan import agg_identities
+        mk, mv = self._merged_host()
         r_lo = np.searchsorted(mk, lo, side="left").astype(np.int32)
         r_hi = np.searchsorted(mk, hi, side="right").astype(np.int32)
         r_hi = np.where(lo > hi, r_lo, r_hi).astype(np.int32)
@@ -920,6 +1062,93 @@ class MutableIndex:
             vmin=jnp.asarray(vmin) if mode == "full" else None,
             vmax=jnp.asarray(vmax) if mode == "full" else None,
             ranks=ranks, values=vals, overflow=over)
+
+    def _scan_groups_host(self, lo, hi, G, mode, K, C):
+        """Host-path grouped scan for non-tiered bases: searchsorted over
+        the host-computed bucket edges on the merged snapshot."""
+        from . import groupby as _gb
+        from ..kernels.page_scan import agg_identities
+        mk, mv = self._merged_host()
+        edges = _gb.group_edges_host(lo, hi, G)          # [Q, G+1]
+        r_edge = np.searchsorted(mk, edges.reshape(-1),
+                                 side="left").astype(np.int32)
+        r_edge = r_edge.reshape(-1, G + 1)
+        cnt = np.diff(r_edge, axis=1).astype(np.int32)
+        Q = lo.shape[0]
+        id_min, id_max = agg_identities(np.int32)
+        vsum = np.zeros((Q, G), np.int32)
+        vmin = np.full((Q, G), id_min, np.int32)
+        vmax = np.full((Q, G), id_max, np.int32)
+        if K is not None:
+            topv = np.zeros((Q, G, K), np.int32)
+            topr = np.full((Q, G, K), -1, np.int32)
+            over = np.zeros((Q, G), bool)
+        for q in range(Q):
+            for g in range(G):
+                if not cnt[q, g]:
+                    continue
+                s, e = int(r_edge[q, g]), int(r_edge[q, g + 1])
+                seg = mv[s:e]
+                vsum[q, g] = seg.sum(dtype=np.int32)
+                vmin[q, g] = seg.min()
+                vmax[q, g] = seg.max()
+                if K is not None:
+                    # device semantics: top-K over the first C candidate
+                    # slots only, overflow flags truncation
+                    cand = seg[:C]
+                    k = min(K, cand.size)
+                    o = np.argsort(-cand.astype(np.int64),
+                                   kind="stable")[:k]
+                    topv[q, g, :k] = cand[o]
+                    topr[q, g, :k] = (s + o).astype(np.int32)
+                    over[q, g] = cnt[q, g] > C
+        res = _gb.GroupScanResult(
+            count=jnp.asarray(cnt),
+            edges=jnp.asarray(edges.astype(self._key_dtype)),
+            r_edge=jnp.asarray(r_edge),
+            vsum=jnp.asarray(vsum) if mode != "count" else None,
+            vmin=jnp.asarray(vmin) if mode == "full" else None,
+            vmax=jnp.asarray(vmax) if mode == "full" else None)
+        if K is None:
+            return res
+        return dataclasses.replace(res, topk_values=jnp.asarray(topv),
+                                   topk_ranks=jnp.asarray(topr),
+                                   overflow=jnp.asarray(over))
+
+    def _scan_multi_host(self, r, op, mode):
+        """Host-path composite-range scan for non-tiered bases: per-query
+        membership masks over the merged snapshot (union = any subrange,
+        intersect = all)."""
+        from . import scan as _scan
+        from ..kernels.page_scan import agg_identities
+        mk, mv = self._merged_host()
+        Q = r.shape[0]
+        id_min, id_max = agg_identities(np.int32)
+        cnt = np.zeros(Q, np.int32)
+        vsum = np.zeros(Q, np.int32)
+        vmin = np.full(Q, id_min, np.int32)
+        vmax = np.full(Q, id_max, np.int32)
+        r_lo = np.zeros(Q, np.int32)
+        r_hi = np.zeros(Q, np.int32)
+        for q in range(Q):
+            inr = (mk[None, :] >= r[q, :, 0][:, None]) & \
+                  (mk[None, :] <= r[q, :, 1][:, None])    # [R, n]
+            m = inr.any(axis=0) if op == "union" else inr.all(axis=0)
+            idx = np.nonzero(m)[0]
+            cnt[q] = idx.size
+            if idx.size:
+                seg = mv[m]
+                vsum[q] = seg.sum(dtype=np.int32)
+                vmin[q] = seg.min()
+                vmax[q] = seg.max()
+                r_lo[q] = idx[0]
+                r_hi[q] = idx[-1] + 1
+        return _scan.ScanResult(
+            count=jnp.asarray(cnt), r_lo=jnp.asarray(r_lo),
+            r_hi_excl=jnp.asarray(r_hi),
+            vsum=jnp.asarray(vsum) if mode != "count" else None,
+            vmin=jnp.asarray(vmin) if mode == "full" else None,
+            vmax=jnp.asarray(vmax) if mode == "full" else None)
 
     @property
     def n(self) -> int:

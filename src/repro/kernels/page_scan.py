@@ -160,5 +160,82 @@ def page_scan_bucketed(lo_b: jnp.ndarray, hi_b: jnp.ndarray,
         interpret=interpret,
     )(*operands)
 
+def _kernel_prefix_count(page_ids_ref, e_ref, kpages_ref, lt_ref):
+    k = kpages_ref[...][0, :]                        # [lw_pad] page keys
+    e = e_ref[...][0, :]                             # [TQ] per-lane edges
+    blw = k[None, :] < e[:, None]                    # strictly-below mask
+    lt_ref[...] = jnp.sum(blw, axis=-1).astype(jnp.int32)[None, :]
+
+
+def _kernel_prefix_sum(page_ids_ref, e_ref, kpages_ref, vpages_ref,
+                       lt_ref, psum_ref, *, mask_value=None):
+    k = kpages_ref[...][0, :]
+    v = vpages_ref[...][0, :]
+    e = e_ref[...][0, :]
+    blw = k[None, :] < e[:, None]                    # [TQ, lw_pad]
+    lt_ref[...] = jnp.sum(blw, axis=-1).astype(jnp.int32)[None, :]
+    m = blw
+    if mask_value is not None:
+        # tombstone-synced slots: key occupies the page (lt stays
+        # physical) but the value sentinel must not enter the sum
+        m = m & (v != mask_value)[None, :]
+    psum_ref[...] = jnp.sum(jnp.where(m, v[None, :], 0), axis=-1)[None, :]
+
+
+def page_prefix_bucketed(e_b: jnp.ndarray, page_ids: jnp.ndarray,
+                         kpages: jnp.ndarray, vpages: jnp.ndarray = None,
+                         *, mask_value=None, interpret: bool = True):
+    """Single-ended prefix twin of :func:`page_scan_bucketed` for the
+    grouped-scan edge pipeline (DESIGN.md §8.3): each lane carries ONE edge
+    value ``e`` and step g reduces page ``page_ids[g]`` to the lane's
+    in-page prefix terms
+
+      lt    |{slot : key < e}|  (gap/pad sentinels can never be < e)
+      psum  sum of values in slots with key < e  (only with ``vpages``)
+
+    so the caller derives the global prefixes ``cum_cnt[p] + lt`` /
+    ``cum_sum[p] + psum`` and answers G bucket aggregates from G+1 edges —
+    roughly half the lanes of the doubled-endpoint expansion. ``mask_value``
+    excludes tombstone-synced slots from ``psum`` exactly like the scan
+    kernel (``lt`` stays physical for the shadow algebra).
+
+    Returns ``lt`` (int32 [G, TQ]) or ``(lt, psum)`` when ``vpages`` is
+    given. A lane is made inert by ``e = key-domain minimum`` (empty mask).
+    """
+    G, TQ = e_b.shape
+    num_pages, lw_pad = kpages.shape
+    in_specs = [
+        pl.BlockSpec((1, TQ), lambda g, pids: (g, 0)),
+        pl.BlockSpec((1, lw_pad), lambda g, pids: (pids[g], 0)),
+    ]
+    operands = [page_ids, e_b, kpages]
+    if vpages is None:
+        kern, n_out, out_dtypes = _kernel_prefix_count, 1, [jnp.int32]
+    else:
+        vd = vpages.dtype
+        in_specs.append(pl.BlockSpec((1, lw_pad), lambda g, pids:
+                                     (pids[g], 0)))
+        operands.append(vpages)
+        kern = functools.partial(_kernel_prefix_sum,
+                                 mask_value=None if mask_value is None
+                                 else vd.type(mask_value))
+        n_out, out_dtypes = 2, [jnp.int32, vd]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G,),
+        in_specs=in_specs,
+        out_specs=tuple(pl.BlockSpec((1, TQ), lambda g, pids: (g, 0))
+                        for _ in range(n_out)),
+    )
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=tuple(jax.ShapeDtypeStruct((G, TQ), d)
+                        for d in out_dtypes),
+        interpret=interpret,
+    )(*operands)
+    return outs if vpages is not None else outs[0]
+
+
 # The span expansion + scan-step plan live in engine/schedule.py
 # (span_scan_plan) and engine/scan.py; this module is kernel-only.

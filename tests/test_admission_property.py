@@ -266,6 +266,62 @@ def test_rotation_prevents_positional_bias():
     assert len(set(first)) > 1
 
 
+# ----------------------------------------- units: live reconfiguration
+def test_live_weight_rescales_carried_deficit():
+    policy = AdmissionPolicy(64, quantum=8)
+    policy.plan({"a": [1] * 100, "b": [1] * 100})
+    d0 = policy._deficit["a"]
+    policy.set_weight("a", 3.0)
+    # credit keeps its rounds-of-service meaning: scaled by the ratio,
+    # never above the cap
+    assert policy._deficit["a"] == pytest.approx(
+        min(d0 * 3.0, float(policy.cap_queries)))
+    # and the new weight steers subsequent contention
+    admit = policy.plan({"a": [1] * 200, "b": [1] * 200})
+    assert admit.counts["a"] > admit.counts["b"]
+    with pytest.raises(ValueError):
+        policy.set_weight("a", 0.0)
+
+
+def test_live_max_share_reclamps_and_binds_next_flush():
+    policy = AdmissionPolicy(100, max_share=1.0, quantum=64)
+    policy.plan({"hog": [20] * 3, "a": [5]})
+    assert policy._deficit["hog"] <= policy.cap_queries
+    policy.set_max_share(0.25)
+    assert policy.cap_queries == 25
+    # hoarded credit is gone immediately...
+    assert all(d <= 25.0 for d in policy._deficit.values())
+    # ...and the tightened cap binds on the very next flush
+    admit = policy.plan({"hog": [20, 20, 20, 20], "a": [5], "b": [5]})
+    assert admit.counts["hog"] <= 25
+    assert admit.counts["a"] == 5 and admit.counts["b"] == 5
+    for bad in (0.0, 1.5, -0.1):
+        with pytest.raises(ValueError):
+            policy.set_max_share(bad)
+
+
+def test_queue_live_reconfiguration_delegates():
+    keys = np.arange(0, 4096, 2, dtype=np.int32)
+    idx = build_index(keys, None, IndexConfig(kind="tiered"))
+    q = MicroBatchQueue(index_probe_fn(idx), capacity=64, deadline_s=60.0,
+                        timer=False, max_share=1.0)
+    q.set_tenant_weight("heavy", 2.0)
+    assert q.admission.weight("heavy") == 2.0
+    q.set_weight("legacy", 4.0)              # legacy spelling still works
+    assert q.admission.weight("legacy") == 4.0
+    q.set_max_share(0.5)
+    assert q.admission.max_share == 0.5
+    assert q.admission.cap_queries == 32
+    # the queue still serves correctly after live reconfiguration
+    f1 = q.submit(keys[:8], tenant="heavy")
+    f2 = q.submit(keys[8:12] + 1, tenant="legacy")
+    q.flush()
+    r1, r2 = f1.result(), f2.result()
+    assert bool(np.all(np.asarray(r1.found)))
+    assert not bool(np.any(np.asarray(r2.found)))
+    q.close()
+
+
 # ------------------------------------------------- units: rate/deadline
 def test_rate_estimator_ewma():
     r = RateEstimator(alpha=0.5)

@@ -1,0 +1,403 @@
+"""Property tests for the grouped & composite analytics subsystem
+(DESIGN.md §8.3): ``scan_groups`` bucket aggregates / per-bucket top-K and
+``scan_multi`` union/intersect predicates must equal independent numpy
+oracles across index kinds, int32/float32 keys, group counts, range-set
+shapes, and mutable stores under interleaved insert/delete traces — and
+the tiered paths must stay ONE fused dispatch (no host transfer) once
+warm.
+
+The grouped oracle re-derives bucket membership from the edge *semantics*
+(``e_g = min(lo + g*width, succ(hi))``) rather than from the device's
+edges, so an edge-arithmetic bug cannot self-certify. Runs under
+hypothesis when installed; a seeded parametrized fallback drives the same
+cases otherwise.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+import jax
+
+from repro.core import IndexConfig, build_index
+from repro.engine.groupby import group_edges, group_edges_host
+from repro.kernels.page_scan import agg_identities
+
+UNIVERSE = 30_000
+KINDS = ("tiered", "css")
+GROUP_COUNTS = (1, 3, 8, 65)
+
+
+# ---------------------------------------------------------------- oracles
+def _edges_oracle(lo, hi, G):
+    """Independent re-derivation of the bucket-edge semantics (int64 /
+    key-precision float math, no shared code path with the device)."""
+    kd = lo.dtype
+    Q = lo.shape[0]
+    e = np.empty((Q, G + 1), np.float64 if np.issubdtype(kd, np.floating)
+                 else np.int64)
+    for q in range(Q):
+        l, h = lo[q], hi[q]
+        if l > h:
+            e[q, :] = l
+            continue
+        if np.issubdtype(kd, np.floating):
+            succ = np.nextafter(h, np.inf, dtype=kd)
+            w = (kd.type(h) - kd.type(l)) * kd.type(1.0 / G)
+            # the subsystem truncates the width mantissa so g * w is an
+            # exact float product (FMA-proof edges); mirror that here
+            wi = w.view(np.int32)
+            w = np.int32(wi & np.int32(~((1 << G.bit_length()) - 1))) \
+                .view(kd)
+            for g in range(G + 1):
+                v = kd.type(kd.type(l) + kd.type(g) * w)
+                e[q, g] = min(v, succ) if np.isfinite(w) else succ
+            e[q, 0], e[q, G] = l, succ
+        else:
+            w = (int(h) - int(l)) // G + 1
+            for g in range(G + 1):
+                e[q, g] = min(int(l) + g * w, int(h) + 1)
+    return e.astype(kd)
+
+
+def _groups_oracle(mk, mv, lo, hi, G):
+    edges = _edges_oracle(lo, hi, G)
+    r_edge = np.searchsorted(mk, edges.reshape(-1),
+                             side="left").astype(np.int32)
+    r_edge = r_edge.reshape(-1, G + 1)
+    cnt = np.diff(r_edge, axis=1).astype(np.int32)
+    Q = lo.shape[0]
+    id_min, id_max = agg_identities(np.int32)
+    vsum = np.zeros((Q, G), np.int32)
+    vmin = np.full((Q, G), id_min, np.int32)
+    vmax = np.full((Q, G), id_max, np.int32)
+    for q in range(Q):
+        for g in range(G):
+            seg = mv[r_edge[q, g]: r_edge[q, g + 1]]
+            if seg.size:
+                vsum[q, g] = seg.sum(dtype=np.int32)
+                vmin[q, g] = seg.min()
+                vmax[q, g] = seg.max()
+    return edges, r_edge, cnt, vsum, vmin, vmax
+
+
+def _multi_oracle(mk, mv, ranges, op):
+    """Membership-mask oracle: no coverage decomposition in sight."""
+    Q = ranges.shape[0]
+    id_min, id_max = agg_identities(np.int32)
+    cnt = np.zeros(Q, np.int32)
+    vsum = np.zeros(Q, np.int32)
+    vmin = np.full(Q, id_min, np.int32)
+    vmax = np.full(Q, id_max, np.int32)
+    r_lo = np.zeros(Q, np.int32)
+    r_hi = np.zeros(Q, np.int32)
+    for q in range(Q):
+        inr = (mk[None, :] >= ranges[q, :, 0][:, None]) & \
+              (mk[None, :] <= ranges[q, :, 1][:, None])
+        m = inr.any(axis=0) if op == "union" else inr.all(axis=0)
+        idx = np.nonzero(m)[0]
+        cnt[q] = idx.size
+        if idx.size:
+            seg = mv[m]
+            vsum[q] = seg.sum(dtype=np.int32)
+            vmin[q] = seg.min()
+            vmax[q] = seg.max()
+            r_lo[q], r_hi[q] = idx[0], idx[-1] + 1
+    return cnt, vsum, vmin, vmax, r_lo, r_hi
+
+
+def _ref_arrays(ref):
+    mk = np.array(sorted(ref), np.float32 if any(
+        isinstance(k, float) for k in list(ref)[:1]) else np.int32)
+    mv = np.array([ref[k] for k in mk.tolist()], np.int32)
+    return mk, mv
+
+
+# ------------------------------------------------------- generators/checks
+def _group_queries(rng, dtype, q_n):
+    """Point, inverted, whole-domain, and narrower-than-G ranges."""
+    if np.issubdtype(np.dtype(dtype), np.floating):
+        lo = (rng.normal(size=q_n) * UNIVERSE / 4).astype(np.float32)
+        hi = lo + (rng.normal(size=q_n) * UNIVERSE / 4).astype(np.float32)
+    else:
+        lo = rng.integers(-100, UNIVERSE + 100, q_n).astype(np.int32)
+        hi = (lo + rng.integers(-200, UNIVERSE, q_n)).astype(np.int32)
+    k = max(q_n // 8, 1)
+    hi[:k] = lo[:k]                               # point (narrower than G)
+    if np.dtype(dtype) == np.int32 and q_n >= 3:
+        # whole-domain range: edge arithmetic must survive int32 extremes
+        lo[k] = np.iinfo(np.int32).min
+        hi[k] = np.iinfo(np.int32).max - 1
+    return lo, hi
+
+
+def _check_groups(idx, mk, mv, lo, hi, G, check_values=True):
+    edges, r_edge, cnt, vsum, vmin, vmax = _groups_oracle(mk, mv, lo, hi, G)
+    r = idx.scan_groups(lo, hi, G)
+    np.testing.assert_array_equal(np.asarray(r.edges), edges)
+    np.testing.assert_array_equal(np.asarray(r.r_edge), r_edge)
+    np.testing.assert_array_equal(np.asarray(r.count), cnt)
+    if check_values:
+        np.testing.assert_array_equal(np.asarray(r.vsum), vsum)
+        np.testing.assert_array_equal(np.asarray(r.vmin), vmin)
+        np.testing.assert_array_equal(np.asarray(r.vmax), vmax)
+        # the count/sum edge-prefix fast path must agree bit-for-bit with
+        # the span-expansion full path
+        rs = idx.scan_groups(lo, hi, G, aggs=("count", "sum"))
+        np.testing.assert_array_equal(np.asarray(rs.count), cnt)
+        np.testing.assert_array_equal(np.asarray(rs.vsum), vsum)
+        assert rs.vmin is None and rs.vmax is None
+    rc = idx.scan_groups(lo, hi, G, aggs=("count",))
+    np.testing.assert_array_equal(np.asarray(rc.count), cnt)
+    assert rc.vsum is None
+    # the host edge twin is bit-identical to the device edges
+    np.testing.assert_array_equal(group_edges_host(lo, hi, G), edges)
+    np.testing.assert_array_equal(
+        np.asarray(group_edges(lo, hi, G, lo.dtype)), edges)
+
+
+def _check_topk(idx, mk, mv, lo, hi, G, K, C):
+    _, r_edge, cnt, _, _, _ = _groups_oracle(mk, mv, lo, hi, G)
+    r = idx.scan_groups(lo, hi, G, top_k=K, candidates=C)
+    topv = np.asarray(r.topk_values)
+    over = np.asarray(r.overflow)
+    for q in range(lo.shape[0]):
+        for g in range(G):
+            s, e = int(r_edge[q, g]), int(r_edge[q, g + 1])
+            cand = mv[s: min(e, s + C)]
+            k = min(K, cand.size)
+            want = np.zeros(K, np.int32)
+            want[:k] = np.sort(cand.astype(np.int64))[::-1][:k]
+            np.testing.assert_array_equal(topv[q, g], want, err_msg=f"{q},{g}")
+            assert bool(over[q, g]) == (cnt[q, g] > C)
+
+
+def _check_multi(idx, mk, mv, ranges, op, check_values=True):
+    cnt, vsum, vmin, vmax, r_lo, r_hi = _multi_oracle(mk, mv, ranges, op)
+    r = idx.scan_multi(ranges, op=op)
+    np.testing.assert_array_equal(np.asarray(r.count), cnt)
+    np.testing.assert_array_equal(np.asarray(r.r_lo), r_lo)
+    np.testing.assert_array_equal(np.asarray(r.r_hi_excl), r_hi)
+    if check_values:
+        np.testing.assert_array_equal(np.asarray(r.vsum), vsum)
+        np.testing.assert_array_equal(np.asarray(r.vmin), vmin)
+        np.testing.assert_array_equal(np.asarray(r.vmax), vmax)
+
+
+def _rand_ranges(rng, dtype, Q, R):
+    if np.issubdtype(np.dtype(dtype), np.floating):
+        lo = (rng.normal(size=(Q, R)) * UNIVERSE / 4).astype(np.float32)
+        hi = lo + (rng.normal(size=(Q, R)) * UNIVERSE / 8) \
+            .astype(np.float32)
+    else:
+        lo = rng.integers(-100, UNIVERSE + 100, (Q, R)).astype(np.int32)
+        hi = (lo + rng.integers(-500, UNIVERSE // 2, (Q, R))) \
+            .astype(np.int32)
+    return np.stack([lo, hi], axis=-1)
+
+
+# ---------------------------------------------------------------- drivers
+def _run_groups_immutable(seed, kind, dtype):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 4000))
+    if dtype == np.int32:
+        keys = np.unique(rng.integers(0, UNIVERSE, n).astype(np.int32))
+    else:
+        keys = np.unique((rng.normal(size=n) * UNIVERSE / 4)
+                         .astype(np.float32))
+    vals = rng.integers(-1000, 1000, keys.size).astype(np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind=kind, node_width=16,
+                                              leaf_width=128))
+    mv = vals
+    q_n = int(rng.integers(1, 60))
+    lo, hi = _group_queries(rng, dtype, q_n)
+    G = int(rng.choice(GROUP_COUNTS))
+    _check_groups(idx, keys, mv, lo, hi, G)
+    K = int(rng.integers(1, 6))
+    _check_topk(idx, keys, mv, lo, hi, min(G, 8), K, max(2 * K, 16))
+
+
+def _run_multi_immutable(seed, kind, dtype, op):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 4000))
+    if dtype == np.int32:
+        keys = np.unique(rng.integers(0, UNIVERSE, n).astype(np.int32))
+    else:
+        keys = np.unique((rng.normal(size=n) * UNIVERSE / 4)
+                         .astype(np.float32))
+    vals = rng.integers(-1000, 1000, keys.size).astype(np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind=kind, node_width=16,
+                                              leaf_width=128))
+    Q = int(rng.integers(1, 40))
+    R = int(rng.choice([1, 2, 5]))
+    ranges = _rand_ranges(rng, dtype, Q, R)
+    # some empty and some nested member ranges
+    if Q >= 2:
+        ranges[0, 0, 1] = ranges[0, 0, 0] - 1 if dtype == np.int32 \
+            else ranges[0, 0, 0] - np.float32(1)
+    _check_multi(idx, keys, vals, ranges, op)
+
+
+def _run_mutable(seed, capacity):
+    """Insert/delete/scan trace over the paged mutable store: grouped and
+    composite scans crossed with merges and tombstones."""
+    rng = np.random.default_rng(seed)
+    n0 = int(rng.integers(2, 1500))
+    init = np.unique(rng.integers(0, UNIVERSE, n0).astype(np.int32))
+    vals = rng.integers(-1000, 1000, init.size).astype(np.int32)
+    idx = build_index(init, vals, IndexConfig(
+        kind="tiered", mutable=True, delta_capacity=capacity,
+        leaf_width=128))
+    ref = dict(zip(init.tolist(), vals.tolist()))
+    for _ in range(int(rng.integers(2, 4))):
+        size = int(rng.integers(1, 300))
+        ks = rng.integers(0, UNIVERSE, size).astype(np.int32)
+        vs = rng.integers(-1000, 1000, size).astype(np.int32)
+        idx.insert(ks, vs)
+        ref.update(zip(ks.tolist(), vs.tolist()))
+        if ref and rng.random() < 0.6:
+            pool = np.array(list(ref), np.int32)
+            dk = pool[rng.integers(0, pool.size, min(40, pool.size))]
+            idx.delete(dk)
+            for k in dk.tolist():
+                ref.pop(k, None)
+        if not ref:
+            continue
+        mk = np.array(sorted(ref), np.int32)
+        mv = np.array([ref[k] for k in mk.tolist()], np.int32)
+        lo, hi = _group_queries(rng, np.int32, int(rng.integers(1, 40)))
+        G = int(rng.choice(GROUP_COUNTS))
+        _check_groups(idx, mk, mv, lo, hi, G)
+        _check_topk(idx, mk, mv, lo, hi, min(G, 8), 3, 16)
+        ranges = _rand_ranges(rng, np.int32, int(rng.integers(1, 20)),
+                              int(rng.choice([1, 2, 5])))
+        for op in ("union", "intersect"):
+            _check_multi(idx, mk, mv, ranges, op)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), kind=st.sampled_from(KINDS),
+           dtype=st.sampled_from([np.int32, np.float32]))
+    def test_scan_groups_matches_oracle(seed, kind, dtype):
+        _run_groups_immutable(seed, kind, dtype)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), kind=st.sampled_from(KINDS),
+           dtype=st.sampled_from([np.int32, np.float32]),
+           op=st.sampled_from(["union", "intersect"]))
+    def test_scan_multi_matches_oracle(seed, kind, dtype, op):
+        _run_multi_immutable(seed, kind, dtype, op)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           capacity=st.sampled_from([32, 128, 512]))
+    def test_scan_groups_matches_oracle_mutable(seed, capacity):
+        _run_mutable(seed, capacity)
+
+else:                                  # seeded fallback, same cases
+
+    @pytest.mark.parametrize("seed", range(2))
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("dtype", [np.int32, np.float32])
+    def test_scan_groups_matches_oracle_seeded(seed, kind, dtype):
+        _run_groups_immutable(seed * 101 + 7, kind, dtype)
+
+    @pytest.mark.parametrize("seed", range(2))
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("dtype", [np.int32, np.float32])
+    @pytest.mark.parametrize("op", ["union", "intersect"])
+    def test_scan_multi_matches_oracle_seeded(seed, kind, dtype, op):
+        _run_multi_immutable(seed * 57 + 3, kind, dtype, op)
+
+    @pytest.mark.parametrize("seed", range(3))
+    @pytest.mark.parametrize("capacity", [32, 128])
+    def test_scan_groups_matches_oracle_mutable_seeded(seed, capacity):
+        _run_mutable(seed * 13 + 1, capacity)
+
+
+# ------------------------------------------------- fused-dispatch guards
+def test_scan_groups_single_dispatch_immutable():
+    """Warm every grouped/composite path, then re-run under
+    transfer_guard('disallow'): a single host transfer anywhere in the
+    pipeline fails the test — the whole query is ONE device dispatch."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.integers(0, UNIVERSE, 3000).astype(np.int32))
+    vals = rng.integers(-1000, 1000, keys.size).astype(np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind="tiered",
+                                              leaf_width=128))
+    lo = jnp.asarray(np.array([0, 500, 29_000], np.int32))
+    hi = jnp.asarray(np.array([10_000, 400, 29_999], np.int32))
+    ranges = jnp.asarray(_rand_ranges(rng, np.int32, 4, 3))
+    G = 8
+    for aggs in (None, ("count", "sum"), ("count",)):
+        idx.scan_groups(lo, hi, G, aggs=aggs)
+    idx.scan_groups(lo, hi, G, top_k=4)
+    idx.scan_multi(ranges, op="union")
+    idx.scan_multi(ranges, op="intersect")
+    with jax.transfer_guard("disallow"):
+        idx.scan_groups(lo, hi, G)
+        idx.scan_groups(lo, hi, G, aggs=("count", "sum"))
+        idx.scan_groups(lo, hi, G, aggs=("count",))
+        idx.scan_groups(lo, hi, G, top_k=4)
+        idx.scan_multi(ranges, op="union")
+        idx.scan_multi(ranges, op="intersect")
+
+
+def test_scan_groups_single_dispatch_mutable():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    keys = np.unique(rng.integers(0, UNIVERSE, 2000).astype(np.int32))
+    vals = rng.integers(-1000, 1000, keys.size).astype(np.int32)
+    idx = build_index(keys, vals, IndexConfig(kind="tiered", mutable=True,
+                                              leaf_width=128))
+    idx.insert(np.array([7, 8, 9], np.int32), np.array([1, 2, 3], np.int32))
+    idx.delete(np.array([keys[0]], np.int32))
+    lo = jnp.asarray(np.array([0, 500], np.int32))
+    hi = jnp.asarray(np.array([10_000, 400], np.int32))
+    ranges = jnp.asarray(_rand_ranges(rng, np.int32, 3, 2))
+    idx.scan_groups(lo, hi, 8)
+    idx.scan_groups(lo, hi, 8, top_k=3)
+    idx.scan_multi(ranges, op="union")
+    with jax.transfer_guard("disallow"):
+        idx.scan_groups(lo, hi, 8)
+        idx.scan_groups(lo, hi, 8, top_k=3)
+        idx.scan_multi(ranges, op="union")
+
+
+# ------------------------------------------------------------ unit edges
+def test_group_edges_whole_domain_no_wrap():
+    lo = np.array([np.iinfo(np.int32).min], np.int32)
+    hi = np.array([np.iinfo(np.int32).max - 1], np.int32)
+    for G in (1, 3, 8, 65, 65_536):
+        e = group_edges_host(lo, hi, G)
+        assert e.shape == (1, G + 1)
+        assert int(e[0, 0]) == np.iinfo(np.int32).min
+        assert int(e[0, -1]) == np.iinfo(np.int32).max
+        assert np.all(np.diff(e[0].astype(np.int64)) >= 0)
+        np.testing.assert_array_equal(
+            np.asarray(group_edges(lo, hi, G, np.int32)), e)
+
+
+def test_scan_groups_validation():
+    keys = np.arange(100, dtype=np.int32)
+    idx = build_index(keys, keys, IndexConfig(kind="tiered"))
+    lo = np.array([0], np.int32)
+    hi = np.array([99], np.int32)
+    with pytest.raises(ValueError):
+        idx.scan_groups(lo, hi, 0)
+    with pytest.raises(ValueError):
+        idx.scan_groups(lo, hi, 4, top_k=0)
+    with pytest.raises(ValueError):
+        idx.scan_multi(np.zeros((2, 3), np.int32))
+    with pytest.raises(ValueError):
+        idx.scan_multi(np.zeros((1, 2, 2), np.int32), op="xor")
+    rank_only = build_index(keys, None, IndexConfig(kind="tiered"))
+    with pytest.raises(ValueError):
+        rank_only.scan_groups(lo, hi, 4, top_k=2)
